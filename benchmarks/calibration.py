@@ -1,0 +1,25 @@
+"""Calibration report: every headline paper claim vs the calibrated model.
+
+This is the fitting target set used to set Calibration/RcclCalibration
+defaults (fit once by random search over phase constants; the resulting
+constants are checked in, this module verifies them)."""
+from __future__ import annotations
+
+from repro.core.dma.claims import evaluate_claims
+from .common import ClaimChecker
+
+
+def run(verbose: bool = True):
+    cc = ClaimChecker("calibration")
+    for c in evaluate_claims():
+        cc.check(c.description, c.model_value, c.paper_value, c.lo, c.hi)
+    return cc, None
+
+
+def main():
+    cc, _ = run()
+    return 0 if cc.report() else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,56 @@
+"""Shared helpers for the per-figure benchmarks."""
+from __future__ import annotations
+
+import math
+import time
+
+KB = 1024
+MB = 1024 * 1024
+GB = 1024 * 1024 * 1024
+
+SMALL_SIZES = [2 ** i for i in range(10, 26)]   # 1KB..32MB
+LARGE_SIZES = [2 ** i for i in range(26, 33)]   # 64MB..4GB
+ALL_SIZES = SMALL_SIZES + LARGE_SIZES
+
+
+def geomean(xs):
+    xs = list(xs)
+    return math.exp(sum(math.log(x) for x in xs) / len(xs))
+
+
+def fmt_size(s: int) -> str:
+    if s >= GB:
+        return f"{s // GB}G"
+    if s >= MB:
+        return f"{s // MB}M"
+    return f"{s // KB}K"
+
+
+def time_us(fn, *args, reps: int = 200, warmup: int = 20) -> float:
+    """Wall-clock microseconds per call (for CSV reporting)."""
+    for _ in range(warmup):
+        fn(*args)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn(*args)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+class ClaimChecker:
+    def __init__(self, name: str):
+        self.name = name
+        self.rows: list[tuple[str, float, float, float, float, bool]] = []
+
+    def check(self, label: str, value: float, paper: float, lo: float, hi: float):
+        ok = lo <= value <= hi
+        self.rows.append((label, value, paper, lo, hi, ok))
+        return ok
+
+    def report(self) -> bool:
+        all_ok = True
+        for label, v, p, lo, hi, ok in self.rows:
+            mark = "OK  " if ok else "FAIL"
+            if not ok:
+                all_ok = False
+            print(f"  [{mark}] {label}: model={v:.3f} paper={p:.3f} band=[{lo},{hi}]")
+        return all_ok

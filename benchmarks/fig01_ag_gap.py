@@ -1,0 +1,42 @@
+"""Figure 1: the baseline DMA all-gather gap vs RCCL across the size
+spectrum (up to ~7x slower in latency-bound regions) and how DMA-Latte's
+feature dispatch closes it."""
+from __future__ import annotations
+
+from repro.core.dma import (allgather_schedule, mi300x_platform, paper_dispatch,
+                            rccl_ag_calibration, simulate)
+from repro.core.dma.rccl_model import rccl_collective_latency
+from .common import ALL_SIZES, SMALL_SIZES, ClaimChecker, fmt_size, geomean
+
+
+def run(verbose: bool = True):
+    topo = mi300x_platform()
+    rc = rccl_ag_calibration()
+    rows = []
+    for s in ALL_SIZES:
+        rccl = rccl_collective_latency(topo, s, rc)
+        pcpy = simulate(allgather_schedule(topo, s, "pcpy"), topo).latency
+        best_v = paper_dispatch("all_gather", s)
+        best = simulate(allgather_schedule(topo, s, best_v), topo).latency
+        rows.append((s, rccl, pcpy, best, best_v))
+    if verbose:
+        print("size  rccl_us  pcpy_us  latte_us  latte_variant  pcpy_slowdown")
+        for s, rccl, pcpy, best, v in rows:
+            print(f"{fmt_size(s):>5} {rccl*1e6:8.1f} {pcpy*1e6:8.1f} {best*1e6:9.1f} "
+                  f"{v:>15} {pcpy/rccl:6.2f}x")
+    cc = ClaimChecker("fig01")
+    max_gap = max(p / r for s, r, p, b, v in rows if s in SMALL_SIZES)
+    cc.check("max baseline gap (paper: up to 7x)", max_gap, 7.0, 5.0, 8.5)
+    gm = geomean(p / r for s, r, p, b, v in rows if s in SMALL_SIZES)
+    cc.check("pcpy geomean slowdown <32MB (paper 4.5x)", gm, 4.5, 3.4, 5.6)
+    return cc, rows
+
+
+def main():
+    cc, _ = run()
+    ok = cc.report()
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,38 @@
+"""Figure 7: latency breakdown of a single DMA copy (control / schedule /
+copy / sync) across sizes 4KB-2MB; non-copy phases up to ~60% at the
+smallest sizes, <20% only above 1MB."""
+from __future__ import annotations
+
+from repro.core.dma import mi300x_platform, single_copy_breakdown
+from .common import KB, MB, ClaimChecker
+
+
+def run(verbose: bool = True):
+    topo = mi300x_platform()
+    sizes = [4 * KB, 16 * KB, 64 * KB, 256 * KB, 1 * MB, 2 * MB]
+    rows = []
+    for s in sizes:
+        b = single_copy_breakdown(s, topo)
+        rows.append((s, b))
+    if verbose:
+        print("size     control  schedule  copy     sync     noncopy%")
+        for s, b in rows:
+            print(f"{s >> 10:5d}KB {b.control*1e6:8.2f} {b.schedule*1e6:9.2f} "
+                  f"{b.copy*1e6:8.2f} {b.sync*1e6:8.2f} {b.noncopy_fraction:8.1%}")
+    cc = ClaimChecker("fig07")
+    b4k = rows[0][1]
+    b2m = rows[-1][1]
+    cc.check("noncopy fraction @4KB (paper ~60%)", b4k.noncopy_fraction, 0.60, 0.45, 0.75)
+    cc.check("noncopy fraction @2MB (paper <20%)", b2m.noncopy_fraction, 0.15, 0.02, 0.20)
+    ordering = b4k.copy > b4k.schedule and b4k.copy > b4k.sync and b4k.sync > b4k.control
+    cc.check("phase ordering copy>schedule~sync>>control", float(ordering), 1.0, 1.0, 1.0)
+    return cc, rows
+
+
+def main():
+    cc, _ = run()
+    return 0 if cc.report() else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,68 @@
+"""Figure 13 + Table 2: all-gather speedup of every DMA variant vs RCCL
+across 1KB-4GB, and the per-range winning implementation."""
+from __future__ import annotations
+
+from repro.core.dma import (allgather_schedule, derive_dispatch, mi300x_platform,
+                            paper_dispatch, rccl_ag_calibration, simulate)
+from repro.core.dma.rccl_model import rccl_collective_latency
+from .common import ALL_SIZES, MB, SMALL_SIZES, ClaimChecker, fmt_size, geomean
+
+VARIANTS = ("pcpy", "bcst", "b2b", "prelaunch_pcpy", "prelaunch_bcst", "prelaunch_b2b")
+
+
+def run(verbose: bool = True):
+    topo = mi300x_platform()
+    rc = rccl_ag_calibration()
+    lat = {v: {} for v in VARIANTS}
+    rccl = {}
+    for s in ALL_SIZES:
+        rccl[s] = rccl_collective_latency(topo, s, rc)
+        for v in VARIANTS:
+            lat[v][s] = simulate(allgather_schedule(topo, s, v), topo).latency
+    if verbose:
+        print("size   " + "".join(f"{v:>16}" for v in VARIANTS) + "   (speedup vs RCCL)")
+        for s in ALL_SIZES:
+            print(f"{fmt_size(s):>5} " + "".join(f"{rccl[s]/lat[v][s]:16.2f}" for v in VARIANTS))
+
+    cc = ClaimChecker("fig13")
+    sub1m = [s for s in SMALL_SIZES if s < 1 * MB]
+    upto4m = [s for s in SMALL_SIZES if s <= 4 * MB]
+    cc.check("bcst over pcpy <=4MB (paper 1.7x)",
+             geomean(lat["pcpy"][s] / lat["bcst"][s] for s in upto4m), 1.7, 1.35, 2.05)
+    cc.check("b2b over pcpy <1MB (paper 2.7x)",
+             geomean(lat["pcpy"][s] / lat["b2b"][s] for s in sub1m), 2.7, 2.1, 3.3)
+    cc.check("b2b over bcst <1MB (paper 1.5x)",
+             geomean(lat["bcst"][s] / lat["b2b"][s] for s in sub1m), 1.5, 1.25, 1.85)
+    cc.check("prelaunch on pcpy (paper 1.9x)",
+             geomean(lat["pcpy"][s] / lat["prelaunch_pcpy"][s] for s in ALL_SIZES),
+             1.9, 1.55, 2.25)
+    cc.check("optimized geomean vs RCCL <32MB (paper 1.3x slower)",
+             geomean(min(lat[v][s] for v in VARIANTS) / rccl[s] for s in SMALL_SIZES),
+             1.3, 1.0, 1.55)
+    cc.check("pcpy speedup >32MB (paper 1.14x)",
+             geomean(rccl[s] / lat["prelaunch_pcpy"][s] for s in ALL_SIZES if s > 32 * MB),
+             1.2, 1.05, 1.45)
+
+    # Table 2: derived dispatch should match the paper's winners per range
+    table = derive_dispatch(topo, "all_gather", ALL_SIZES)
+    if verbose:
+        print("\nDerived dispatch (cf. paper Table 2):")
+        for e in table:
+            hi = fmt_size(e.hi) if e.hi else "inf"
+            print(f"  [{fmt_size(e.lo)}, {hi}) -> {e.variant}")
+    probe = {4096: "prelaunch_b2b", 512 * 1024: "prelaunch_bcst",
+             64 * MB: "prelaunch_pcpy"}
+    agree = sum(paper_dispatch("all_gather", s) ==
+                next(v for v in [e.variant for e in table if s >= e.lo and (e.hi is None or s < e.hi)])
+                for s in probe)
+    cc.check("derived dispatch matches Table 2 on probe sizes", agree, 3, 2, 3)
+    return cc, lat
+
+
+def main():
+    cc, _ = run()
+    return 0 if cc.report() else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

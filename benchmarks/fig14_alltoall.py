@@ -1,0 +1,59 @@
+"""Figure 14 + Table 3: all-to-all speedup of every DMA variant vs RCCL."""
+from __future__ import annotations
+
+from repro.core.dma import (alltoall_schedule, derive_dispatch, mi300x_platform,
+                            rccl_aa_calibration, simulate)
+from repro.core.dma.rccl_model import rccl_collective_latency
+from .common import ALL_SIZES, MB, SMALL_SIZES, ClaimChecker, fmt_size, geomean
+
+VARIANTS = ("pcpy", "swap", "b2b", "prelaunch_pcpy", "prelaunch_swap", "prelaunch_b2b")
+
+
+def run(verbose: bool = True):
+    topo = mi300x_platform()
+    rc = rccl_aa_calibration()
+    lat = {v: {} for v in VARIANTS}
+    rccl = {}
+    for s in ALL_SIZES:
+        rccl[s] = rccl_collective_latency(topo, s, rc)
+        for v in VARIANTS:
+            lat[v][s] = simulate(alltoall_schedule(topo, s, v), topo).latency
+    if verbose:
+        print("size   " + "".join(f"{v:>16}" for v in VARIANTS) + "   (speedup vs RCCL)")
+        for s in ALL_SIZES:
+            print(f"{fmt_size(s):>5} " + "".join(f"{rccl[s]/lat[v][s]:16.2f}" for v in VARIANTS))
+
+    cc = ClaimChecker("fig14")
+    sub1m = [s for s in SMALL_SIZES if s < 1 * MB]
+    upto4m = [s for s in SMALL_SIZES if s <= 4 * MB]
+    cc.check("pcpy geomean slowdown <32MB (paper 2.5x)",
+             geomean(lat["pcpy"][s] / rccl[s] for s in SMALL_SIZES), 2.5, 1.9, 3.3)
+    cc.check("swap over pcpy <=4MB (paper 1.7x)",
+             geomean(lat["pcpy"][s] / lat["swap"][s] for s in upto4m), 1.7, 1.35, 2.05)
+    cc.check("b2b over pcpy <1MB (paper 2.5x)",
+             geomean(lat["pcpy"][s] / lat["b2b"][s] for s in sub1m), 2.5, 2.0, 3.1)
+    cc.check("b2b over swap <1MB (paper 1.4x)",
+             geomean(lat["swap"][s] / lat["b2b"][s] for s in sub1m), 1.4, 1.15, 1.85)
+    cc.check("optimized vs RCCL <32MB (paper: 20% FASTER, i.e. 0.83x)",
+             geomean(min(lat[v][s] for v in VARIANTS) / rccl[s] for s in SMALL_SIZES),
+             0.83, 0.68, 0.98)
+    cc.check("pcpy speedup >32MB (paper 1.18x)",
+             geomean(rccl[s] / lat["prelaunch_pcpy"][s] for s in ALL_SIZES if s > 32 * MB),
+             1.2, 1.05, 1.45)
+
+    table = derive_dispatch(topo, "all_to_all", ALL_SIZES)
+    if verbose:
+        print("\nDerived dispatch (cf. paper Table 3):")
+        for e in table:
+            hi = fmt_size(e.hi) if e.hi else "inf"
+            print(f"  [{fmt_size(e.lo)}, {hi}) -> {e.variant}")
+    return cc, lat
+
+
+def main():
+    cc, _ = run()
+    return 0 if cc.report() else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,44 @@
+"""Figure 16: TTFT speedups for LLM inference with optimized (b2b) DMA KV
+fetch vs baseline per-block DMA, at 100% CPU cache hit, prompts 4096/8192."""
+from __future__ import annotations
+
+from repro.core.serving_model import PAPER_LLMS, ttft
+from .common import ClaimChecker
+
+
+def run(verbose: bool = True):
+    rows = []
+    for prompt in (4096, 8192):
+        for spec in PAPER_LLMS:
+            t_p = ttft(spec, prompt, "pcpy")
+            t_b = ttft(spec, prompt, "b2b")
+            t_k = ttft(spec, prompt, "kernel")
+            rows.append((prompt, spec, t_p, t_b, t_k))
+    if verbose:
+        print("prompt model                  ttft_gpu_speedup  ttft_total_speedup  kernel_vs_b2b")
+        for prompt, spec, t_p, t_b, t_k in rows:
+            print(f"{prompt:6d} {spec.name:22s} {t_p['gpu']/t_b['gpu']:16.2f} "
+                  f"{t_p['total']/t_b['total']:18.2f} {t_b['total']/t_k['total']:13.2f}")
+    cc = ClaimChecker("fig16")
+    gpu_max = max(r[2]["gpu"] / r[3]["gpu"] for r in rows)
+    tot_max = max(r[2]["total"] / r[3]["total"] for r in rows)
+    cc.check("max TTFT_GPU speedup (paper: up to 2.29x)", gpu_max, 2.29, 1.75, 2.6)
+    cc.check("max TTFT_total speedup (paper: up to 1.5x)", tot_max, 1.5, 1.3, 1.7)
+    # smaller models benefit more (paper §5.3.3)
+    small_gain = rows[0][2]["gpu"] / rows[0][3]["gpu"]
+    big_gain = rows[4][2]["gpu"] / rows[4][3]["gpu"]
+    cc.check("small-model gain exceeds big-model gain", float(small_gain > big_gain), 1, 1, 1)
+    # longer prompts benefit more
+    g4 = rows[0][2]["gpu"] / rows[0][3]["gpu"]
+    g8 = rows[5][2]["gpu"] / rows[5][3]["gpu"]
+    cc.check("longer prompt increases gain", float(g8 > g4), 1, 1, 1)
+    return cc, rows
+
+
+def main():
+    cc, _ = run()
+    return 0 if cc.report() else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

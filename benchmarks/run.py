@@ -1,0 +1,54 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints a ``name,us_per_call,derived`` CSV row per benchmark (us_per_call is
+the mean wall time of one model/simulator evaluation; ``derived`` is the
+benchmark's headline derived quantity), then the claim-check report.
+
+    PYTHONPATH=src python -m benchmarks.run
+"""
+from __future__ import annotations
+
+import time
+
+
+def main() -> None:
+    from . import (calibration, fig01_ag_gap, fig07_copy_breakdown, fig13_allgather,
+                   fig14_alltoall, fig15_power, fig16_ttft, fig17_throughput,
+                   tables_dispatch, tpu_collectives)
+
+    benches = [
+        ("calibration", calibration),
+        ("fig01_ag_gap", fig01_ag_gap),
+        ("fig07_copy_breakdown", fig07_copy_breakdown),
+        ("fig13_allgather", fig13_allgather),
+        ("fig14_alltoall", fig14_alltoall),
+        ("fig15_power", fig15_power),
+        ("fig16_ttft", fig16_ttft),
+        ("fig17_throughput", fig17_throughput),
+        ("tables_dispatch", tables_dispatch),
+        ("tpu_collectives", tpu_collectives),
+    ]
+
+    print("name,us_per_call,derived")
+    results = []
+    for name, mod in benches:
+        t0 = time.perf_counter()
+        cc, _ = mod.run(verbose=False)
+        us = (time.perf_counter() - t0) * 1e6
+        n_ok = sum(1 for r in cc.rows if r[5])
+        derived = f"{n_ok}/{len(cc.rows)}_claims_ok"
+        print(f"{name},{us:.1f},{derived}")
+        results.append((name, cc))
+
+    print("\n== claim checks ==")
+    all_ok = True
+    for name, cc in results:
+        print(f"[{name}]")
+        if not cc.report():
+            all_ok = False
+    print("\nALL BENCHMARK CLAIMS OK" if all_ok else "\nSOME CLAIMS OUT OF BAND")
+    raise SystemExit(0 if all_ok else 1)
+
+
+if __name__ == "__main__":
+    main()

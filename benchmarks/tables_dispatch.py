@@ -1,0 +1,57 @@
+"""Tables 2 & 3: the paper's size-range dispatch vs the dispatch re-derived
+from the calibrated timing model (MI300X) and re-derived for the TPU v5e
+topology (what the latte CommBackend actually uses)."""
+from __future__ import annotations
+
+from repro.core.backend import tpu_dispatch_tables
+from repro.core.dma import (PAPER_AA_DISPATCH, PAPER_AG_DISPATCH, derive_dispatch,
+                            mi300x_platform, paper_dispatch)
+from .common import ALL_SIZES, ClaimChecker, fmt_size
+
+
+def run(verbose: bool = True):
+    topo = mi300x_platform()
+    cc = ClaimChecker("tables")
+    for coll, paper_table in (("all_gather", PAPER_AG_DISPATCH),
+                              ("all_to_all", PAPER_AA_DISPATCH)):
+        derived = derive_dispatch(topo, coll, ALL_SIZES)
+        if verbose:
+            print(f"== {coll} ==")
+            print("  paper table:")
+            for lo, hi, v in paper_table:
+                print(f"    [{fmt_size(lo)}, {fmt_size(hi) if hi else 'inf'}) -> {v}")
+            print("  derived from model (MI300X):")
+            for e in derived:
+                print(f"    [{fmt_size(e.lo)}, {fmt_size(e.hi) if e.hi else 'inf'}) -> {e.variant}")
+        # agreement on a probe grid (base variant; prelaunch composes with all)
+        def strip(v: str) -> str:
+            return v.replace("prelaunch_", "")
+
+        agree = 0
+        probes = ALL_SIZES
+        for s in probes:
+            model_v = next(e.variant for e in derived
+                           if s >= e.lo and (e.hi is None or s < e.hi))
+            if strip(model_v) == strip(paper_dispatch(coll, s)):
+                agree += 1
+        frac = agree / len(probes)
+        cc.check(f"{coll}: derived dispatch agrees with paper table", frac, 1.0, 0.6, 1.0)
+    ag, aa = tpu_dispatch_tables(16)
+    if verbose:
+        print("== TPU v5e re-derived thresholds (used by CommBackend('latte')) ==")
+        for name, t in (("all_gather", ag), ("all_to_all", aa)):
+            for e in t:
+                print(f"  {name}: [{fmt_size(e.lo)}, {fmt_size(e.hi) if e.hi else 'inf'}) "
+                      f"-> {e.variant}")
+    cc.check("TPU tables keep b2b for the smallest sizes",
+             float(ag[0].variant.endswith("b2b") and aa[0].variant.endswith("b2b")), 1, 1, 1)
+    return cc, None
+
+
+def main():
+    cc, _ = run()
+    return 0 if cc.report() else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,50 @@
+"""Train a small LM end-to-end on CPU: a few hundred steps on the synthetic
+pipeline, loss must drop, checkpoint round-trips.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+import argparse
+import os
+import tempfile
+
+import jax
+
+from repro.configs import get_config
+from repro.data.pipeline import DataConfig, data_iterator
+from repro.models import build_model
+from repro.train.checkpoint import restore_checkpoint, save_checkpoint
+from repro.train.loop import train_loop
+from repro.train.optimizer import AdamWConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    model = build_model(cfg)
+    dc = DataConfig(vocab=cfg.vocab, seq_len=128, batch=8, seed=0)
+    opt = AdamWConfig(lr=1e-3, warmup_steps=20, total_steps=args.steps)
+
+    def log(i, m):
+        print(f"step {m['step']:4d} loss {m['loss']:.4f} lr {m['lr']:.2e}")
+
+    state, hist = train_loop(model, data_iterator(dc), steps=args.steps,
+                             opt_cfg=opt, callback=log, log_every=25)
+    assert hist[-1]["loss"] < hist[0]["loss"] - 0.5, "insufficient learning"
+    print(f"loss: {hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f}")
+
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "ckpt.npz")
+        save_checkpoint(path, state, step=args.steps)
+        restored = restore_checkpoint(path, state)
+        leaves_a = jax.tree.leaves(state)
+        leaves_b = jax.tree.leaves(restored)
+        assert all((a == b).all() for a, b in zip(leaves_a, leaves_b))
+        print("checkpoint round-trip OK")
+
+
+if __name__ == "__main__":
+    main()

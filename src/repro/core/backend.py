@@ -1,0 +1,85 @@
+"""CommBackend: the paper's size-dispatched collective policy as a
+first-class framework feature.
+
+``CommBackend('latte')`` picks the implementation per message size using
+thresholds re-derived from the DMA timing model on the TPU topology
+(DESIGN.md §5); ``CommBackend('reference')`` always uses the XLA one-shot
+collectives.  The serving engine's KV-fetch path consumes ``kv_fetch_plan``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+from . import collectives as coll
+from .dma.dispatch import DispatchEntry, derive_dispatch
+from .dma.topology import Topology, tpu_v5e_pod
+
+KB = 1024
+MB = 1024 * 1024
+
+# Variant names (paper) -> JAX implementations here.
+_AG_IMPL = {
+    "pcpy": coll.reference_all_gather,
+    "b2b": coll.ring_all_gather,
+    "bcst": coll.bidir_ring_all_gather,
+}
+_AA_IMPL = {
+    "pcpy": coll.reference_all_to_all,
+    "b2b": coll.pairwise_all_to_all,
+    "swap": coll.pairwise_all_to_all,
+}
+
+
+@functools.lru_cache(maxsize=8)
+def tpu_dispatch_tables(n_devices: int = 16):
+    """Re-derive Tables 2/3 for the TPU topology from the timing model."""
+    topo = tpu_v5e_pod(n_devices)
+    sizes = [2 ** i for i in range(10, 31)]
+    ag = derive_dispatch(topo, "all_gather", sizes)
+    aa = derive_dispatch(topo, "all_to_all", sizes)
+    return tuple(ag), tuple(aa)
+
+
+def _pick(entries, size: int) -> str:
+    for e in entries:
+        if size >= e.lo and (e.hi is None or size < e.hi):
+            return e.variant
+    return entries[-1].variant
+
+
+@dataclasses.dataclass(frozen=True)
+class CommBackend:
+    kind: str = "latte"            # latte | reference
+    axis_devices: int = 16
+    b2b_fanout_threshold: int = 4 * MB   # paper §5.3.1 empirical threshold
+
+    def _strip(self, v: str) -> str:
+        return v[len("prelaunch_"):] if v.startswith("prelaunch_") else v
+
+    def all_gather(self, x, axis_name: str):
+        """Called inside shard_map.  Returns stacked [n, *x.shape]."""
+        if self.kind == "reference":
+            return coll.reference_all_gather(x, axis_name)
+        size = x.size * x.dtype.itemsize * self.axis_devices
+        ag, _ = tpu_dispatch_tables(self.axis_devices)
+        variant = self._strip(_pick(ag, size))
+        return _AG_IMPL.get(variant, coll.reference_all_gather)(x, axis_name)
+
+    def all_to_all(self, x, axis_name: str):
+        """Called inside shard_map with x: [n, ...] chunks."""
+        if self.kind == "reference":
+            return coll.reference_all_to_all(x, axis_name)
+        size = x.size * x.dtype.itemsize
+        _, aa = tpu_dispatch_tables(self.axis_devices)
+        variant = self._strip(_pick(aa, size))
+        return _AA_IMPL.get(variant, coll.reference_all_to_all)(x, axis_name)
+
+    def kv_fetch_plan(self, n_blocks: int, block_bytes: int) -> dict:
+        """How the serving engine should fetch dispersed KV blocks (§5.3)."""
+        total = n_blocks * block_bytes
+        if self.kind == "reference":
+            return {"mode": "pcpy", "fanout": min(n_blocks, 16)}
+        if total < self.b2b_fanout_threshold:
+            return {"mode": "b2b", "fanout": 1}
+        return {"mode": "b2b", "fanout": 4}

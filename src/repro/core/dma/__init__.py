@@ -1,0 +1,37 @@
+"""DMA-Latte core: command set, engine timing model, collective schedules,
+dispatch policy, RCCL baseline and power models (the paper's contribution)."""
+from . import commands
+from .commands import CmdKind, Command, EngineQueue, Schedule
+from .collectives import allgather_schedule, alltoall_schedule, kv_fetch_schedule
+from .dispatch import (
+    PAPER_AA_DISPATCH,
+    PAPER_AG_DISPATCH,
+    derive_dispatch,
+    paper_dispatch,
+    pick_variant,
+)
+from .engine import PhaseBreakdown, SimResult, simulate, single_copy_breakdown
+from .power import cu_collective_power, dma_collective_power
+from .rccl_model import kernel_copy_latency, rccl_collective_latency
+from .topology import (
+    Calibration,
+    PowerCalibration,
+    RcclCalibration,
+    Topology,
+    mi300x_platform,
+    rccl_aa_calibration,
+    rccl_ag_calibration,
+    tpu_v5e_pod,
+)
+
+__all__ = [
+    "commands", "CmdKind", "Command", "EngineQueue", "Schedule",
+    "allgather_schedule", "alltoall_schedule", "kv_fetch_schedule",
+    "PAPER_AA_DISPATCH", "PAPER_AG_DISPATCH", "derive_dispatch",
+    "paper_dispatch", "pick_variant",
+    "PhaseBreakdown", "SimResult", "simulate", "single_copy_breakdown",
+    "cu_collective_power", "dma_collective_power",
+    "kernel_copy_latency", "rccl_collective_latency",
+    "Calibration", "PowerCalibration", "RcclCalibration", "Topology",
+    "mi300x_platform", "tpu_v5e_pod", "rccl_ag_calibration", "rccl_aa_calibration",
+]

@@ -1,0 +1,131 @@
+"""Paper-claim validation: derive every headline number of the paper from the
+calibrated model.  Used by tests (assert bands) and benchmarks (report).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from . import collectives as C
+from .dispatch import paper_dispatch
+from .engine import simulate, single_copy_breakdown
+from .power import cu_collective_power, dma_collective_power
+from .rccl_model import rccl_collective_latency
+from .topology import (
+    Topology,
+    mi300x_platform,
+    rccl_aa_calibration,
+    rccl_ag_calibration,
+)
+
+KB = 1024
+MB = 1024 * 1024
+
+SMALL_SIZES = [2 ** i for i in range(10, 26)]    # 1KB .. 32MB
+LARGE_SIZES = [2 ** i for i in range(26, 33)]    # 64MB .. 4GB
+ALL_SIZES = SMALL_SIZES + LARGE_SIZES
+
+
+def geomean(xs) -> float:
+    xs = list(xs)
+    return math.exp(sum(math.log(x) for x in xs) / len(xs))
+
+
+def dma_latency(topo: Topology, collective: str, size: int, variant: str) -> float:
+    builder = C.allgather_schedule if collective == "all_gather" else C.alltoall_schedule
+    return simulate(builder(topo, size, variant), topo).latency
+
+
+def rccl_latency(topo: Topology, collective: str, size: int) -> float:
+    calib = rccl_ag_calibration() if collective == "all_gather" else rccl_aa_calibration()
+    return rccl_collective_latency(topo, size, calib)
+
+
+def best_variant_latency(topo: Topology, collective: str, size: int) -> tuple[str, float]:
+    v = paper_dispatch(collective, size)
+    return v, dma_latency(topo, collective, size, v)
+
+
+@dataclasses.dataclass(frozen=True)
+class Claim:
+    name: str
+    paper_value: float
+    model_value: float
+    lo: float
+    hi: float
+    description: str
+
+    @property
+    def ok(self) -> bool:
+        return self.lo <= self.model_value <= self.hi
+
+
+def evaluate_claims(topo: Topology | None = None) -> list[Claim]:
+    topo = topo or mi300x_platform()
+    sub1m = [s for s in SMALL_SIZES if s < 1 * MB]
+    upto4m = [s for s in SMALL_SIZES if s <= 4 * MB]
+
+    def g_ratio(coll, sizes, num_v, den_v):
+        return geomean(
+            dma_latency(topo, coll, s, num_v) / dma_latency(topo, coll, s, den_v)
+            for s in sizes
+        )
+
+    ag_pcpy = geomean(dma_latency(topo, "all_gather", s, "pcpy") / rccl_latency(topo, "all_gather", s) for s in SMALL_SIZES)
+    aa_pcpy = geomean(dma_latency(topo, "all_to_all", s, "pcpy") / rccl_latency(topo, "all_to_all", s) for s in SMALL_SIZES)
+    ag_best = geomean(best_variant_latency(topo, "all_gather", s)[1] / rccl_latency(topo, "all_gather", s) for s in SMALL_SIZES)
+    aa_best = geomean(best_variant_latency(topo, "all_to_all", s)[1] / rccl_latency(topo, "all_to_all", s) for s in SMALL_SIZES)
+    ag_large = geomean(rccl_latency(topo, "all_gather", s) / dma_latency(topo, "all_gather", s, "pcpy") for s in LARGE_SIZES)
+    aa_large = geomean(rccl_latency(topo, "all_to_all", s) / dma_latency(topo, "all_to_all", s, "pcpy") for s in LARGE_SIZES)
+    fig1_max = max(dma_latency(topo, "all_gather", s, "pcpy") / rccl_latency(topo, "all_gather", s) for s in SMALL_SIZES)
+
+    b4k = single_copy_breakdown(4 * KB, topo)
+    b2m = single_copy_breakdown(2 * MB, topo)
+
+    # Power: best DMA vs RCCL at a bandwidth-bound size (paper: ~32% less at >=64MB).
+    s_bw = 256 * MB
+    v, lat_dma = best_variant_latency(topo, "all_gather", s_bw)
+    sim = simulate(C.allgather_schedule(topo, s_bw, v), topo)
+    p_dma = dma_collective_power(topo, s_bw, sim).total
+    p_cu = cu_collective_power(topo, s_bw, rccl_latency(topo, "all_gather", s_bw)).total
+    power_saving_bw = 1 - p_dma / p_cu
+
+    claims = [
+        Claim("ag_pcpy_gap_small", 4.5, ag_pcpy, 3.4, 5.6,
+              "AG pcpy geomean slowdown vs RCCL, sizes <32MB (paper ~4.5x)"),
+        Claim("aa_pcpy_gap_small", 2.5, aa_pcpy, 1.9, 3.3,
+              "AA pcpy geomean slowdown vs RCCL, sizes <32MB (paper ~2.5x)"),
+        Claim("ag_optimized_small", 1.30, ag_best, 1.1, 1.55,
+              "AG best-variant geomean vs RCCL <32MB (paper: 30% slower)"),
+        Claim("aa_optimized_small", 0.83, aa_best, 0.70, 0.95,
+              "AA best-variant geomean vs RCCL <32MB (paper: 20% faster)"),
+        Claim("ag_pcpy_speedup_large", 1.14, ag_large, 1.05, 1.30,
+              "AG pcpy geomean speedup vs RCCL >32MB (paper 14%)"),
+        Claim("aa_pcpy_speedup_large", 1.18, aa_large, 1.05, 1.30,
+              "AA pcpy geomean speedup vs RCCL >32MB (paper 18%)"),
+        Claim("fig1_max_gap", 7.0, fig1_max, 5.0, 8.5,
+              "Max AG pcpy slowdown across latency-bound sizes (paper: up to 7x)"),
+        Claim("bcst_vs_pcpy", 1.7, g_ratio("all_gather", upto4m, "pcpy", "bcst"), 1.35, 2.05,
+              "bcst speedup over pcpy, AG <=4MB (paper 1.7x geomean)"),
+        Claim("swap_vs_pcpy", 1.7, g_ratio("all_to_all", upto4m, "pcpy", "swap"), 1.35, 2.05,
+              "swap speedup over pcpy, AA <=4MB (paper 1.7x geomean)"),
+        Claim("b2b_vs_pcpy_ag", 2.7, g_ratio("all_gather", sub1m, "pcpy", "b2b"), 2.1, 3.3,
+              "b2b speedup over pcpy, AG <1MB (paper 2.7x geomean)"),
+        Claim("b2b_vs_pcpy_aa", 2.5, g_ratio("all_to_all", sub1m, "pcpy", "b2b"), 2.0, 3.1,
+              "b2b speedup over pcpy, AA <1MB (paper 2.5x geomean)"),
+        Claim("b2b_vs_bcst", 1.5, g_ratio("all_gather", sub1m, "bcst", "b2b"), 1.25, 1.85,
+              "b2b speedup over bcst, AG <1MB (paper 1.5x geomean)"),
+        Claim("prelaunch_pcpy", 1.9, g_ratio("all_gather", ALL_SIZES, "pcpy", "prelaunch_pcpy"), 1.55, 2.25,
+              "prelaunch speedup on pcpy across sizes (paper 1.9x)"),
+        Claim("prelaunch_bcst", 1.5, g_ratio("all_gather", ALL_SIZES, "bcst", "prelaunch_bcst"), 1.25, 1.8,
+              "prelaunch speedup on bcst across sizes (paper 1.5x)"),
+        Claim("prelaunch_b2b", 1.2, g_ratio("all_gather", ALL_SIZES, "b2b", "prelaunch_b2b"), 1.08, 1.45,
+              "prelaunch speedup on b2b across sizes (paper 1.2x)"),
+        Claim("noncopy_fraction_4kb", 0.60, b4k.noncopy_fraction, 0.45, 0.75,
+              "Non-copy phases of a 4KB DMA copy (paper: up to ~60%)"),
+        Claim("noncopy_fraction_2mb", 0.15, b2m.noncopy_fraction, 0.03, 0.20,
+              "Non-copy phases of a >1MB copy (paper: <20%)"),
+        Claim("power_saving_bw_bound", 0.32, power_saving_bw, 0.20, 0.45,
+              "DMA AG power saving vs RCCL at >=64MB (paper ~32%)"),
+    ]
+    return claims

@@ -1,0 +1,146 @@
+"""DMA command set modeled after AMD Instinct MI300X sDMA engines (paper §2.2, §4).
+
+A DMA *queue* is an ordered list of commands executed by one engine. The host
+(CPU) creates commands (control phase), rings the engine's doorbell (schedule
+phase), the engine executes copies (copy phase) and raises completion signals
+(sync phase). The novel commands — ``bcst`` (one source, two destinations),
+``swap`` (in-place exchange) and ``poll`` (pre-launch trigger) — are the
+hitherto-untapped features the paper exploits (Table 1).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Sequence
+
+
+class CmdKind(enum.Enum):
+    COPY = "copy"          # one src -> one dst
+    BCST = "bcst"          # one src -> two dsts (single source read)
+    SWAP = "swap"          # exchange contents of two buffers (in-place)
+    POLL = "poll"          # wait until *location* satisfies a condition (prelaunch)
+    SIGNAL = "signal"      # atomic inc/dec of a 64b completion signal
+
+
+@dataclasses.dataclass(frozen=True)
+class Command:
+    """A single DMA engine command.
+
+    ``src``/``dsts`` are device ids (or "host").  ``size`` is bytes moved per
+    destination.  A ``swap`` moves ``size`` bytes in each direction between
+    ``src`` and ``dsts[0]``.  ``poll``/``signal`` carry no payload.
+    """
+
+    kind: CmdKind
+    src: int | str | None = None
+    dsts: tuple[int | str, ...] = ()
+    size: int = 0
+
+    def __post_init__(self) -> None:
+        if self.kind is CmdKind.COPY and len(self.dsts) != 1:
+            raise ValueError("copy needs exactly one destination")
+        if self.kind is CmdKind.BCST and len(self.dsts) != 2:
+            raise ValueError("bcst needs exactly two destinations")
+        if self.kind is CmdKind.SWAP and len(self.dsts) != 1:
+            raise ValueError("swap needs exactly one partner")
+        if self.size < 0:
+            raise ValueError("negative size")
+
+    # ---- traffic accounting (used by the engine model & power model) ----
+    @property
+    def n_copies(self) -> int:
+        """Equivalent number of vanilla copy operations this command expresses."""
+        if self.kind is CmdKind.COPY:
+            return 1
+        if self.kind is CmdKind.BCST:
+            return 2
+        if self.kind is CmdKind.SWAP:
+            return 2          # one copy each direction
+        return 0
+
+    @property
+    def local_read_bytes(self) -> int:
+        """Bytes read from the issuing device's HBM.
+
+        ``bcst`` reads the source ONCE for both destinations (paper §4.2) —
+        this is where its memory-traffic/power saving comes from.  ``swap``
+        reads locally and writes locally (in place), plus symmetric remote
+        traffic.
+        """
+        if self.kind in (CmdKind.COPY, CmdKind.BCST, CmdKind.SWAP):
+            return self.size
+        return 0
+
+    @property
+    def remote_write_bytes(self) -> int:
+        if self.kind is CmdKind.COPY:
+            return self.size
+        if self.kind is CmdKind.BCST:
+            return 2 * self.size
+        if self.kind is CmdKind.SWAP:
+            return self.size  # each direction carries `size`; per-link duplex
+        return 0
+
+
+def copy(src, dst, size) -> Command:
+    return Command(CmdKind.COPY, src, (dst,), size)
+
+
+def bcst(src, dst_a, dst_b, size) -> Command:
+    return Command(CmdKind.BCST, src, (dst_a, dst_b), size)
+
+
+def swap(a, b, size) -> Command:
+    return Command(CmdKind.SWAP, a, (b,), size)
+
+
+def poll() -> Command:
+    return Command(CmdKind.POLL)
+
+
+def signal() -> Command:
+    return Command(CmdKind.SIGNAL)
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineQueue:
+    """Ordered commands bound to one DMA engine of one device."""
+
+    device: int
+    engine: int
+    commands: tuple[Command, ...]
+    prelaunched: bool = False   # queue was enqueued ahead of time, gated by a poll
+
+    def __post_init__(self) -> None:
+        if self.prelaunched and (not self.commands or self.commands[0].kind is not CmdKind.POLL):
+            raise ValueError("a prelaunched queue must start with a poll command")
+
+    @property
+    def data_commands(self) -> tuple[Command, ...]:
+        return tuple(c for c in self.commands if c.kind in (CmdKind.COPY, CmdKind.BCST, CmdKind.SWAP))
+
+    @property
+    def n_signals(self) -> int:
+        return sum(1 for c in self.commands if c.kind is CmdKind.SIGNAL)
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    """A full offload schedule: every engine queue across all devices."""
+
+    name: str
+    queues: tuple[EngineQueue, ...]
+
+    def queues_for(self, device: int) -> list[EngineQueue]:
+        return [q for q in self.queues if q.device == device]
+
+    @property
+    def devices(self) -> list[int]:
+        return sorted({q.device for q in self.queues})
+
+    def total_commands(self, device: int | None = None) -> int:
+        qs = self.queues if device is None else self.queues_for(device)
+        return sum(len(q.commands) for q in qs)
+
+    def engines_used(self, device: int) -> int:
+        return len({q.engine for q in self.queues_for(device)})

@@ -1,0 +1,93 @@
+"""Size-range dispatch policy — the paper's Tables 2 & 3, plus a derived
+policy that re-discovers the thresholds from the timing model (used both to
+validate the model against the paper and to re-derive thresholds for the TPU
+topology used by the JAX-level latte collectives).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+from .collectives import allgather_schedule, alltoall_schedule
+from .engine import simulate
+from .topology import Topology
+
+KB = 1024
+MB = 1024 * 1024
+GB = 1024 * 1024 * 1024
+
+# Paper Table 2 — best implementation per all-gather size range.
+PAPER_AG_DISPATCH: tuple[tuple[int, int | None, str], ...] = (
+    (1 * KB, 256 * KB, "prelaunch_b2b"),
+    (256 * KB, 1 * MB, "prelaunch_bcst"),
+    (1 * MB, 512 * MB, "prelaunch_pcpy"),
+    (512 * MB, None, "pcpy"),
+)
+
+# Paper Table 3 — best implementation per all-to-all size range.
+PAPER_AA_DISPATCH: tuple[tuple[int, int | None, str], ...] = (
+    (1 * KB, 64 * KB, "prelaunch_b2b"),
+    (64 * KB, 4 * MB, "prelaunch_swap"),
+    (4 * MB, 1 * GB, "prelaunch_pcpy"),
+    (1 * GB, None, "pcpy"),
+)
+
+
+def paper_dispatch(collective: str, size: int) -> str:
+    table = PAPER_AG_DISPATCH if collective == "all_gather" else PAPER_AA_DISPATCH
+    for lo, hi, variant in table:
+        if size >= lo and (hi is None or size < hi):
+            return variant
+    return table[0][2] if size < table[0][0] else table[-1][2]
+
+
+@dataclasses.dataclass(frozen=True)
+class DispatchEntry:
+    lo: int
+    hi: int | None
+    variant: str
+
+
+def derive_dispatch(
+    topo: Topology,
+    collective: str,
+    sizes: list[int],
+    *,
+    allow_prelaunch: bool = True,
+) -> list[DispatchEntry]:
+    """Re-derive the best variant per size from the timing model (argmin).
+
+    Adjacent sizes with the same winner are merged into ranges, which should
+    approximately reproduce Tables 2/3 on the MI300X topology (validated in
+    tests/benchmarks) and gives the policy for the TPU topology.
+    """
+    builder: Callable = allgather_schedule if collective == "all_gather" else alltoall_schedule
+    variants = ["pcpy", "b2b", "bcst" if collective == "all_gather" else "swap"]
+    if allow_prelaunch:
+        variants += [f"prelaunch_{v}" for v in list(variants)]
+
+    winners: list[tuple[int, str]] = []
+    for size in sizes:
+        best, best_t = None, float("inf")
+        for v in variants:
+            t = simulate(builder(topo, size, v), topo).latency
+            if t < best_t:
+                best, best_t = v, t
+        winners.append((size, best))
+
+    entries: list[DispatchEntry] = []
+    for i, (size, v) in enumerate(winners):
+        if entries and entries[-1].variant == v:
+            entries[-1] = DispatchEntry(entries[-1].lo, None, v)
+        else:
+            if entries:
+                entries[-1] = DispatchEntry(entries[-1].lo, size, entries[-1].variant)
+            entries.append(DispatchEntry(size, None, v))
+    return entries
+
+
+def pick_variant(entries: list[DispatchEntry], size: int) -> str:
+    for e in entries:
+        if size >= e.lo and (e.hi is None or size < e.hi):
+            return e.variant
+    return entries[-1].variant if size >= entries[-1].lo else entries[0].variant

@@ -1,0 +1,77 @@
+"""GPU power model for collectives (paper §5.2.9, Fig. 15).
+
+Total GPU power = idle + XCD (compute dies) + IOD (cache/links/DMA) + HBM.
+
+* CU (RCCL) collectives keep CUs spinning on packet loops -> high XCD power,
+  scaled down at latency-bound sizes where CUs are mostly waiting.
+* DMA collectives leave CUs idle (paper: ~3.7x less XCD power) and draw IOD
+  power per engaged engine, so fewer engines (b2b) -> lower power, and bcst's
+  single source read lowers HBM traffic -> additional HBM power savings.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from .engine import SimResult
+from .topology import PowerCalibration, Topology
+
+
+@dataclasses.dataclass(frozen=True)
+class PowerReport:
+    xcd: float
+    iod: float
+    hbm: float
+    idle: float
+
+    @property
+    def total(self) -> float:
+        return self.xcd + self.iod + self.hbm + self.idle
+
+
+def _utilization(size: int, knee: float = 8e6) -> float:
+    """How busy the mover is vs waiting on launch/sync (ramps with size)."""
+    return size / (size + knee)
+
+
+def dma_collective_power(
+    topo: Topology,
+    size: int,
+    sim: SimResult,
+    calib: PowerCalibration | None = None,
+) -> PowerReport:
+    c = calib or PowerCalibration()
+    dev = max(sim.per_device, key=lambda d: sim.per_device[d].total)
+    engines = sim.engines_used[dev]
+    lat = max(sim.latency, 1e-9)
+    # HBM traffic: local reads (tracked) + symmetric incoming writes.
+    gbps = 2 * sim.hbm_bytes[dev] / lat / 1e9
+    u = _utilization(size)
+    return PowerReport(
+        xcd=c.xcd_dma_collective * (0.5 + 0.5 * u),
+        iod=c.iod_per_engine * engines,
+        hbm=c.hbm_static + c.hbm_per_gbps * gbps,
+        idle=c.idle,
+    )
+
+
+def cu_collective_power(
+    topo: Topology,
+    size: int,
+    latency: float,
+    calib: PowerCalibration | None = None,
+) -> PowerReport:
+    c = calib or PowerCalibration()
+    n = topo.n_devices
+    shard = size / n
+    # CU protocols stage through LDS/cache with packet flags: >1x the pure
+    # payload HBM traffic of the DMA path.
+    payload = 2 * shard * (n - 1)
+    gbps = c.cu_traffic_multiplier * payload / max(latency, 1e-9) / 1e9
+    u = _utilization(size)
+    xcd = c.xcd_cu_collective * (c.xcd_latency_scale + (1 - c.xcd_latency_scale) * u)
+    return PowerReport(
+        xcd=xcd,
+        iod=c.iod_cu * (0.6 + 0.4 * u),
+        hbm=c.hbm_static + c.hbm_per_gbps * gbps,
+        idle=c.idle,
+    )

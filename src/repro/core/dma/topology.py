@@ -1,0 +1,183 @@
+"""Platform topology + calibration constants for the DMA engine model.
+
+Two topologies are modeled:
+
+* ``mi300x_platform()`` — the paper's system (§2.2, Fig. 4): 8 AMD Instinct
+  MI300X GPUs, fully connected with xGMI links of 64 GB/s per direction
+  (128 GB/s bidirectional), 16 sDMA engines per GPU, PCIe Gen5 host links
+  (64 GB/s per direction).
+
+* ``tpu_v5e_pod()`` — the lowering target of the rest of this repo: a 2D ICI
+  torus with ~50 GB/s links, used to re-derive the size-dispatch thresholds
+  for the TPU-native collectives (DESIGN.md §4).
+
+Phase constants live in :class:`Calibration` and are fit once (see
+``benchmarks/calibration.py`` and EXPERIMENTS.md) so that the model reproduces
+the paper's measured figures.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class Calibration:
+    """Per-phase latency constants (seconds) of a single DMA offload (Fig. 6/7).
+
+    control  : CPU command-packet creation, per command.
+    doorbell : CPU MMIO doorbell write, per engine (serialized on the CPU).
+    fetch    : engine wake + command fetch from the system-memory queue.
+    copy_setup: per data-command decode + address translation on the engine.
+    b2b_issue: incremental issue cost of an overlapped back-to-back copy
+               (subsequent loads issued before prior stores complete, §4.4).
+    sync_engine: engine-side atomic signal update.
+    sync_obs : CPU-side completion observation, per signal (serialized).
+    poll_trigger: latency from the triggering memory write until a polling
+               engine observes it (prelaunch, §4.5).
+    """
+
+    # Values fit by benchmarks/calibration.py so the model lands on the
+    # paper's measured claims (see EXPERIMENTS.md §Calibration).
+    control: float = 0.5987e-6
+    doorbell: float = 2.436e-6
+    fetch: float = 0.5014e-6
+    copy_setup: float = 3.146e-6
+    b2b_issue: float = 0.2919e-6
+    sync_engine: float = 0.9165e-6
+    sync_obs: float = 1.596e-6
+    poll_trigger: float = 0.5838e-6
+    # Effective per-engine streaming bandwidth (one engine saturates roughly
+    # one xGMI link; pcpy engages one engine per link).
+    engine_bw: float = 64e9
+    # DMA transfers carry less metadata than CU-based protocols -> higher
+    # achievable link efficiency (paper §5.2.4: pcpy beats RCCL by 14-18%
+    # at bandwidth-bound sizes).
+    dma_link_efficiency: float = 0.9616
+
+
+@dataclasses.dataclass(frozen=True)
+class RcclCalibration:
+    """CU-driven collective (RCCL) latency model, tuned per paper's baseline.
+
+    latency = base_launch + size-dependent protocol overhead + wire time at
+    an efficiency that ramps with message size (LL -> LL128 -> Simple).
+    """
+
+    base_launch: float = 4.506e-6      # kernel launch + graph-amortized setup
+    wire_efficiency_max: float = 0.7851  # CU protocol metadata caps efficiency
+    # Efficiency half-point: eff(size) = max_eff * size/(size + half_size),
+    # per destination-shard size.
+    half_size: float = 1.038e5
+    min_latency: float = 4.771e-6      # floor for tiny collectives
+
+
+# All-to-all is harder for CU-based libraries (no ring reuse; per-peer
+# staging): the paper's RCCL AA baseline sits ~2.1x above its AG baseline at
+# latency-bound sizes, which is why pcpy's AA gap (2.5x) is smaller than its
+# AG gap (4.5x).
+RCCL_AA_SCALE = 2.103
+
+
+def rccl_ag_calibration() -> "RcclCalibration":
+    return RcclCalibration()
+
+
+def rccl_aa_calibration() -> "RcclCalibration":
+    b = RcclCalibration()
+    return RcclCalibration(
+        base_launch=b.base_launch * RCCL_AA_SCALE,
+        wire_efficiency_max=b.wire_efficiency_max,
+        half_size=b.half_size,
+        min_latency=b.min_latency * RCCL_AA_SCALE,
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class PowerCalibration:
+    """Component power (Watts) for the Fig. 15 reproduction.
+
+    MI300X OAM is a ~750W part.  We model GPU power as
+    idle + XCD (compute dies) + IOD (infinity cache/links/DMA) + HBM, with
+    activity factors depending on who executes the collective.
+    """
+
+    idle: float = 140.0
+    xcd_cu_collective: float = 300.0   # CUs spinning on copies (BW-bound)
+    xcd_dma_collective: float = 80.0   # paper: ~3.7x less XCD power
+    xcd_latency_scale: float = 0.35    # CU stress lower at latency-bound sizes
+    iod_per_engine: float = 2.5        # per active DMA engine
+    iod_cu: float = 55.0
+    hbm_per_gbps: float = 0.12         # HBM power tracks streamed traffic
+    hbm_static: float = 60.0
+    cu_traffic_multiplier: float = 1.6  # CU protocol staging vs pure payload
+
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    name: str
+    n_devices: int
+    link_bw: float                     # bytes/s, per direction, per link
+    links_per_device: int              # simultaneously usable peer links
+    n_engines: int                     # DMA engines per device
+    host_link_bw: float                # bytes/s per direction (PCIe for MI300X)
+    fully_connected: bool
+    calib: Calibration = Calibration()
+
+    def peer_links(self, device: int) -> int:
+        return self.links_per_device
+
+    @property
+    def aggregate_bw(self) -> float:
+        """Total per-device injection bandwidth (bytes/s, one direction)."""
+        return self.link_bw * self.links_per_device
+
+
+def mi300x_platform(calib: Calibration | None = None) -> Topology:
+    return Topology(
+        name="mi300x-8",
+        n_devices=8,
+        link_bw=64e9,
+        links_per_device=7,
+        n_engines=16,
+        host_link_bw=64e9,
+        fully_connected=True,
+        calib=calib or Calibration(),
+    )
+
+
+def tpu_v5e_pod(n_devices: int = 256, calib: Calibration | None = None) -> Topology:
+    """TPU v5e slice: 2D torus, 4 ICI ports/chip, ~50 GB/s per link/direction.
+
+    Used for re-deriving latte dispatch thresholds on the TPU target.  Command
+    issue constants are re-interpreted as scalar-core DMA-descriptor issue
+    latencies inside a Pallas kernel (DESIGN.md §4); they are much smaller
+    than host-driven doorbells.
+    """
+    c = calib or Calibration(
+        control=0.05e-6,
+        doorbell=0.0,          # no host doorbell: descriptors issue on-chip
+        fetch=0.10e-6,
+        copy_setup=0.80e-6,    # DMA descriptor + route setup
+        b2b_issue=0.05e-6,
+        sync_engine=0.40e-6,   # semaphore signal
+        sync_obs=0.20e-6,      # semaphore wait observe
+        poll_trigger=0.20e-6,
+        engine_bw=50e9,
+        dma_link_efficiency=0.95,
+    )
+    return Topology(
+        name=f"tpu-v5e-{n_devices}",
+        n_devices=n_devices,
+        link_bw=50e9,
+        links_per_device=4,
+        n_engines=8,
+        host_link_bw=32e9,
+        fully_connected=False,
+        calib=c,
+    )
+
+
+# TPU v5e roofline constants (system prompt / public spec).
+TPU_V5E_PEAK_BF16_FLOPS = 197e12
+TPU_V5E_HBM_BW = 819e9
+TPU_V5E_ICI_BW_PER_LINK = 50e9

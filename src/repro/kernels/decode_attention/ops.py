@@ -1,0 +1,15 @@
+"""Jit'd wrapper for the paged flash-decode kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .decode_attention import paged_decode_attention
+
+
+@partial(jax.jit, static_argnames=("softcap", "interpret"))
+def decode_attention(q, k_pool, v_pool, block_tables, lengths, *,
+                     softcap=None, interpret: bool = False):
+    return paged_decode_attention(q, k_pool, v_pool, block_tables, lengths,
+                                  softcap=softcap, interpret=interpret)

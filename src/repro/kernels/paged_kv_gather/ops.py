@@ -1,0 +1,13 @@
+"""Jit'd wrapper for the paged KV gather kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .paged_kv_gather import paged_kv_gather
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def gather_blocks(pool, block_table, *, interpret: bool = False):
+    return paged_kv_gather(pool, block_table, interpret=interpret)

@@ -1,0 +1,46 @@
+"""Paged KV-cache gather kernel — the workload-level offload of §5.3.
+
+Fetches ``n_blocks`` dispersed KV blocks (PagedAttention layout, 16 tokens
+per block by default, as in vLLM) from a large pool into a contiguous
+buffer.  The block table is a scalar-prefetch operand, so the Pallas
+pipeline issues the per-block HBM DMAs back-to-back with double buffering —
+the kernel-level rendering of the paper's b2b batched copies (one logical
+launch + one completion, instead of one hipMemcpyAsync per block).
+
+BlockSpec tiling: one (block_tokens x d_kv) block per grid step in VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gather_kernel(tbl_ref, pool_ref, out_ref):
+    out_ref[...] = pool_ref[...]
+
+
+def paged_kv_gather(
+    pool: jax.Array,          # [n_pool_blocks, block_tokens, d_kv]
+    block_table: jax.Array,   # [n_blocks] int32 indices into pool
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    """Returns [n_blocks, block_tokens, d_kv] contiguous KV."""
+    n_blocks = block_table.shape[0]
+    _, bt, dkv = pool.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_blocks,),
+        in_specs=[pl.BlockSpec((1, bt, dkv), lambda i, tbl: (tbl[i], 0, 0))],
+        out_specs=pl.BlockSpec((1, bt, dkv), lambda i, tbl: (i, 0, 0)),
+    )
+    return pl.pallas_call(
+        _gather_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_blocks, bt, dkv), pool.dtype),
+        interpret=interpret,
+    )(block_table, pool)

@@ -1,0 +1,8 @@
+"""Pure-jnp oracle: gather = take along the pool axis."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def paged_kv_gather_ref(pool: jnp.ndarray, block_table: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(pool, block_table, axis=0)

@@ -1,0 +1,29 @@
+"""Jit'd wrapper: shard_map-wrapped ring all-gather usable on any mesh axis."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+from jax import shard_map
+from jax.sharding import PartitionSpec as P
+
+from .ring_all_gather import make_ring_all_gather
+
+
+def ring_all_gather(
+    x: jax.Array,
+    mesh,
+    axis_name: str,
+    *,
+    variant: str = "b2b",        # pcpy | b2b | bcst | bcst_b2b
+    interpret: bool = False,
+) -> jax.Array:
+    """All-gather a [N, F] array sharded on dim 0 over ``axis_name``."""
+    n = mesh.shape[axis_name]
+    defer = variant in ("b2b", "bcst_b2b")
+    bidir = variant.startswith("bcst")
+    fn = make_ring_all_gather(axis_name, n, defer_send_sync=defer,
+                              bidirectional=bidir, interpret=interpret)
+    mapped = shard_map(fn, mesh=mesh, in_specs=P(axis_name, None),
+                       out_specs=P(None, None), check_vma=False)
+    return jax.jit(mapped)(x)

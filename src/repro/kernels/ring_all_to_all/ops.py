@@ -1,0 +1,30 @@
+"""Jit'd wrapper for the Pallas all-to-all kernel."""
+from __future__ import annotations
+
+import jax
+from jax import shard_map
+from jax.sharding import PartitionSpec as P
+
+from .ring_all_to_all import make_all_to_all
+
+
+def pallas_all_to_all(
+    x: jax.Array,          # [n, n, chunk, F]: dim0 = device, dim1 = dest chunk
+    mesh,
+    axis_name: str,
+    *,
+    variant: str = "b2b",   # b2b | per_round
+    interpret: bool = False,
+) -> jax.Array:
+    n = mesh.shape[axis_name]
+    assert x.shape[0] == n and x.shape[1] == n
+    fn = make_all_to_all(axis_name, n, b2b=(variant == "b2b"), interpret=interpret)
+
+    def local(xl):
+        return fn(xl[0])[None]
+
+    mapped = shard_map(local, mesh=mesh,
+                       in_specs=P(axis_name, None, None, None),
+                       out_specs=P(axis_name, None, None, None),
+                       check_vma=False)
+    return jax.jit(mapped)(x)

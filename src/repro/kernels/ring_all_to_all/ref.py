@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for all-to-all: out[i, j] = x[j, i] (chunk transpose)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def all_to_all_ref(global_x: jnp.ndarray) -> jnp.ndarray:
+    """global_x: [n_devices, n_chunks=n_devices, chunk, F] -> transposed."""
+    return jnp.swapaxes(global_x, 0, 1)

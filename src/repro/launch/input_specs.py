@@ -1,0 +1,54 @@
+"""Abstract input construction for the dry-run: ShapeDtypeStruct stand-ins
+for every model input (weak-type-correct, shardable, no device allocation).
+
+* train / prefill: token batch (plus stubbed frontend embeddings for the
+  VLM / audio carve-out archs).
+* decode: ONE new token per sequence + the full KV cache / SSM state at
+  ``seq_len`` capacity.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import ShapeDtypeStruct as SDS
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models.transformer import Model
+
+
+def skip_reason(cfg: ArchConfig, shape: ShapeConfig) -> str | None:
+    """Documented (arch, shape) skips — DESIGN.md §6."""
+    if shape.name == "long_500k" and shape.mode == "decode":
+        if not cfg.supports_long_decode:
+            return ("full-attention KV at 524288 tokens is quadratic-cost to fill and "
+                    "O(ctx) per step; arch has no sliding-window/SSM path")
+    return None
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig, model: Model | None = None) -> dict[str, Any]:
+    """Returns {'batch': pytree of SDS, 'caches': pytree|None}."""
+    B, S = shape.global_batch, shape.seq_len
+    cd = jnp.dtype(cfg.compute_dtype)
+
+    if shape.mode in ("train", "prefill"):
+        batch: dict[str, Any] = {}
+        if cfg.family == "vlm":
+            # stub ViT frontend: precomputed patch+text embeddings
+            batch["embeds"] = SDS((B, S, cfg.d_model), cd)
+            batch["labels"] = SDS((B, S), jnp.int32)
+            batch["positions"] = SDS((3, B, S), jnp.int32)   # M-RoPE t/h/w
+        else:
+            batch["tokens"] = SDS((B, S), jnp.int32)
+        if cfg.family == "audio":
+            # stub mel+conv frontend: precomputed frame embeddings
+            batch["encoder_feats"] = SDS((B, cfg.encdec.encoder_seq, cfg.d_model), cd)
+        return {"batch": batch, "caches": None}
+
+    # decode: one token, cache at seq_len capacity
+    batch = {"tokens": SDS((B, 1), jnp.int32), "pos": SDS((), jnp.int32)}
+    caches = None
+    if model is not None:
+        caches = jax.eval_shape(lambda: model.init_caches(B, S))
+    return {"batch": batch, "caches": caches}

@@ -1,0 +1,147 @@
+"""Mamba2 (SSD) block per arXiv:2405.21060, as used by Zamba2's backbone.
+
+Multi-head selective state space: per head h of size P=head_size with shared
+state dimension N=state_size (ngroups=1):
+
+    h_t = exp(dt_t · A_h) · h_{t-1} + dt_t · x_t ⊗ B_t
+    y_t = h_t · C_t + D_h · x_t
+
+with data-dependent (dt, B, C) projected from the input and a causal
+depthwise conv on the x/B/C stream.  State is O(1) in sequence length, so
+Zamba2 runs the 524288-token decode shape.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+
+
+TIME_CHUNK = 256
+
+
+def chunked_time_scan(step_body, carry0, seq):
+    """Time scan with gradient checkpointing every TIME_CHUNK steps.
+
+    A flat scan stores its carry (the f32 SSM state) at EVERY step for AD —
+    measured ~1 TB/device peak temp on zamba2 train_4k (§Perf iteration 6).
+    Chunking stores one carry per chunk and recomputes inside the chunk on
+    the backward pass — the Mamba2 paper's chunked-SSD memory discipline.
+    ``seq`` leaves are time-major [T, ...].
+    """
+    T = jax.tree.leaves(seq)[0].shape[0]
+    if T % TIME_CHUNK != 0 or T <= TIME_CHUNK:
+        return jax.lax.scan(step_body, carry0, seq)
+    n_chunks = T // TIME_CHUNK
+
+    @jax.checkpoint
+    def chunk_body(carry, chunk_seq):
+        return jax.lax.scan(step_body, carry, chunk_seq)
+
+    seq_c = jax.tree.map(
+        lambda a: a.reshape((n_chunks, TIME_CHUNK) + a.shape[1:]), seq)
+    carry, ys_c = jax.lax.scan(chunk_body, carry0, seq_c)
+    ys = jax.tree.map(
+        lambda a: a.reshape((T,) + a.shape[2:]), ys_c)
+    return carry, ys
+
+
+def dims(cfg: ArchConfig) -> tuple[int, int, int, int]:
+    d_in = cfg.ssm.expand * cfg.d_model
+    hs = cfg.ssm.head_size
+    nh = d_in // hs
+    return d_in, hs, nh, cfg.ssm.state_size
+
+
+def init_mamba_block(cfg: ArchConfig, rng: jax.Array) -> dict:
+    pd = jnp.dtype(cfg.param_dtype)
+    D = cfg.d_model
+    d_in, hs, nh, N = dims(cfg)
+    K = cfg.ssm.conv_kernel
+    ks = jax.random.split(rng, 3)
+    s = 1.0 / np.sqrt(D)
+    conv_dim = d_in + 2 * N
+    return {
+        # z (gate), x, B, C, dt
+        "w_in": jax.random.normal(ks[0], (D, 2 * d_in + 2 * N + nh), pd) * s,
+        "conv_w": jax.random.normal(ks[1], (K, conv_dim), pd) * 0.1,
+        "conv_b": jnp.zeros((conv_dim,), pd),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(pd),
+        "D_skip": jnp.ones((nh,), pd),
+        "dt_bias": jnp.full((nh,), -4.0, pd),
+        "norm_scale": jnp.ones((d_in,), pd),
+        "w_out": jax.random.normal(ks[2], (d_in, D), pd) * (1.0 / np.sqrt(d_in)),
+    }
+
+
+def mamba_state_init(cfg: ArchConfig, batch: int) -> dict:
+    d_in, hs, nh, N = dims(cfg)
+    K = cfg.ssm.conv_kernel
+    return {
+        "h": jnp.zeros((batch, nh, hs, N), jnp.float32),
+        "conv": jnp.zeros((batch, K - 1, d_in + 2 * N), jnp.dtype(cfg.compute_dtype)),
+    }
+
+
+def _split_proj(cfg: ArchConfig, proj: jax.Array):
+    d_in, hs, nh, N = dims(cfg)
+    z, xbc, dt = jnp.split(proj, [d_in, 2 * d_in + 2 * N], axis=-1)
+    return z, xbc, dt
+
+
+def _causal_conv(p: dict, xbc: jax.Array, conv_state: jax.Array | None):
+    """Depthwise causal conv over time.  xbc [B,T,Cdim]."""
+    K = p["conv_w"].shape[0]
+    if conv_state is None:
+        conv_state = jnp.zeros((xbc.shape[0], K - 1, xbc.shape[-1]), xbc.dtype)
+    padded = jnp.concatenate([conv_state, xbc], axis=1)
+    w = p["conv_w"].astype(xbc.dtype)                    # [K, Cdim]
+    out = sum(padded[:, i:i + xbc.shape[1]] * w[i] for i in range(K))
+    out = jax.nn.silu(out + p["conv_b"].astype(xbc.dtype))
+    return out, padded[:, -(K - 1):] if K > 1 else conv_state
+
+
+def apply_mamba_block(cfg: ArchConfig, p: dict, x: jax.Array,
+                      state: dict | None = None):
+    """x [B,T,D] -> (y [B,T,D], new_state)."""
+    B, T, D = x.shape
+    d_in, hs, nh, N = dims(cfg)
+    cd = x.dtype
+    proj = x @ p["w_in"].astype(cd)
+    z, xbc, dt = _split_proj(cfg, proj)
+    xbc, conv_state = _causal_conv(p, xbc, None if state is None else state["conv"])
+    xs, Bmat, Cmat = jnp.split(xbc, [d_in, d_in + N], axis=-1)
+    xs = xs.reshape(B, T, nh, hs)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))  # [B,T,nh]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))          # [nh]
+    decay = jnp.exp(dt * A)                               # [B,T,nh]
+
+    h0 = (jnp.zeros((B, nh, hs, N), jnp.float32) if state is None else state["h"])
+
+    def body(h, inp):
+        x_t, B_t, C_t, dt_t, a_t = inp                    # [B,nh,hs],[B,N],[B,N],[B,nh],[B,nh]
+        xb = (dt_t[..., None] * x_t.astype(jnp.float32))[..., None] * B_t.astype(jnp.float32)[:, None, None, :]
+        h = a_t[..., None, None] * h + xb                 # [B,nh,hs,N]
+        y = jnp.einsum("bhpn,bn->bhp", h, C_t.astype(jnp.float32))
+        return h, y
+
+    seq = (
+        jnp.moveaxis(xs, 1, 0),
+        jnp.moveaxis(Bmat, 1, 0),
+        jnp.moveaxis(Cmat, 1, 0),
+        jnp.moveaxis(dt, 1, 0),
+        jnp.moveaxis(decay, 1, 0),
+    )
+    h, ys = chunked_time_scan(body, h0, seq)
+    y = jnp.moveaxis(ys, 0, 1)                            # [B,T,nh,hs] f32
+    y = y + p["D_skip"].astype(jnp.float32)[None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(B, T, d_in).astype(cd)
+
+    # gated RMS norm + out projection
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    yf = yf * jax.lax.rsqrt(var + 1e-6) * p["norm_scale"].astype(jnp.float32)
+    out = yf.astype(cd) @ p["w_out"].astype(cd)
+    return out, {"h": h, "conv": conv_state}

@@ -1,0 +1,104 @@
+"""Mixture-of-Experts with sort-based capacity dispatch.
+
+Design notes (DESIGN.md §6/§7):
+* Dispatch is gather/scatter-based (argsort by expert id + per-expert
+  capacity buffer), NOT a dense [T, E, C] one-hot einsum — so the compiled
+  FLOPs equal the *active* expert FLOPs, keeping the roofline honest.
+* The expert buffer [E, C, D] carries a sharding constraint that places the
+  expert axis on the 'model' mesh axis when divisible (expert parallelism):
+  GSPMD then materializes the token exchange as all-to-all — exactly the
+  collective the paper optimizes (swap/b2b for latency-bound sizes, §4.3).
+  When E < mesh width (mixtral: 8 experts on 16 chips), the expert FFN
+  hidden dim is sharded instead (tensor-parallel experts).
+* Every token keeps its top-k weights; tokens over capacity are dropped
+  (capacity_factor 1.25), as in Switch/GShard-style systems.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+
+
+def init_moe(cfg: ArchConfig, rng: jax.Array) -> dict:
+    assert cfg.moe is not None
+    pd = jnp.dtype(cfg.param_dtype)
+    D, E, F = cfg.d_model, cfg.moe.n_experts, cfg.moe.d_ff_expert
+    ks = jax.random.split(rng, 4)
+    s_in, s_out = 1.0 / np.sqrt(D), 1.0 / np.sqrt(F)
+    return {
+        "router": jax.random.normal(ks[0], (D, E), pd) * s_in,
+        "wg": jax.random.normal(ks[1], (E, D, F), pd) * s_in,
+        "wu": jax.random.normal(ks[2], (E, D, F), pd) * s_in,
+        "wd": jax.random.normal(ks[3], (E, F, D), pd) * s_out,
+    }
+
+
+def capacity_for(cfg: ArchConfig, n_tokens: int) -> int:
+    m = cfg.moe
+    cap = int(np.ceil(n_tokens * m.top_k / m.n_experts * m.capacity_factor))
+    # large capacities round to 128 so the capacity axis is shardable over
+    # the DP mesh axes (16 or 32) — see sharding.rules 'expert' kind.
+    mult = 128 if cap >= 128 else 8
+    return max(8, int(np.ceil(cap / mult)) * mult)
+
+
+def apply_moe(
+    cfg: ArchConfig,
+    p: dict,
+    x: jax.Array,                      # [B, S, D]
+    *,
+    expert_sharding=None,              # optional fn: buffer [E,C,D/F] -> constrained
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (output [B,S,D], router aux loss scalar)."""
+    m = cfg.moe
+    B, S, D = x.shape
+    T = B * S
+    E, K = m.n_experts, m.top_k
+    C = capacity_for(cfg, T)
+    cd = x.dtype
+
+    xf = x.reshape(T, D)
+    logits = (xf.astype(jnp.float32) @ p["router"].astype(jnp.float32))  # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    topk_p, topk_e = jax.lax.top_k(probs, K)                              # [T, K]
+    topk_p = topk_p / jnp.sum(topk_p, axis=-1, keepdims=True)
+
+    # ---- load-balance auxiliary loss (Switch-style) ----
+    me = jnp.mean(probs, axis=0)                                          # [E]
+    assign = jnp.zeros((E,), jnp.float32).at[topk_e.reshape(-1)].add(1.0)
+    ce = assign / (T * K)
+    aux = E * jnp.sum(me * ce) * m.router_aux_weight
+
+    # ---- sort-based dispatch ----
+    flat_e = topk_e.reshape(-1)                                           # [T*K]
+    order = jnp.argsort(flat_e)                                           # [T*K]
+    sorted_e = flat_e[order]
+    group_start = jnp.searchsorted(sorted_e, jnp.arange(E, dtype=sorted_e.dtype))
+    pos = jnp.arange(T * K, dtype=jnp.int32) - group_start[sorted_e].astype(jnp.int32)
+    keep = pos < C
+    pos_c = jnp.where(keep, pos, C)                                       # C == drop slot
+    token_of = (order // K).astype(jnp.int32)
+
+    buf = jnp.zeros((E, C, D), cd)
+    buf = buf.at[sorted_e, pos_c].set(xf[token_of], mode="drop")
+    if expert_sharding is not None:
+        buf = expert_sharding(buf)
+
+    # ---- expert FFNs: active-FLOP einsum over the capacity buffer ----
+    h = jnp.einsum("ecd,edf->ecf", buf, p["wg"].astype(cd))
+    u = jnp.einsum("ecd,edf->ecf", buf, p["wu"].astype(cd))
+    h = jax.nn.silu(h) * u
+    if expert_sharding is not None:
+        h = expert_sharding(h)
+    y = jnp.einsum("ecf,efd->ecd", h, p["wd"].astype(cd))
+    if expert_sharding is not None:
+        y = expert_sharding(y)
+
+    # ---- combine: gather back + weighted sum over k ----
+    contrib = y[sorted_e, pos_c] * keep[:, None].astype(cd)               # [T*K, D]
+    weights = topk_p.reshape(-1)[order].astype(cd)
+    out = jnp.zeros((T, D), cd).at[token_of].add(contrib * weights[:, None])
+    return out.reshape(B, S, D), aux

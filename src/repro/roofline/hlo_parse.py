@@ -1,0 +1,79 @@
+"""Parse collective traffic out of compiled (SPMD-partitioned) HLO text.
+
+Shapes in the partitioned module are PER-DEVICE, so the wire-byte estimates
+below are per-device too.  Wire bytes per op (ring-algorithm accounting):
+
+  all-gather        : out - in            (receives (n-1)/n of the result)
+  reduce-scatter    : in - out
+  all-reduce        : 2 * out             (ring RS + AG, upper bound)
+  all-to-all        : out * (n-1)/n ~ out
+  collective-permute: out
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(([^)]*)\)")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveOp:
+    kind: str
+    out_bytes: int
+    in_bytes: int
+
+    @property
+    def wire_bytes(self) -> float:
+        if self.kind == "all-gather":
+            return max(self.out_bytes - self.in_bytes, 0)
+        if self.kind == "reduce-scatter":
+            return max(self.in_bytes - self.out_bytes, 0)
+        if self.kind == "all-reduce":
+            return 2.0 * self.out_bytes
+        if self.kind == "all-to-all":
+            return float(self.out_bytes)
+        return float(self.out_bytes)   # collective-permute
+
+
+def parse_collectives(hlo_text: str) -> list[CollectiveOp]:
+    ops: list[CollectiveOp] = []
+    for m in _OP_RE.finditer(hlo_text):
+        out_s, kind, operands = m.group(1), m.group(2), m.group(3)
+        ops.append(CollectiveOp(kind, _shape_bytes(out_s), _shape_bytes(operands)))
+    return ops
+
+
+def wire_bytes_by_kind(hlo_text: str) -> dict[str, float]:
+    acc: dict[str, float] = {}
+    for op in parse_collectives(hlo_text):
+        acc[op.kind] = acc.get(op.kind, 0.0) + op.wire_bytes
+    return acc
+
+
+def total_wire_bytes(hlo_text: str) -> float:
+    return sum(wire_bytes_by_kind(hlo_text).values())

@@ -1,0 +1,9 @@
+"""TPU v5e hardware constants for the roofline (system targets)."""
+
+PEAK_BF16_FLOPS = 197e12        # per chip
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_LINK_BW = 50e9              # bytes/s per link per direction
+ICI_LINKS_PER_CHIP = 4          # 2D torus
+
+SINGLE_POD_CHIPS = 256
+MULTI_POD_CHIPS = 512

@@ -1,0 +1,147 @@
+"""Batched LLM serving engine with host-memory context caching.
+
+Serving flow (mirrors the paper's vLLM + KV-offload setup, §5.3):
+
+1. A request arrives with a context key.  On a HOST CACHE MISS the engine
+   runs prefill on device, emits the first token, and SAVES the paged KV to
+   the host store.  On a HIT it FETCHES the KV blocks back (pcpy / b2b /
+   kernel backend), rebuilds the device cache, and emits the first token
+   with a single decode step — no prefill compute.
+2. Decode proceeds in batched steps over all active sequences.
+
+TTFT therefore = fetch(+rebuild) time on hits vs prefill time on misses —
+exactly the quantity Figures 16/17 study.  Wall-clock numbers on this CPU
+container are functional only; the calibrated DMA model supplies the
+transfer-side latencies for the paper-scale benchmarks.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.backend import CommBackend
+from repro.models import attention as attn_mod
+from repro.models.transformer import Model
+from .host_store import HostKVStore
+from .kvcache import BLOCK_TOKENS, blocks_to_kv, kv_to_blocks
+
+
+@dataclasses.dataclass
+class RequestStats:
+    key: str
+    cache_hit: bool
+    ttft_wall_s: float
+    fetch_modeled_s: float      # 0 on miss
+    n_transfers: int
+    prompt_tokens: int
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    tokens: np.ndarray          # [B, n_new]
+    request_stats: list[RequestStats]
+    decode_wall_s: float
+    tokens_per_s_wall: float
+
+
+class ServeEngine:
+    def __init__(self, model: Model, params, *, host_store: HostKVStore | None = None,
+                 comm: CommBackend | None = None, block_tokens: int = BLOCK_TOKENS):
+        cfg = model.cfg
+        if cfg.family not in ("dense", "moe", "vlm"):
+            raise ValueError(f"serving engine supports decoder-LM families, got {cfg.family}")
+        if model.scan_info.get("per_unit", 1) != 1:
+            raise ValueError("serving engine requires per_unit==1 layer stacking")
+        self.model = model
+        self.params = params
+        self.store = host_store or HostKVStore(block_tokens)
+        self.comm = comm or CommBackend("latte")
+        self.block_tokens = block_tokens
+        self._prefill_jit = jax.jit(
+            lambda p, b: model.forward(p, b, want_cache=True, remat=False))
+        self._decode_jit = jax.jit(model.decode_step)
+
+    # ----------------------------------------------------------- helpers ----
+    def _prefill(self, prompts: jax.Array):
+        logits, _, kvs = self._prefill_jit(self.params, {"tokens": prompts})
+        (k, v), = kvs      # per_unit == 1
+        return logits, np.asarray(k), np.asarray(v)   # [L, B, S, KV, hd]
+
+    def _build_cache(self, k: np.ndarray, v: np.ndarray, capacity: int):
+        """k/v [L, B, S, KV, hd] -> stacked decode cache at ``capacity``."""
+        L, B, S, KV, hd = k.shape
+        cfg = self.model.cfg
+
+        def one_layer(kl, vl):
+            return attn_mod.prefill_cache(cfg, jnp.asarray(kl), jnp.asarray(vl), capacity)
+
+        layers = [one_layer(k[i], v[i]) for i in range(L)]
+        stacked = jax.tree.map(lambda *a: jnp.stack(a), *layers)
+        return (stacked,)   # per_unit tuple
+
+    # ------------------------------------------------------------ public ----
+    def first_token(self, prompts: np.ndarray, keys: Sequence[str],
+                    *, fetch_backend: str = "b2b", capacity: int | None = None):
+        """TTFT path for a batch sharing prompt length.  Returns
+        (first_tokens [B], cache, stats)."""
+        B, S = prompts.shape
+        capacity = capacity or S + 64
+        all_hit = all(k in self.store for k in keys)
+        t0 = time.perf_counter()
+        stats = []
+        if all_hit:
+            ks, vs, modeled_total, n_tr = [], [], 0.0, 0
+            for key in keys:
+                res = self.store.fetch(key, fetch_backend)
+                kk, vv = blocks_to_kv(res.k_blocks, res.v_blocks, self.store.tokens_for(key))
+                ks.append(kk)
+                vs.append(vv)
+                modeled_total += res.modeled_seconds
+                n_tr += res.n_transfers
+            k = np.concatenate(ks, axis=1)   # [L, B, S, KV, hd]
+            v = np.concatenate(vs, axis=1)
+            cache = self._build_cache(k, v, capacity)
+            logits, cache = self._decode_jit(
+                self.params,
+                {"tokens": jnp.asarray(prompts[:, -1:]), "pos": jnp.int32(S - 1)},
+                cache)
+            first = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+            wall = time.perf_counter() - t0
+            for key in keys:
+                stats.append(RequestStats(key, True, wall / B, modeled_total / B,
+                                          n_tr, S))
+        else:
+            logits, k, v = self._prefill(jnp.asarray(prompts))
+            first = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+            wall = time.perf_counter() - t0
+            for b, key in enumerate(keys):
+                kb, vb = kv_to_blocks(k[:, b:b + 1], v[:, b:b + 1], self.block_tokens)
+                self.store.save(key, kb, vb, S)
+                stats.append(RequestStats(key, False, wall / B, 0.0, 0, S))
+            cache = self._build_cache(k, v, capacity)
+        return first, cache, stats
+
+    def generate(self, prompts: np.ndarray, keys: Sequence[str], n_new: int,
+                 *, fetch_backend: str = "b2b") -> GenerationResult:
+        B, S = prompts.shape
+        capacity = S + n_new + 1
+        first, cache, stats = self.first_token(prompts, keys,
+                                               fetch_backend=fetch_backend,
+                                               capacity=capacity)
+        toks = [first]
+        cur = jnp.asarray(first)[:, None]
+        t0 = time.perf_counter()
+        for i in range(n_new - 1):
+            logits, cache = self._decode_jit(
+                self.params, {"tokens": cur, "pos": jnp.int32(S + i)}, cache)
+            cur = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+            toks.append(np.asarray(cur)[:, 0])
+        dt = time.perf_counter() - t0
+        tokens = np.stack(toks, axis=1)
+        return GenerationResult(tokens, stats, dt, B * (n_new - 1) / max(dt, 1e-9))

@@ -1,0 +1,93 @@
+"""Paged KV cache management (PagedAttention layout, vLLM-style).
+
+Device-side pools hold KV in fixed-size blocks (16 tokens by default, the
+vLLM default the paper cites); per-sequence block tables map logical block
+index -> pool slot.  All model layers of one logical block are stored
+contiguously (the [28]-style optimization the paper's baseline assumes), so
+one host<->device transfer moves a full layer-stack block.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+BLOCK_TOKENS = 16
+
+
+@dataclasses.dataclass
+class PagedPools:
+    """Device-side paged pools: k/v [n_blocks, block_tokens, L, KV, hd]."""
+
+    k: jax.Array
+    v: jax.Array
+    block_tokens: int
+
+    @property
+    def n_blocks(self) -> int:
+        return self.k.shape[0]
+
+    @property
+    def block_bytes(self) -> int:
+        per = int(np.prod(self.k.shape[1:])) * self.k.dtype.itemsize
+        return 2 * per  # k + v
+
+
+def init_pools(cfg: ArchConfig, n_layers: int, n_blocks: int,
+               block_tokens: int = BLOCK_TOKENS) -> PagedPools:
+    cd = jnp.dtype(cfg.compute_dtype)
+    shape = (n_blocks, block_tokens, n_layers, cfg.n_kv_heads, cfg.head_dim)
+    return PagedPools(jnp.zeros(shape, cd), jnp.zeros(shape, cd), block_tokens)
+
+
+class BlockAllocator:
+    """Free-list allocator over pool slots."""
+
+    def __init__(self, n_blocks: int):
+        self.free = list(range(n_blocks - 1, -1, -1))
+        self.n_blocks = n_blocks
+
+    def alloc(self, n: int) -> list[int]:
+        if n > len(self.free):
+            raise MemoryError(f"paged pool exhausted: want {n}, have {len(self.free)}")
+        return [self.free.pop() for _ in range(n)]
+
+    def release(self, blocks: list[int]) -> None:
+        self.free.extend(blocks)
+
+    @property
+    def n_free(self) -> int:
+        return len(self.free)
+
+
+def blocks_for_tokens(n_tokens: int, block_tokens: int = BLOCK_TOKENS) -> int:
+    return (n_tokens + block_tokens - 1) // block_tokens
+
+
+def kv_to_blocks(k: np.ndarray, v: np.ndarray, block_tokens: int = BLOCK_TOKENS):
+    """Layer-stacked prefill KV [L, B=1, S, KV, hd] -> per-block arrays
+    [n_blocks, block_tokens, L, KV, hd] (zero-padded tail)."""
+    L, B, S, KV, hd = k.shape
+    assert B == 1
+    nb = blocks_for_tokens(S, block_tokens)
+    pad = nb * block_tokens - S
+    def conv(a):
+        a = np.moveaxis(np.asarray(a)[:, 0], 0, 1)          # [S, L, KV, hd]
+        if pad:
+            a = np.concatenate([a, np.zeros((pad,) + a.shape[1:], a.dtype)])
+        return a.reshape(nb, block_tokens, L, KV, hd)
+    return conv(k), conv(v)
+
+
+def blocks_to_kv(kb: np.ndarray, vb: np.ndarray, n_tokens: int):
+    """Inverse of kv_to_blocks -> [L, 1, S, KV, hd]."""
+    def conv(a):
+        nb, bt, L, KV, hd = a.shape
+        a = a.reshape(nb * bt, L, KV, hd)[:n_tokens]
+        return np.moveaxis(a, 1, 0)[:, None]
+    return conv(kb), conv(vb)

@@ -1,0 +1,52 @@
+"""Checkpointing: flat-key .npz with pytree structure manifest.
+
+Works for any params/opt-state pytree (dicts/tuples/arrays).  Sharded arrays
+are gathered to host before save (single-host container); restore rebuilds
+the exact tree and validates shapes/dtypes.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+def _flatten(tree: Any):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def save_checkpoint(path: str, state: Any, *, step: int | None = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    leaves, treedef = _flatten(state)
+    arrays = {f"leaf_{i}": np.asarray(l) for i, l in enumerate(leaves)}
+    manifest = {
+        "treedef": str(treedef),
+        "n_leaves": len(leaves),
+        "step": step,
+        "dtypes": [str(np.asarray(l).dtype) for l in leaves],
+        "shapes": [list(np.asarray(l).shape) for l in leaves],
+    }
+    np.savez(path, __manifest__=json.dumps(manifest), **arrays)
+
+
+def restore_checkpoint(path: str, like: Any) -> Any:
+    """Restore into the structure of ``like`` (an abstract or concrete tree)."""
+    with np.load(path, allow_pickle=False) as f:
+        manifest = json.loads(str(f["__manifest__"]))
+        leaves_like, treedef = _flatten(like)
+        if manifest["n_leaves"] != len(leaves_like):
+            raise ValueError(
+                f"checkpoint has {manifest['n_leaves']} leaves, expected {len(leaves_like)}")
+        leaves = []
+        for i, ref in enumerate(leaves_like):
+            arr = f[f"leaf_{i}"]
+            if tuple(arr.shape) != tuple(ref.shape):
+                raise ValueError(f"leaf {i}: shape {arr.shape} != expected {ref.shape}")
+            leaves.append(jnp.asarray(arr, dtype=ref.dtype))
+        return jax.tree_util.tree_unflatten(treedef, leaves)

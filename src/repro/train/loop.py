@@ -1,0 +1,66 @@
+"""Training step + loop.  ``make_train_step`` builds the pure step function
+that the launcher jits under the production mesh; ``train_loop`` is the
+single-host driver used by examples/tests (runs real steps on CPU)."""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import Model, _identity_ac
+from .optimizer import AdamWConfig, adamw_update, init_opt_state
+
+
+def init_train_state(model: Model, rng: jax.Array) -> dict:
+    params = model.init(rng)
+    return {"params": params, "opt": init_opt_state(params)}
+
+
+def cast_params_for_compute(params, dtype=jnp.bfloat16):
+    """Cast >=2D float32 params to the compute dtype shard-local, so FSDP
+    all-gathers move bf16 instead of fp32 (§Perf: halves weight-gather wire
+    bytes).  The fp32 master copy stays in the optimizer state."""
+    def cast(p):
+        if p.dtype == jnp.float32 and p.ndim >= 2:
+            return p.astype(dtype)
+        return p
+    return jax.tree.map(cast, params)
+
+
+def make_train_step(model: Model, opt_cfg: AdamWConfig, ac: Callable = _identity_ac,
+                    unroll: bool = False, cast_params: bool = True):
+    def train_step(state: dict, batch: dict):
+        def loss_fn(params):
+            p = cast_params_for_compute(params) if cast_params else params
+            return model.loss(p, batch, ac=ac, unroll=unroll)
+
+        loss, grads = jax.value_and_grad(loss_fn)(state["params"])
+        params, opt, metrics = adamw_update(opt_cfg, state["params"], grads, state["opt"])
+        metrics = dict(metrics, loss=loss)
+        return {"params": params, "opt": opt}, metrics
+
+    return train_step
+
+
+def train_loop(model: Model, data_iter, *, steps: int, opt_cfg: AdamWConfig | None = None,
+               rng: jax.Array | None = None, log_every: int = 10,
+               callback: Callable[[int, dict], None] | None = None) -> tuple[dict, list]:
+    opt_cfg = opt_cfg or AdamWConfig()
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+    state = init_train_state(model, rng)
+    step_fn = jax.jit(make_train_step(model, opt_cfg))
+    history = []
+    t0 = time.perf_counter()
+    for i in range(steps):
+        batch = next(data_iter)
+        state, metrics = step_fn(state, batch)
+        if i % log_every == 0 or i == steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            m["step"] = i
+            m["wall_s"] = time.perf_counter() - t0
+            history.append(m)
+            if callback:
+                callback(i, m)
+    return state, history

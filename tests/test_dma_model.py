@@ -1,0 +1,163 @@
+"""Unit tests for the DMA command set, engine timing model, schedules,
+dispatch policy, and the paper-claim validation."""
+import pytest
+
+from repro.core.dma import (
+    CmdKind, allgather_schedule, alltoall_schedule, commands as cmd,
+    cu_collective_power, derive_dispatch, dma_collective_power, kv_fetch_schedule,
+    mi300x_platform, paper_dispatch, rccl_aa_calibration, rccl_ag_calibration,
+    simulate, single_copy_breakdown, tpu_v5e_pod,
+)
+from repro.core.dma.claims import evaluate_claims
+from repro.core.dma.rccl_model import rccl_collective_latency
+
+KB, MB = 1024, 1024 * 1024
+TOPO = mi300x_platform()
+
+
+class TestCommands:
+    def test_copy_validations(self):
+        with pytest.raises(ValueError):
+            cmd.Command(CmdKind.COPY, 0, (1, 2), 64)
+        with pytest.raises(ValueError):
+            cmd.Command(CmdKind.BCST, 0, (1,), 64)
+        with pytest.raises(ValueError):
+            cmd.Command(CmdKind.COPY, 0, (1,), -4)
+
+    def test_bcst_reads_once_writes_twice(self):
+        b = cmd.bcst(0, 1, 2, 1000)
+        assert b.local_read_bytes == 1000
+        assert b.remote_write_bytes == 2000
+        assert b.n_copies == 2
+
+    def test_prelaunch_queue_must_start_with_poll(self):
+        with pytest.raises(ValueError):
+            cmd.EngineQueue(0, 0, (cmd.copy(0, 1, 64),), prelaunched=True)
+        q = cmd.EngineQueue(0, 0, (cmd.poll(), cmd.copy(0, 1, 64), cmd.signal()),
+                            prelaunched=True)
+        assert q.n_signals == 1
+        assert len(q.data_commands) == 1
+
+
+class TestSchedules:
+    def test_allgather_traffic_conservation(self):
+        """Every device must send its shard to all n-1 peers, any variant."""
+        n = TOPO.n_devices
+        size = 8 * MB
+        for variant in ("pcpy", "bcst", "b2b", "prelaunch_b2b"):
+            sched = allgather_schedule(TOPO, size, variant)
+            recv = {d: set() for d in range(n)}
+            for q in sched.queues:
+                for c in q.data_commands:
+                    for dst in c.dsts:
+                        recv[dst].add(c.src)
+            for d in range(n):
+                assert recv[d] == set(range(n)) - {d}, (variant, d)
+
+    def test_alltoall_swap_halves_commands(self):
+        pcpy = alltoall_schedule(TOPO, 8 * MB, "pcpy")
+        swap = alltoall_schedule(TOPO, 8 * MB, "swap")
+        assert sum(len(q.data_commands) for q in swap.queues) * 2 == \
+            sum(len(q.data_commands) for q in pcpy.queues)
+
+    def test_bcst_halves_engines(self):
+        pcpy = allgather_schedule(TOPO, 1 * MB, "pcpy")
+        bcst = allgather_schedule(TOPO, 1 * MB, "bcst")
+        assert pcpy.engines_used(0) == 7
+        assert bcst.engines_used(0) == 4
+
+    def test_b2b_single_engine(self):
+        b2b = allgather_schedule(TOPO, 1 * MB, "b2b")
+        assert b2b.engines_used(0) == 1
+        assert b2b.queues_for(0)[0].n_signals == 1
+
+    def test_kv_fetch_b2b_fanout_threshold(self):
+        small = kv_fetch_schedule(TOPO, 16, 64 * KB, "b2b")
+        big = kv_fetch_schedule(TOPO, 64, 2 * MB, "b2b")
+        assert small.engines_used(0) == 1
+        assert big.engines_used(0) > 1
+
+
+class TestEngineModel:
+    def test_latency_monotonic_in_size(self):
+        prev = 0.0
+        for size in (4 * KB, 64 * KB, 1 * MB, 16 * MB, 256 * MB):
+            t = simulate(allgather_schedule(TOPO, size, "pcpy"), TOPO).latency
+            assert t > prev
+            prev = t
+
+    def test_prelaunch_always_helps(self):
+        for v in ("pcpy", "bcst", "b2b"):
+            for size in (4 * KB, 1 * MB, 64 * MB):
+                base = simulate(allgather_schedule(TOPO, size, v), TOPO).latency
+                pre = simulate(allgather_schedule(TOPO, size, f"prelaunch_{v}"), TOPO).latency
+                assert pre < base, (v, size)
+
+    def test_breakdown_sums_to_total(self):
+        b = single_copy_breakdown(64 * KB, TOPO)
+        assert abs((b.control + b.schedule + b.copy + b.sync) - b.total) < 1e-12
+
+    def test_prelaunch_removes_control_and_schedule(self):
+        b = single_copy_breakdown(64 * KB, TOPO, prelaunch=True)
+        assert b.control == 0.0
+
+    def test_unknown_variant_raises(self):
+        with pytest.raises(ValueError):
+            allgather_schedule(TOPO, 1 * MB, "warp")
+        with pytest.raises(ValueError):
+            alltoall_schedule(TOPO, 1 * MB, "bcst")  # bcst is AG-only
+
+
+class TestDispatch:
+    def test_paper_tables(self):
+        assert paper_dispatch("all_gather", 4 * KB) == "prelaunch_b2b"
+        assert paper_dispatch("all_gather", 512 * KB) == "prelaunch_bcst"
+        assert paper_dispatch("all_gather", 64 * MB) == "prelaunch_pcpy"
+        assert paper_dispatch("all_gather", 1024 * MB) == "pcpy"
+        assert paper_dispatch("all_to_all", 32 * KB) == "prelaunch_b2b"
+        assert paper_dispatch("all_to_all", 1 * MB) == "prelaunch_swap"
+
+    def test_derived_dispatch_covers_all_sizes(self):
+        sizes = [2 ** i for i in range(10, 33)]
+        entries = derive_dispatch(TOPO, "all_gather", sizes)
+        assert entries[0].lo == sizes[0]
+        assert entries[-1].hi is None
+
+    def test_derived_matches_paper_structure_aa(self):
+        """swap wins the mid range, pcpy the large range (Table 3)."""
+        sizes = [2 ** i for i in range(10, 33)]
+        entries = derive_dispatch(TOPO, "all_to_all", sizes)
+        variants = [e.variant.replace("prelaunch_", "") for e in entries]
+        assert variants == ["b2b", "swap", "pcpy"]
+
+
+class TestClaims:
+    def test_all_paper_claims_in_band(self):
+        bad = [c for c in evaluate_claims() if not c.ok]
+        assert not bad, [f"{c.name}: {c.model_value} not in [{c.lo},{c.hi}]" for c in bad]
+
+
+class TestPower:
+    def test_dma_saves_power_at_bw_bound(self):
+        size = 256 * MB
+        sim = simulate(allgather_schedule(TOPO, size, "pcpy"), TOPO)
+        p_dma = dma_collective_power(TOPO, size, sim).total
+        p_cu = cu_collective_power(
+            TOPO, size, rccl_collective_latency(TOPO, size, rccl_ag_calibration())).total
+        assert p_dma < p_cu
+
+    def test_fewer_engines_less_power(self):
+        size = 32 * KB
+        p = {}
+        for v in ("pcpy", "b2b"):
+            sim = simulate(allgather_schedule(TOPO, size, v), TOPO)
+            p[v] = dma_collective_power(TOPO, size, sim).total
+        assert p["b2b"] < p["pcpy"]
+
+
+class TestTopologies:
+    def test_tpu_topology_reasonable(self):
+        t = tpu_v5e_pod(256)
+        assert t.n_devices == 256
+        assert not t.fully_connected
+        assert t.calib.doorbell == 0.0  # no host doorbell on-chip

@@ -1,0 +1,162 @@
+"""Per-architecture smoke tests (deliverable f): reduced variant of each
+assigned arch runs one forward + one train step + one decode step on CPU
+with correct shapes and no NaNs."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import build_model
+from repro.train.loop import init_train_state, make_train_step
+from repro.train.optimizer import AdamWConfig
+
+RNG = jax.random.PRNGKey(0)
+
+
+def make_batch(cfg, B=2, S=16):
+    batch = {"tokens": jax.random.randint(RNG, (B, S), 0, cfg.vocab)}
+    if cfg.family == "vlm":
+        batch = {"embeds": jax.random.normal(RNG, (B, S, cfg.d_model)),
+                 "labels": jax.random.randint(RNG, (B, S), 0, cfg.vocab)}
+    if cfg.family == "audio":
+        batch["encoder_feats"] = jax.random.normal(
+            RNG, (B, cfg.encdec.encoder_seq, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_smoke_forward_and_decode(arch_id):
+    cfg = get_config(arch_id).reduced()
+    assert cfg.n_layers <= max(2, len(cfg.layer_pattern or ()), 2)
+    assert cfg.d_model <= 512
+    if cfg.moe:
+        assert cfg.moe.n_experts <= 4
+    model = build_model(cfg)
+    params = model.init(RNG)
+    B, S = 2, 16
+    batch = make_batch(cfg, B, S)
+
+    logits, aux, caches = model.forward(params, batch)
+    assert logits.shape == (B, S, cfg.vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    assert caches is None
+
+    loss = model.loss(params, batch)
+    assert np.isfinite(float(loss))
+
+    caches = model.init_caches(B, 32)
+    dl, new_caches = model.decode_step(
+        params, {"tokens": jnp.zeros((B, 1), jnp.int32), "pos": jnp.int32(3)}, caches)
+    assert dl.shape == (B, 1, cfg.vocab)
+    assert np.isfinite(np.asarray(dl, np.float32)).all()
+    # caches must be structurally preserved
+    assert jax.tree.structure(new_caches) == jax.tree.structure(caches)
+
+
+@pytest.mark.parametrize("arch_id", ["qwen2-0.5b", "olmoe-1b-7b", "rwkv6-1.6b",
+                                     "zamba2-2.7b", "whisper-tiny"])
+def test_smoke_train_step(arch_id):
+    cfg = get_config(arch_id).reduced()
+    model = build_model(cfg)
+    state = init_train_state(model, RNG)
+    step = jax.jit(make_train_step(model, AdamWConfig(lr=1e-3, warmup_steps=1,
+                                                      total_steps=10)))
+    batch = make_batch(cfg)
+    state, metrics = step(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    assert int(state["opt"]["step"]) == 1
+
+
+@pytest.mark.parametrize("arch_id", ["deepseek-7b", "gemma2-27b", "mixtral-8x7b"])
+def test_decode_matches_forward(arch_id):
+    """Teacher-forcing consistency: decoding token-by-token from a prefill
+    cache must reproduce the full-forward logits at each position.
+
+    MoE archs need a no-drop capacity factor: capacity-based dispatch drops
+    tokens depending on the batch's routing pressure, which legitimately
+    differs between full-sequence and single-token execution."""
+    import dataclasses as _dc
+    cfg = get_config(arch_id).reduced()
+    if cfg.moe:
+        cfg = _dc.replace(cfg, moe=_dc.replace(cfg.moe, capacity_factor=8.0))
+    model = build_model(cfg)
+    params = model.init(RNG)
+    B, S = 1, 12
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+    full_logits, _, _ = model.forward(params, {"tokens": toks}, remat=False)
+
+    caches = model.init_caches(B, S + 2)
+    for t in range(S):
+        dl, caches = model.decode_step(
+            params, {"tokens": toks[:, t:t + 1], "pos": jnp.int32(t)}, caches)
+        np.testing.assert_allclose(
+            np.asarray(dl[:, 0], np.float32), np.asarray(full_logits[:, t], np.float32),
+            rtol=0.15, atol=0.05)
+
+
+def test_gemma2_softcap_applied():
+    cfg = get_config("gemma2-27b").reduced()
+    model = build_model(cfg)
+    params = model.init(RNG)
+    logits, _, _ = model.forward(params, make_batch(cfg))
+    assert float(jnp.max(jnp.abs(logits))) <= cfg.final_softcap + 1e-3
+
+
+def test_mixtral_sliding_window_masks_distant_tokens():
+    """With window w, logits at position p must not depend on tokens < p-w.
+
+    Needs a no-drop MoE capacity: with capacity-based dispatch, changing
+    token 0 changes routing pressure and can evict OTHER tokens' expert
+    slots — a legitimate global effect that would mask the attention check.
+    """
+    import dataclasses
+    cfg = get_config("mixtral-8x7b").reduced()   # window=16
+    cfg = dataclasses.replace(cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=16.0))
+    S = 24
+    t1 = jax.random.randint(jax.random.PRNGKey(2), (1, S), 0, cfg.vocab)
+    t2 = t1.at[0, 0].set((t1[0, 0] + 7) % cfg.vocab)   # outside window of last pos
+    # test the 1-layer variant (with 2 layers info propagates via hiddens)
+    cfg1 = dataclasses.replace(cfg, n_layers=1)
+    model1 = build_model(cfg1)
+    p1 = model1.init(RNG)
+    l1, _, _ = model1.forward(p1, {"tokens": t1}, remat=False)
+    l2, _, _ = model1.forward(p1, {"tokens": t2}, remat=False)
+    np.testing.assert_allclose(np.asarray(l1[0, -1], np.float32),
+                               np.asarray(l2[0, -1], np.float32), atol=1e-5)
+    assert not np.allclose(np.asarray(l1[0, 4]), np.asarray(l2[0, 4]))
+
+
+def test_qwen2vl_mrope_text_equals_rope_shape():
+    cfg = get_config("qwen2-vl-72b").reduced()
+    model = build_model(cfg)
+    params = model.init(RNG)
+    B, S = 2, 8
+    emb = jax.random.normal(RNG, (B, S, cfg.d_model))
+    pos3 = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (3, B, S))
+    l1, _, _ = model.forward(params, {"embeds": emb, "positions": pos3,
+                                      "labels": jnp.zeros((B, S), jnp.int32)})
+    assert l1.shape == (B, S, cfg.vocab)
+
+
+@pytest.mark.parametrize("arch_id", ["rwkv6-1.6b", "zamba2-2.7b"])
+def test_ssm_state_streaming_equivalence(arch_id):
+    """Processing [first half] then [second half with carried state] must
+    equal processing the full sequence (recurrence correctness)."""
+    cfg = get_config(arch_id).reduced()
+    model = build_model(cfg)
+    params = model.init(RNG)
+    B, S = 1, 16
+    toks = jax.random.randint(jax.random.PRNGKey(3), (B, S), 0, cfg.vocab)
+    full, _, _ = model.forward(params, {"tokens": toks}, remat=False)
+    # stream one token at a time through decode_step
+    caches = model.init_caches(B, S + 2)
+    outs = []
+    for t in range(S):
+        dl, caches = model.decode_step(
+            params, {"tokens": toks[:, t:t + 1], "pos": jnp.int32(t)}, caches)
+        outs.append(np.asarray(dl[:, 0], np.float32))
+    stream = np.stack(outs, axis=1)
+    np.testing.assert_allclose(stream, np.asarray(full, np.float32), rtol=0.15, atol=0.05)

@@ -1,0 +1,121 @@
+"""Hypothesis property tests on system invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dma import (allgather_schedule, alltoall_schedule, kv_fetch_schedule,
+                            mi300x_platform, simulate)
+from repro.data.pipeline import DataConfig, synth_batch
+from repro.models.layers import apply_rotary, rope_angles
+from repro.serve.kvcache import blocks_to_kv, kv_to_blocks
+from repro.train.checkpoint import restore_checkpoint, save_checkpoint
+
+TOPO = mi300x_platform()
+
+sizes = st.integers(min_value=1024, max_value=1 << 32)
+variants_ag = st.sampled_from(["pcpy", "bcst", "b2b", "prelaunch_pcpy",
+                               "prelaunch_bcst", "prelaunch_b2b"])
+variants_aa = st.sampled_from(["pcpy", "swap", "b2b", "prelaunch_swap"])
+
+
+@settings(max_examples=40, deadline=None)
+@given(size=sizes, v=variants_ag)
+def test_allgather_positive_finite_latency(size, v):
+    r = simulate(allgather_schedule(TOPO, size, v), TOPO)
+    assert 0 < r.latency < 10.0
+    for b in r.per_device.values():
+        assert b.control >= 0 and b.schedule >= 0 and b.copy >= 0 and b.sync >= 0
+
+
+@settings(max_examples=40, deadline=None)
+@given(size=sizes, v=variants_aa)
+def test_alltoall_traffic_conserved(size, v):
+    """Every ordered (src, dst) pair is served exactly once, any variant."""
+    sched = alltoall_schedule(TOPO, size, v)
+    pairs = set()
+    for q in sched.queues:
+        for c in q.data_commands:
+            src = c.src
+            for dst in c.dsts:
+                if c.kind.value == "swap":
+                    assert (src, dst) not in pairs and (dst, src) not in pairs
+                    pairs.add((src, dst))
+                    pairs.add((dst, src))
+                else:
+                    assert (src, dst) not in pairs
+                    pairs.add((src, dst))
+    n = TOPO.n_devices
+    assert len(pairs) == n * (n - 1)
+
+
+@settings(max_examples=30, deadline=None)
+@given(size=st.integers(min_value=1024, max_value=1 << 28), v=variants_ag)
+def test_prelaunch_never_slower(size, v):
+    if v.startswith("prelaunch"):
+        return
+    base = simulate(allgather_schedule(TOPO, size, v), TOPO).latency
+    pre = simulate(allgather_schedule(TOPO, size, f"prelaunch_{v}"), TOPO).latency
+    assert pre <= base
+
+
+@settings(max_examples=25, deadline=None)
+@given(n_blocks=st.integers(1, 512), block_bytes=st.integers(256, 1 << 22))
+def test_kv_fetch_b2b_fewer_signals_than_pcpy(n_blocks, block_bytes):
+    pcpy = kv_fetch_schedule(TOPO, n_blocks, block_bytes, "pcpy")
+    b2b = kv_fetch_schedule(TOPO, n_blocks, block_bytes, "b2b")
+    sig = lambda s: sum(q.n_signals for q in s.queues)
+    assert sig(b2b) <= sig(pcpy)
+    assert sig(pcpy) == n_blocks
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2 ** 31 - 1), step=st.integers(0, 1000))
+def test_data_pipeline_deterministic(seed, step):
+    cfg = DataConfig(vocab=1024, seq_len=64, batch=2, seed=seed)
+    a = synth_batch(cfg, step)["tokens"]
+    b = synth_batch(cfg, step)["tokens"]
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert int(jnp.max(a)) < 1024 and int(jnp.min(a)) >= 0
+
+
+@settings(max_examples=20, deadline=None)
+@given(s=st.integers(1, 64), kv=st.sampled_from([1, 2, 4]),
+       hd=st.sampled_from([8, 16]), layers=st.integers(1, 3),
+       bt=st.sampled_from([4, 16]))
+def test_kv_block_roundtrip(s, kv, hd, layers, bt):
+    rng = np.random.default_rng(0)
+    k = rng.normal(size=(layers, 1, s, kv, hd)).astype(np.float32)
+    v = rng.normal(size=(layers, 1, s, kv, hd)).astype(np.float32)
+    kb, vb = kv_to_blocks(k, v, bt)
+    k2, v2 = blocks_to_kv(kb, vb, s)
+    np.testing.assert_array_equal(k, k2)
+    np.testing.assert_array_equal(v, v2)
+
+
+@settings(max_examples=10, deadline=None)
+@given(hd=st.sampled_from([16, 32, 64]), s=st.integers(2, 32))
+def test_rotary_preserves_norm(hd, s):
+    x = jax.random.normal(jax.random.PRNGKey(s), (1, s, 2, hd))
+    pos = jnp.arange(s, dtype=jnp.int32)[None]
+    cos, sin = rope_angles(pos, hd, 10_000.0)
+    y = apply_rotary(x, cos, sin)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(y), axis=-1),
+        np.linalg.norm(np.asarray(x), axis=-1), rtol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(shapes=st.lists(st.tuples(st.integers(1, 5), st.integers(1, 5)),
+                       min_size=1, max_size=4),
+       seed=st.integers(0, 1 << 16))
+def test_checkpoint_roundtrip(tmp_path_factory, shapes, seed):
+    rng = np.random.default_rng(seed)
+    tree = {"a": [jnp.asarray(rng.normal(size=s).astype(np.float32)) for s in shapes],
+            "b": {"step": jnp.int32(seed % 97)}}
+    path = str(tmp_path_factory.mktemp("ckpt") / "t.npz")
+    save_checkpoint(path, tree)
+    restored = restore_checkpoint(path, tree)
+    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))

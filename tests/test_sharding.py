@@ -1,0 +1,100 @@
+"""Sharding rules: divisibility guards, spec inference over every arch's
+param tree, batch/cache specs."""
+import pytest
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config, get_shape
+from repro.launch.input_specs import input_specs
+from repro.models import build_model
+from repro.sharding.rules import (ShardingRules, batch_specs, cache_specs,
+                                  infer_param_specs)
+
+
+class FakeMesh:
+    """Duck-typed mesh exposing only .shape (axis sizes)."""
+
+    def __init__(self, shape: dict):
+        self.shape = shape
+
+
+RULES = ShardingRules(mesh=FakeMesh({"data": 16, "model": 16}), dp="data")
+RULES_MP = ShardingRules(mesh=FakeMesh({"pod": 2, "data": 16, "model": 16}),
+                         dp=("pod", "data"))
+
+
+def _axis_size(rules, axes):
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return rules.mesh.shape[axes]
+    n = 1
+    for a in axes:
+        n *= rules.mesh.shape[a]
+    return n
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+@pytest.mark.parametrize("rules", [RULES, RULES_MP], ids=["single", "multipod"])
+def test_param_specs_divisible(arch_id, rules):
+    """Every sharded dimension must divide the product of its mesh axes."""
+    cfg = get_config(arch_id)
+    model = build_model(cfg)
+    params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    specs = infer_param_specs(params_shape, cfg, rules)
+
+    def check(path, leaf, spec):
+        assert isinstance(spec, P)
+        assert len(spec) == len(leaf.shape), (path, spec, leaf.shape)
+        for dim, axes in zip(leaf.shape, spec):
+            if axes is not None:
+                assert dim % _axis_size(rules, axes) == 0, (path, spec, leaf.shape)
+
+    jax.tree_util.tree_map_with_path(check, params_shape, specs)
+
+
+def test_divisibility_fallback():
+    """Dims that don't divide the mesh axis fall back to replicated:
+    whisper's vocab (51865) is odd -> embedding must NOT be vocab-sharded,
+    while qwen2's 151936-vocab embedding IS sharded."""
+    for arch, embed_sharded in (("whisper-tiny", False), ("qwen2-0.5b", True)):
+        cfg = get_config(arch)
+        model = build_model(cfg)
+        ps = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        specs = infer_param_specs(ps, cfg, RULES)
+        if embed_sharded:
+            assert specs["embed"][0] == "model"
+        else:
+            assert specs["embed"][0] is None
+
+
+def test_moe_expert_parallel_vs_tp():
+    olmoe = get_config("olmoe-1b-7b")      # 64 experts % 16 == 0 -> EP
+    mix = get_config("mixtral-8x7b")       # 8 experts, not divisible -> TP
+    for cfg, expect_ep in ((olmoe, True), (mix, False)):
+        model = build_model(cfg)
+        ps = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        specs = infer_param_specs(ps, cfg, RULES)
+        wg = specs["blocks"][0]["moe"]["wg"]
+        if expect_ep:
+            assert wg[-3] == "model", wg
+        else:
+            assert wg[-3] is None and wg[-1] == "model", wg
+
+
+@pytest.mark.parametrize("shape_id", ["train_4k", "decode_32k", "long_500k"])
+def test_batch_and_cache_specs(shape_id):
+    cfg = get_config("mixtral-8x7b")
+    shape = get_shape(shape_id)
+    model = build_model(cfg)
+    specs = input_specs(cfg, shape, model)
+    bs = batch_specs(specs["batch"], cfg, shape, RULES)
+    if shape.global_batch >= 16:
+        assert bs["tokens"][0] == "data"
+    else:
+        assert bs["tokens"][0] is None
+    if specs["caches"] is not None:
+        cs = cache_specs(specs["caches"], cfg, shape, RULES)
+        leaves = jax.tree.leaves(cs, is_leaf=lambda x: isinstance(x, P))
+        assert all(isinstance(s, P) for s in leaves)

@@ -1,0 +1,74 @@
+"""End-to-end behaviour tests for the system: training learns, serving with
+host-cached KV matches prefill, the benchmark harness's claim set passes,
+and the dry-run lowers representative (arch x shape x mesh) combos."""
+import numpy as np
+
+import jax
+
+from repro.configs import get_config
+from repro.core.dma.claims import evaluate_claims
+from repro.data.pipeline import DataConfig, data_iterator
+from repro.models import build_model
+from repro.train.loop import train_loop
+from repro.train.optimizer import AdamWConfig
+
+
+def test_training_reduces_loss():
+    cfg = get_config("qwen2-0.5b").reduced()
+    model = build_model(cfg)
+    dc = DataConfig(vocab=cfg.vocab, seq_len=64, batch=4, seed=0)
+    _, hist = train_loop(model, data_iterator(dc), steps=40,
+                         opt_cfg=AdamWConfig(lr=1e-3, warmup_steps=5, total_steps=40),
+                         log_every=39)
+    assert hist[-1]["loss"] < hist[0]["loss"] - 0.5
+
+
+def test_all_paper_claims():
+    bad = [c for c in evaluate_claims() if not c.ok]
+    assert not bad, [c.name for c in bad]
+
+
+def test_serving_end_to_end():
+    cfg = get_config("deepseek-7b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    from repro.serve.engine import ServeEngine
+    eng = ServeEngine(model, params)
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab, (2, 32)).astype(np.int32)
+    miss = eng.generate(prompts, ["x", "y"], 5)
+    hit = eng.generate(prompts, ["x", "y"], 5, fetch_backend="b2b")
+    np.testing.assert_array_equal(miss.tokens, hit.tokens)
+    assert hit.request_stats[0].cache_hit
+
+
+DRYRUN_TEST = r"""
+from repro.launch.dryrun import run_one
+for arch, shape, mp in (("qwen2-0.5b", "train_4k", False),
+                        ("olmoe-1b-7b", "decode_32k", True),
+                        ("rwkv6-1.6b", "long_500k", False)):
+    r = run_one(arch, shape, multi_pod=mp, verbose=False)
+    assert r.status == "ok", (arch, shape, mp, r.reason)
+    assert r.flops > 0
+print("DRYRUN_OK")
+"""
+
+
+def test_dryrun_lowers_and_compiles(subproc):
+    out = subproc(DRYRUN_TEST, n_devices=512, timeout=900)
+    assert "DRYRUN_OK" in out
+
+
+DRYRUN_SKIP_TEST = r"""
+from repro.launch.dryrun import run_one
+r = run_one("deepseek-7b", "long_500k", verbose=False)
+assert r.status == "skipped", r.status
+r = run_one("mixtral-8x7b", "long_500k", verbose=False)
+assert r.status == "ok", r.reason   # SWA qualifies for long-context decode
+print("SKIP_OK")
+"""
+
+
+def test_dryrun_long_context_policy(subproc):
+    out = subproc(DRYRUN_SKIP_TEST, n_devices=512, timeout=900)
+    assert "SKIP_OK" in out
