@@ -14,15 +14,23 @@ def run(verbose: bool = True):
     topo = mi300x_platform()
     rc = rccl_ag_calibration()
     lat = {v: {} for v in VARIANTS}
+    util = {v: {} for v in VARIANTS}      # busiest-link wire utilization
     rccl = {}
     for s in ALL_SIZES:
         rccl[s] = rccl_collective_latency(topo, s, rc)
         for v in VARIANTS:
-            lat[v][s] = simulate(allgather_schedule(topo, s, v), topo).latency
+            sim = simulate(allgather_schedule(topo, s, v), topo)
+            lat[v][s] = sim.latency
+            links = [k for k in sim.busy if k.startswith("link:")]
+            util[v][s] = max((sim.utilization(k) for k in links), default=0.0)
     if verbose:
         print("size   " + "".join(f"{v:>16}" for v in VARIANTS) + "   (speedup vs RCCL)")
         for s in ALL_SIZES:
             print(f"{fmt_size(s):>5} " + "".join(f"{rccl[s]/lat[v][s]:16.2f}" for v in VARIANTS))
+        print("\nbusiest-link wire utilization (event timelines; non-copy "
+              "overhead is why latency-bound sizes sit far below 1.0):")
+        for s in (4096, 1 * MB, 256 * MB):
+            print(f"{fmt_size(s):>5} " + "".join(f"{util[v][s]:16.2f}" for v in VARIANTS))
 
     cc = ClaimChecker("fig13")
     sub1m = [s for s in SMALL_SIZES if s < 1 * MB]

@@ -11,7 +11,7 @@ olmoe-1b-7b geometry, fwd+bwd of one MoE layer.
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
+from repro.compat import shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import get_config

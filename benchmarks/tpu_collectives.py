@@ -7,7 +7,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import shard_map
+from repro.compat import make_mesh, shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.core import collectives as coll
@@ -16,7 +16,7 @@ from .common import ClaimChecker, time_us
 
 def run(verbose: bool = True):
     n = len(jax.devices())
-    mesh = jax.make_mesh((n,), ("x",), axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((n,), ("x",))
     x = jax.random.normal(jax.random.PRNGKey(0), (n * 8, 128), jnp.float32)
 
     def wrap(fn):
@@ -44,8 +44,12 @@ def run(verbose: bool = True):
         # structural accounting (steps ~ sync rounds on the critical path)
         steps_ring = n - 1
         steps_bidir = (n - 1 + 1) // 2
-        print(f"  ring steps={steps_ring}, bidirectional steps={steps_bidir} "
-              f"({steps_ring/steps_bidir:.1f}x fewer sync rounds — the bcst analogue)")
+        if steps_bidir:
+            print(f"  ring steps={steps_ring}, bidirectional steps={steps_bidir} "
+                  f"({steps_ring/steps_bidir:.1f}x fewer sync rounds — the bcst analogue)")
+        else:
+            print("  single-device mesh: run under XLA_FLAGS="
+                  "--xla_force_host_platform_device_count=N for ring timings")
     return cc, rows
 
 

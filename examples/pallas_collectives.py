@@ -23,6 +23,14 @@ import jax                      # noqa: E402
 import jax.numpy as jnp         # noqa: E402
 import numpy as np              # noqa: E402
 
+from jax.experimental.pallas import tpu as _pltpu   # noqa: E402
+if not hasattr(_pltpu, "InterpretParams"):
+    raise SystemExit(
+        "these remote-DMA kernels need real TPUs or the pallas TPU interpret "
+        "mode (jax >= 0.5); this jax's generic interpreter has no CPU "
+        "lowering for TPU semaphore primitives")
+
+from repro.compat import make_mesh                                 # noqa: E402
 from repro.kernels.ring_all_gather.ops import ring_all_gather      # noqa: E402
 from repro.kernels.ring_all_gather.ref import all_gather_ref       # noqa: E402
 from repro.kernels.ring_all_to_all.ops import pallas_all_to_all    # noqa: E402
@@ -31,7 +39,7 @@ from repro.kernels.ring_all_to_all.ref import all_to_all_ref       # noqa: E402
 
 def main():
     assert len(jax.devices()) == N
-    mesh = jax.make_mesh((N,), ("x",), axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((N,), ("x",))
     x = jax.random.normal(jax.random.PRNGKey(0), (N * 8, 128), jnp.float32)
     print("== Pallas ring all-gather (remote DMA) ==")
     for variant in ("pcpy", "b2b", "bcst", "bcst_b2b"):

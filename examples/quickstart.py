@@ -10,7 +10,7 @@ the local device mesh.
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import shard_map
+from repro.compat import make_mesh, shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.core.dma import (
@@ -42,7 +42,7 @@ def main():
 
     print("\n== latte collective == reference on the local mesh ==")
     n = len(jax.devices())
-    mesh = jax.make_mesh((n,), ("x",), axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((n,), ("x",))
     x = jax.random.normal(jax.random.PRNGKey(0), (n * 4, 32), jnp.float32)
     ring = jax.jit(shard_map(lambda a: coll.ring_all_gather(a, "x").reshape(-1, a.shape[-1]),
                              mesh=mesh, in_specs=P("x", None),

@@ -1,0 +1,77 @@
+"""Compatibility shims for the range of JAX versions this repo runs under.
+
+The repo targets the modern public API (``jax.shard_map``,
+``jax.make_mesh(..., axis_types=...)``, dict-valued ``cost_analysis``).
+Older releases (e.g. 0.4.x, which the container ships) expose the same
+functionality under different names/signatures:
+
+* ``shard_map`` lives in ``jax.experimental.shard_map`` and spells the
+  replication check ``check_rep`` instead of ``check_vma``.
+* ``jax.make_mesh`` has no ``axis_types`` parameter (and
+  ``jax.sharding.AxisType`` does not exist).
+* ``Compiled.cost_analysis()`` returns a one-element *list* of dicts
+  rather than a dict.
+
+Import from here instead of sprinkling try/excepts at every call site.
+"""
+from __future__ import annotations
+
+import jax
+
+try:  # jax >= 0.5: public top-level export
+    from jax import shard_map as _shard_map
+    _CHECK_KW = "check_vma"
+except ImportError:  # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _CHECK_KW = "check_rep"
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` with the new keyword spelling on every version."""
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **{_CHECK_KW: check_vma})
+
+
+def make_mesh(axis_shapes, axis_names, *, auto_axes: bool = True):
+    """``jax.make_mesh`` requesting Auto axis types where supported."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        try:
+            return jax.make_mesh(axis_shapes, axis_names,
+                                 axis_types=(axis_type.Auto,) * len(axis_names)
+                                 if auto_axes else None)
+        except TypeError:
+            pass
+    return jax.make_mesh(axis_shapes, axis_names)
+
+
+def axis_size(axis_name) -> int:
+    """``jax.lax.axis_size`` (older versions: ``psum(1, axis)`` constant-folds
+    to a concrete int inside shard_map)."""
+    fn = getattr(jax.lax, "axis_size", None)
+    if fn is not None:
+        return fn(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+def pltpu_compiler_params(**kwargs):
+    """``pltpu.CompilerParams`` (renamed from ``TPUCompilerParams``)."""
+    from jax.experimental.pallas import tpu as pltpu
+    cls = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+    return cls(**kwargs)
+
+
+def pltpu_interpret_mode():
+    """Value for ``pallas_call(interpret=...)`` requesting TPU interpret mode:
+    ``pltpu.InterpretParams()`` where it exists, plain ``True`` before that."""
+    from jax.experimental.pallas import tpu as pltpu
+    cls = getattr(pltpu, "InterpretParams", None)
+    return cls() if cls is not None else True
+
+
+def cost_analysis_dict(compiled) -> dict:
+    """``Compiled.cost_analysis()`` normalized to a flat dict on every version."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca) if ca else {}

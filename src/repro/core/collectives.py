@@ -19,10 +19,12 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.compat import axis_size
+
 
 def ring_all_gather(x: jax.Array, axis_name: str) -> jax.Array:
     """b2b analogue.  x: local shard -> [n, *x.shape] gathered (stacked)."""
-    n = jax.lax.axis_size(axis_name)
+    n = axis_size(axis_name)
     idx = jax.lax.axis_index(axis_name)
     perm = [(i, (i + 1) % n) for i in range(n)]
     chunks = [x]
@@ -37,7 +39,7 @@ def ring_all_gather(x: jax.Array, axis_name: str) -> jax.Array:
 
 def bidir_ring_all_gather(x: jax.Array, axis_name: str) -> jax.Array:
     """bcst analogue: both directions each step, ceil((n-1)/2) steps."""
-    n = jax.lax.axis_size(axis_name)
+    n = axis_size(axis_name)
     idx = jax.lax.axis_index(axis_name)
     fwd_perm = [(i, (i + 1) % n) for i in range(n)]
     bwd_perm = [(i, (i - 1) % n) for i in range(n)]
@@ -62,7 +64,7 @@ def pairwise_all_to_all(x: jax.Array, axis_name: str) -> jax.Array:
     Round r exchanges chunk x[idx^r] with partner idx^r (n power of two), a
     symmetric in-place pairwise swap; falls back to rotation pairing else.
     """
-    n = jax.lax.axis_size(axis_name)
+    n = axis_size(axis_name)
     idx = jax.lax.axis_index(axis_name)
     assert x.shape[0] == n
     power_of_two = (n & (n - 1)) == 0

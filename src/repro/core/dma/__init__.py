@@ -1,14 +1,17 @@
-"""DMA-Latte core: command set, engine timing model, collective schedules,
-dispatch policy, RCCL baseline and power models (the paper's contribution)."""
+"""DMA-Latte core: command set, event-driven engine simulator, collective
+schedules, dispatch policy, RCCL baseline and power models (the paper's
+contribution)."""
 from . import commands
 from .commands import CmdKind, Command, EngineQueue, Schedule
 from .collectives import allgather_schedule, alltoall_schedule, kv_fetch_schedule
 from .dispatch import (
     PAPER_AA_DISPATCH,
     PAPER_AG_DISPATCH,
+    candidate_variants,
     derive_dispatch,
     paper_dispatch,
     pick_variant,
+    variant_latency,
 )
 from .engine import PhaseBreakdown, SimResult, simulate, single_copy_breakdown
 from .power import cu_collective_power, dma_collective_power
@@ -27,8 +30,8 @@ from .topology import (
 __all__ = [
     "commands", "CmdKind", "Command", "EngineQueue", "Schedule",
     "allgather_schedule", "alltoall_schedule", "kv_fetch_schedule",
-    "PAPER_AA_DISPATCH", "PAPER_AG_DISPATCH", "derive_dispatch",
-    "paper_dispatch", "pick_variant",
+    "PAPER_AA_DISPATCH", "PAPER_AG_DISPATCH", "candidate_variants",
+    "derive_dispatch", "paper_dispatch", "pick_variant", "variant_latency",
     "PhaseBreakdown", "SimResult", "simulate", "single_copy_breakdown",
     "cu_collective_power", "dma_collective_power",
     "kernel_copy_latency", "rccl_collective_latency",

@@ -7,7 +7,7 @@ import dataclasses
 import math
 
 from . import collectives as C
-from .dispatch import paper_dispatch
+from .dispatch import paper_dispatch, variant_latency
 from .engine import simulate, single_copy_breakdown
 from .power import cu_collective_power, dma_collective_power
 from .rccl_model import rccl_collective_latency
@@ -32,8 +32,7 @@ def geomean(xs) -> float:
 
 
 def dma_latency(topo: Topology, collective: str, size: int, variant: str) -> float:
-    builder = C.allgather_schedule if collective == "all_gather" else C.alltoall_schedule
-    return simulate(builder(topo, size, variant), topo).latency
+    return variant_latency(topo, collective, size, variant)
 
 
 def rccl_latency(topo: Topology, collective: str, size: int) -> float:

@@ -12,6 +12,20 @@ Each builder turns (topology, collective size, variant) into an explicit
 * ``prelaunch_<v>`` — any of the above with queues armed ahead of time behind
   a ``poll`` command (Fig. 12).
 
+Topology awareness (DESIGN.md §3): on a non-fully-connected topology the
+direct variants above still build the same queue shapes — the simulator
+routes each transfer over the torus (multi-hop, contended links).  Two
+additional *neighbor-only* variants render the JAX ``ring``/``bidir_ring``
+collectives of :mod:`repro.core.collectives` as explicit schedules with real
+cross-device dependencies (``wait`` on the predecessor's tagged signal):
+
+* ``ring``       — unidirectional ring over :meth:`Topology.ring_order`,
+  chained on ONE engine; all-gather forwards the received shard each step,
+  all-to-all uses the rotation algorithm (step ``r`` forwards the ``n-1-r``
+  chunks still in transit).
+* ``bidir_ring`` — all-gather only: both directions per step (the step-0
+  send is a single-read ``bcst`` feeding both neighbors), halving steps.
+
 Size convention: ``size`` is the collective's *total message size* as in the
 paper's figures (1KB–4GB).  Each device's per-peer shard is ``size / n``.
 """
@@ -21,8 +35,8 @@ from . import commands as cmd
 from .commands import EngineQueue, Schedule
 from .topology import Topology
 
-AG_VARIANTS = ("pcpy", "bcst", "b2b")
-AA_VARIANTS = ("pcpy", "swap", "b2b")
+AG_VARIANTS = ("pcpy", "bcst", "b2b", "ring", "bidir_ring")
+AA_VARIANTS = ("pcpy", "swap", "b2b", "ring")
 
 
 def _maybe_prelaunch(queues: list[EngineQueue], prelaunch: bool) -> tuple[EngineQueue, ...]:
@@ -47,6 +61,91 @@ def parse_variant(variant: str) -> tuple[str, bool]:
     return variant, False
 
 
+def _ring_neighbors(topo: Topology) -> dict[int, tuple[int, int]]:
+    """device -> (predecessor, successor) along the topology's ring embedding."""
+    order = topo.ring_order()
+    n = len(order)
+    return {order[i]: (order[(i - 1) % n], order[(i + 1) % n]) for i in range(n)}
+
+
+def _ring_closes_on_neighbors(topo: Topology) -> bool:
+    """True when every consecutive ring_order pair (incl. the wraparound) is a
+    single physical link.  On odd-by-odd torus grids the snake ring's
+    wraparound is multi-hop, which makes the devices asymmetric — such rings
+    must run the full simulation, not the symmetric fast path."""
+    order = topo.ring_order()
+    n = len(order)
+    return all(topo.is_neighbor(order[i], order[(i + 1) % n]) for i in range(n))
+
+
+def _ring_ag_queues(topo: Topology, shard: int) -> list[EngineQueue]:
+    """Unidirectional ring all-gather: n-1 chained forward steps per device."""
+    n = topo.n_devices
+    queues = []
+    for d, (pred, succ) in _ring_neighbors(topo).items():
+        cs: list[cmd.Command] = []
+        for k in range(n - 1):
+            if k > 0:
+                cs.append(cmd.wait(("ag", pred, k - 1)))
+            cs.append(cmd.copy(d, succ, shard))
+            cs.append(cmd.signal(("ag", d, k)))
+        cs.append(cmd.signal())
+        queues.append(EngineQueue(d, 0, tuple(cs)))
+    return queues
+
+
+def _bidir_ring_ag_queues(topo: Topology, shard: int) -> list[EngineQueue]:
+    """Bidirectional ring all-gather: ceil((n-1)/2) forward + floor((n-1)/2)
+    backward steps; the step-0 send reads the local shard ONCE for both
+    directions (a bcst command)."""
+    n = topo.n_devices
+    n_fwd = (n - 1 + 1) // 2
+    n_bwd = (n - 1) - n_fwd
+    queues = []
+    for d, (pred, succ) in _ring_neighbors(topo).items():
+        fwd: list[cmd.Command] = []
+        if n == 2:
+            fwd.append(cmd.copy(d, succ, shard))
+        else:
+            fwd.append(cmd.bcst(d, succ, pred, shard))
+        fwd.append(cmd.signal(("agf", d, 0)))
+        if n_bwd > 0 and n > 2:
+            fwd.append(cmd.signal(("agb", d, 0)))
+        for k in range(1, n_fwd):
+            fwd.append(cmd.wait(("agf", pred, k - 1)))
+            fwd.append(cmd.copy(d, succ, shard))
+            fwd.append(cmd.signal(("agf", d, k)))
+        fwd.append(cmd.signal())
+        queues.append(EngineQueue(d, 0, tuple(fwd)))
+
+        if n_bwd > 0 and n > 2:
+            bwd: list[cmd.Command] = []
+            for k in range(1, n_bwd + 1):
+                bwd.append(cmd.wait(("agb", succ, k - 1)))
+                bwd.append(cmd.copy(d, pred, shard))
+                bwd.append(cmd.signal(("agb", d, k)))
+            bwd.append(cmd.signal())
+            queues.append(EngineQueue(d, 1, tuple(bwd)))
+    return queues
+
+
+def _ring_aa_queues(topo: Topology, shard: int) -> list[EngineQueue]:
+    """Rotation ring all-to-all: every chunk moves one hop per round until it
+    reaches its destination, so round r forwards n-1-r chunks."""
+    n = topo.n_devices
+    queues = []
+    for d, (pred, succ) in _ring_neighbors(topo).items():
+        cs: list[cmd.Command] = []
+        for r in range(n - 1):
+            if r > 0:
+                cs.append(cmd.wait(("aar", pred, r - 1)))
+            cs.append(cmd.copy(d, succ, (n - 1 - r) * shard))
+            cs.append(cmd.signal(("aar", d, r)))
+        cs.append(cmd.signal())
+        queues.append(EngineQueue(d, 0, tuple(cs)))
+    return queues
+
+
 def allgather_schedule(topo: Topology, size: int, variant: str = "pcpy") -> Schedule:
     """All-gather: every device sends its shard (size/n) to all n-1 peers."""
     base, prelaunch = parse_variant(variant)
@@ -55,12 +154,15 @@ def allgather_schedule(topo: Topology, size: int, variant: str = "pcpy") -> Sche
     n = topo.n_devices
     shard = max(1, size // n)
     queues: list[EngineQueue] = []
-    for d in range(n):
-        peers = [p for p in range(n) if p != d]
-        if base == "pcpy":
-            for e, p in enumerate(peers):
+    symmetric = True
+    if base == "pcpy":
+        for d in range(n):
+            for e, p in enumerate(x for x in range(n) if x != d):
                 queues.append(EngineQueue(d, e, (cmd.copy(d, p, shard), cmd.signal())))
-        elif base == "bcst":
+        symmetric = topo.fully_connected
+    elif base == "bcst":
+        for d in range(n):
+            peers = [p for p in range(n) if p != d]
             e = 0
             it = iter(peers)
             for a in it:
@@ -70,10 +172,20 @@ def allgather_schedule(topo: Topology, size: int, variant: str = "pcpy") -> Sche
                 else:
                     queues.append(EngineQueue(d, e, (cmd.bcst(d, a, b, shard), cmd.signal())))
                 e += 1
-        elif base == "b2b":
-            copies = tuple(cmd.copy(d, p, shard) for p in peers)
+        symmetric = topo.fully_connected
+    elif base == "b2b":
+        for d in range(n):
+            copies = tuple(cmd.copy(d, p, shard) for p in range(n) if p != d)
             queues.append(EngineQueue(d, 0, copies + (cmd.signal(),)))
-    return Schedule(name=f"ag_{variant}", queues=_maybe_prelaunch(queues, prelaunch))
+        symmetric = topo.fully_connected
+    elif base == "ring":
+        queues = _ring_ag_queues(topo, shard)
+        symmetric = _ring_closes_on_neighbors(topo)
+    else:  # bidir_ring
+        queues = _bidir_ring_ag_queues(topo, shard)
+        symmetric = _ring_closes_on_neighbors(topo)
+    return Schedule(name=f"ag_{variant}", queues=_maybe_prelaunch(queues, prelaunch),
+                    symmetric=symmetric)
 
 
 def alltoall_schedule(topo: Topology, size: int, variant: str = "pcpy") -> Schedule:
@@ -89,7 +201,11 @@ def alltoall_schedule(topo: Topology, size: int, variant: str = "pcpy") -> Sched
     n = topo.n_devices
     shard = max(1, size // n)
     queues: list[EngineQueue] = []
+    symmetric = True
     if base == "swap":
+        # Executor assignment alternates per pair -> devices run different
+        # command counts, so this schedule is never symmetric.
+        symmetric = False
         per_dev_engine = {d: 0 for d in range(n)}
         for i in range(n):
             for j in range(i + 1, n):
@@ -98,7 +214,11 @@ def alltoall_schedule(topo: Topology, size: int, variant: str = "pcpy") -> Sched
                 e = per_dev_engine[executor]
                 per_dev_engine[executor] += 1
                 queues.append(EngineQueue(executor, e, (cmd.swap(executor, partner, shard), cmd.signal())))
+    elif base == "ring":
+        queues = _ring_aa_queues(topo, shard)
+        symmetric = _ring_closes_on_neighbors(topo)
     else:
+        symmetric = topo.fully_connected
         for d in range(n):
             peers = [p for p in range(n) if p != d]
             if base == "pcpy":
@@ -107,7 +227,8 @@ def alltoall_schedule(topo: Topology, size: int, variant: str = "pcpy") -> Sched
             else:  # b2b
                 copies = tuple(cmd.copy(d, p, shard) for p in peers)
                 queues.append(EngineQueue(d, 0, copies + (cmd.signal(),)))
-    return Schedule(name=f"aa_{variant}", queues=_maybe_prelaunch(queues, prelaunch))
+    return Schedule(name=f"aa_{variant}", queues=_maybe_prelaunch(queues, prelaunch),
+                    symmetric=symmetric)
 
 
 def kv_fetch_schedule(

@@ -6,12 +6,25 @@ phase), the engine executes copies (copy phase) and raises completion signals
 (sync phase). The novel commands — ``bcst`` (one source, two destinations),
 ``swap`` (in-place exchange) and ``poll`` (pre-launch trigger) — are the
 hitherto-untapped features the paper exploits (Table 1).
+
+Cross-device dependencies (DESIGN.md §2): a ``signal`` may carry a *tag*
+``(name, device, step)``; a ``wait`` command blocks its engine until the
+tagged signal has been raised (plus the remote-observation latency).  Tagged
+signals are engine-to-engine semaphores and are NOT observed by the host;
+untagged signals are the host-observed completion signals of the original
+model.  Ring/torus schedules are built from these so that step *k* is timed
+from the real arrival of step *k-1*'s data rather than assumed overlap.
 """
 from __future__ import annotations
 
 import dataclasses
 import enum
 from typing import Sequence
+
+# A signal/wait tag: (name, producer device, step). Waits name the exact
+# producer; the symmetric fast path rewrites the producer to the
+# representative device (DESIGN.md §6).
+Tag = tuple
 
 
 class CmdKind(enum.Enum):
@@ -20,6 +33,7 @@ class CmdKind(enum.Enum):
     SWAP = "swap"          # exchange contents of two buffers (in-place)
     POLL = "poll"          # wait until *location* satisfies a condition (prelaunch)
     SIGNAL = "signal"      # atomic inc/dec of a 64b completion signal
+    WAIT = "wait"          # block engine until a tagged signal was raised
 
 
 @dataclasses.dataclass(frozen=True)
@@ -28,13 +42,16 @@ class Command:
 
     ``src``/``dsts`` are device ids (or "host").  ``size`` is bytes moved per
     destination.  A ``swap`` moves ``size`` bytes in each direction between
-    ``src`` and ``dsts[0]``.  ``poll``/``signal`` carry no payload.
+    ``src`` and ``dsts[0]``.  ``poll``/``signal``/``wait`` carry no payload.
+    ``tag`` names the semaphore a ``signal`` raises / a ``wait`` blocks on;
+    a tagged signal is engine-scope (not host-observed).
     """
 
     kind: CmdKind
     src: int | str | None = None
     dsts: tuple[int | str, ...] = ()
     size: int = 0
+    tag: Tag | None = None
 
     def __post_init__(self) -> None:
         if self.kind is CmdKind.COPY and len(self.dsts) != 1:
@@ -43,6 +60,8 @@ class Command:
             raise ValueError("bcst needs exactly two destinations")
         if self.kind is CmdKind.SWAP and len(self.dsts) != 1:
             raise ValueError("swap needs exactly one partner")
+        if self.kind is CmdKind.WAIT and self.tag is None:
+            raise ValueError("wait needs a tag to block on")
         if self.size < 0:
             raise ValueError("negative size")
 
@@ -98,8 +117,17 @@ def poll() -> Command:
     return Command(CmdKind.POLL)
 
 
-def signal() -> Command:
-    return Command(CmdKind.SIGNAL)
+def signal(tag: Tag | None = None) -> Command:
+    """Untagged: host-observed completion signal. Tagged: engine semaphore."""
+    return Command(CmdKind.SIGNAL, tag=tag)
+
+
+def wait(tag: Tag) -> Command:
+    """Block the engine until the tagged signal has been raised."""
+    return Command(CmdKind.WAIT, tag=tag)
+
+
+DATA_KINDS = (CmdKind.COPY, CmdKind.BCST, CmdKind.SWAP)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -117,19 +145,28 @@ class EngineQueue:
 
     @property
     def data_commands(self) -> tuple[Command, ...]:
-        return tuple(c for c in self.commands if c.kind in (CmdKind.COPY, CmdKind.BCST, CmdKind.SWAP))
+        return tuple(c for c in self.commands if c.kind in DATA_KINDS)
 
     @property
     def n_signals(self) -> int:
-        return sum(1 for c in self.commands if c.kind is CmdKind.SIGNAL)
+        """Host-observed completion signals (tagged signals are engine-scope)."""
+        return sum(1 for c in self.commands
+                   if c.kind is CmdKind.SIGNAL and c.tag is None)
 
 
 @dataclasses.dataclass(frozen=True)
 class Schedule:
-    """A full offload schedule: every engine queue across all devices."""
+    """A full offload schedule: every engine queue across all devices.
+
+    ``symmetric`` is the builder's promise that every device runs the same
+    program modulo device relabeling AND that no two devices contend for the
+    same directed link — which lets the simulator run one representative
+    device and replicate the result (DESIGN.md §6).
+    """
 
     name: str
     queues: tuple[EngineQueue, ...]
+    symmetric: bool = False
 
     def queues_for(self, device: int) -> list[EngineQueue]:
         return [q for q in self.queues if q.device == device]

@@ -1,11 +1,17 @@
 """Size-range dispatch policy — the paper's Tables 2 & 3, plus a derived
 policy that re-discovers the thresholds from the timing model (used both to
 validate the model against the paper and to re-derive thresholds for the TPU
-topology used by the JAX-level latte collectives).
+topology used by the JAX-level latte collectives, DESIGN.md §4/§5).
+
+Simulation results are memoized: :func:`variant_latency` caches every
+(topology, collective, size, variant) point and :func:`derive_dispatch`
+caches whole argmin sweeps, so repeated claim evaluations and dispatch-table
+derivations in one process pay for each simulation once.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Callable
 
 from .collectives import allgather_schedule, alltoall_schedule
@@ -48,29 +54,39 @@ class DispatchEntry:
     variant: str
 
 
-def derive_dispatch(
-    topo: Topology,
-    collective: str,
-    sizes: list[int],
-    *,
-    allow_prelaunch: bool = True,
-) -> list[DispatchEntry]:
-    """Re-derive the best variant per size from the timing model (argmin).
-
-    Adjacent sizes with the same winner are merged into ranges, which should
-    approximately reproduce Tables 2/3 on the MI300X topology (validated in
-    tests/benchmarks) and gives the policy for the TPU topology.
-    """
+@functools.lru_cache(maxsize=65536)
+def variant_latency(topo: Topology, collective: str, size: int, variant: str) -> float:
+    """Memoized end-to-end latency of one (collective, size, variant) point."""
     builder: Callable = allgather_schedule if collective == "all_gather" else alltoall_schedule
+    return simulate(builder(topo, size, variant), topo).latency
+
+
+def candidate_variants(topo: Topology, collective: str, *, allow_prelaunch: bool = True) -> list[str]:
+    """Variants an argmin sweep should consider on this topology."""
     variants = ["pcpy", "b2b", "bcst" if collective == "all_gather" else "swap"]
+    if not topo.fully_connected:
+        variants.append("ring")
+        if collective == "all_gather":
+            variants.append("bidir_ring")
     if allow_prelaunch:
         variants += [f"prelaunch_{v}" for v in list(variants)]
+    return variants
+
+
+@functools.lru_cache(maxsize=256)
+def _derive_dispatch_cached(
+    topo: Topology,
+    collective: str,
+    sizes: tuple[int, ...],
+    allow_prelaunch: bool,
+) -> tuple[DispatchEntry, ...]:
+    variants = candidate_variants(topo, collective, allow_prelaunch=allow_prelaunch)
 
     winners: list[tuple[int, str]] = []
     for size in sizes:
         best, best_t = None, float("inf")
         for v in variants:
-            t = simulate(builder(topo, size, v), topo).latency
+            t = variant_latency(topo, collective, size, v)
             if t < best_t:
                 best, best_t = v, t
         winners.append((size, best))
@@ -83,7 +99,24 @@ def derive_dispatch(
             if entries:
                 entries[-1] = DispatchEntry(entries[-1].lo, size, entries[-1].variant)
             entries.append(DispatchEntry(size, None, v))
-    return entries
+    return tuple(entries)
+
+
+def derive_dispatch(
+    topo: Topology,
+    collective: str,
+    sizes: list[int],
+    *,
+    allow_prelaunch: bool = True,
+) -> list[DispatchEntry]:
+    """Re-derive the best variant per size from the timing model (argmin).
+
+    Adjacent sizes with the same winner are merged into ranges, which should
+    approximately reproduce Tables 2/3 on the MI300X topology (validated in
+    tests/benchmarks) and gives the policy for the TPU topology.  Sweeps are
+    memoized per (topology, collective, sizes, allow_prelaunch).
+    """
+    return list(_derive_dispatch_cached(topo, collective, tuple(sizes), allow_prelaunch))
 
 
 def pick_variant(entries: list[DispatchEntry], size: int) -> str:

@@ -1,203 +1,14 @@
-"""Discrete-event timing model of DMA offload execution (paper §3, Fig. 6/7).
+"""Compatibility façade over the event-driven simulator core.
 
-Executes a :class:`~repro.core.dma.commands.Schedule` on a
-:class:`~repro.core.dma.topology.Topology` and returns the per-phase latency
-breakdown.  The four phases of a DMA offload:
+The timing model used to live here as a closed-form per-device formula; it is
+now the discrete-event simulator in :mod:`repro.core.dma.sim` (contended
+links/engines/host, multi-hop routing, cross-device waits, symmetric fast
+path — see DESIGN.md §2).  This module keeps the historical import surface:
 
-  control  — CPU creates + enqueues command packets (serial on the host)
-  schedule — doorbell rings (serial on the host) + engine wake/fetch
-  copy     — decode, address translation, reads/writes over the fabric
-  sync     — completion signals (engine atomic + host observation)
-
-Back-to-back overlap (§4.4): data commands queued on a single engine pipeline
-their issue (``b2b_issue`` per extra command) and their wire time overlaps
-across distinct links, bounded by the engine's streaming bandwidth.
-
-Prelaunch (§4.5): queues that begin with a ``poll`` are armed ahead of time;
-control+schedule leave the critical path and are replaced by the poll-trigger
-observation latency.
+    from repro.core.dma.engine import PhaseBreakdown, SimResult, simulate
 """
 from __future__ import annotations
 
-import dataclasses
-from collections import defaultdict
+from .sim import PhaseBreakdown, SimResult, simulate, single_copy_breakdown
 
-from .commands import CmdKind, Command, EngineQueue, Schedule
-from .topology import Topology
-
-
-@dataclasses.dataclass(frozen=True)
-class PhaseBreakdown:
-    control: float
-    schedule: float
-    copy: float
-    sync: float
-
-    @property
-    def total(self) -> float:
-        return self.control + self.schedule + self.copy + self.sync
-
-    @property
-    def noncopy_fraction(self) -> float:
-        t = self.total
-        return 0.0 if t == 0 else (t - self.copy) / t
-
-    def as_dict(self) -> dict[str, float]:
-        return {
-            "control": self.control,
-            "schedule": self.schedule,
-            "copy": self.copy,
-            "sync": self.sync,
-            "total": self.total,
-        }
-
-
-@dataclasses.dataclass(frozen=True)
-class SimResult:
-    latency: float                       # collective completion (max over devices)
-    per_device: dict[int, PhaseBreakdown]
-    engines_used: dict[int, int]
-    hbm_bytes: dict[int, int]            # local HBM traffic per device (power model)
-
-    @property
-    def breakdown(self) -> PhaseBreakdown:
-        """Breakdown of the critical-path device."""
-        return max(self.per_device.values(), key=lambda b: b.total)
-
-
-def _link_key(device: int | str, peer: int | str) -> tuple:
-    a, b = str(device), str(peer)
-    return (a, b) if a <= b else (b, a)
-
-
-def _queue_copy_time(q: EngineQueue, topo: Topology, shared_host_link_bytes: float) -> float:
-    """Elapsed copy-phase time for one engine queue.
-
-    Wire time: per-link traffic is serialized on each link; traffic on
-    distinct links overlaps (b2b); the engine itself bounds total streaming
-    at ``engine_bw``.  Host-link traffic additionally contends with other
-    engines' host traffic (``shared_host_link_bytes`` is the device's total).
-    """
-    c = topo.calib
-    data = q.data_commands
-    if not data:
-        return 0.0
-
-    setup = c.copy_setup + c.b2b_issue * (len(data) - 1)
-
-    link_bytes: dict[tuple, float] = defaultdict(float)
-    engine_stream = 0.0
-    uses_host_link = False
-    for cmd in data:
-        per_dst = cmd.size
-        for dst in cmd.dsts:
-            if dst == "host" or cmd.src == "host":
-                uses_host_link = True
-            else:
-                link_bytes[_link_key(cmd.src, dst)] += per_dst
-        # Engine streaming bound: max(read, write) volume it must push.
-        # A swap moves BOTH directions through the executing engine (2x) —
-        # which is why swap does not improve link utilization (Table 1) and
-        # pcpy overtakes it at bandwidth-bound sizes (§5.2.6).
-        if cmd.kind is CmdKind.SWAP:
-            engine_stream += 2 * cmd.size
-        else:
-            engine_stream += max(cmd.local_read_bytes, cmd.remote_write_bytes)
-
-    eff = c.dma_link_efficiency
-    per_link = max(link_bytes.values()) / (topo.link_bw * eff) if link_bytes else 0.0
-    if uses_host_link:
-        # All engines of a device share one host (PCIe) link.
-        per_link = max(per_link, shared_host_link_bytes / (topo.host_link_bw * eff))
-    engine_bound = engine_stream / c.engine_bw
-    return setup + max(per_link, engine_bound)
-
-
-def _device_host_link_bytes(queues: list[EngineQueue]) -> float:
-    tot = 0.0
-    for q in queues:
-        for cmd in q.data_commands:
-            if cmd.src == "host" or any(d == "host" for d in cmd.dsts):
-                tot += cmd.size * max(1, len([d for d in cmd.dsts]))
-    return tot
-
-
-def _device_hbm_bytes(queues: list[EngineQueue]) -> int:
-    """Local-HBM traffic generated by this device's outbound commands.
-
-    Incoming writes are attributed by the collective-level wrapper (the
-    schedule is symmetric so local accounting suffices for relative power).
-    """
-    tot = 0
-    for q in queues:
-        for cmd in q.data_commands:
-            tot += cmd.local_read_bytes
-    return tot
-
-
-def simulate(schedule: Schedule, topo: Topology) -> SimResult:
-    per_device: dict[int, PhaseBreakdown] = {}
-    engines_used: dict[int, int] = {}
-    hbm: dict[int, int] = {}
-
-    for dev in schedule.devices:
-        queues = schedule.queues_for(dev)
-        c = topo.calib
-        n_cmds = sum(len(q.commands) for q in queues)
-        host_bytes = _device_host_link_bytes(queues)
-
-        live = [q for q in queues if not q.prelaunched]
-        pre = [q for q in queues if q.prelaunched]
-
-        # --- control: serial CPU packet creation (live queues only) ---
-        t_control = sum(len(q.commands) for q in live) * c.control
-
-        # --- schedule: serial doorbells + parallel engine fetch ---
-        # Prelaunched queues are already resident on their engines; they start
-        # when the trigger write is observed by the poll.
-        engine_start: dict[int, float] = {}
-        t = t_control
-        for i, q in enumerate(live):
-            t_doorbell = t_control + (i + 1) * c.doorbell
-            engine_start[id(q)] = t_doorbell + c.fetch
-        for q in pre:
-            engine_start[id(q)] = c.poll_trigger
-        sched_end = max(engine_start.values()) if engine_start else t_control
-
-        # --- copy ---
-        copy_end: dict[int, float] = {}
-        for q in queues:
-            copy_end[id(q)] = engine_start[id(q)] + _queue_copy_time(q, topo, host_bytes)
-        copy_end_max = max(copy_end.values()) if copy_end else sched_end
-
-        # --- sync: engine-side signal + serial host observation ---
-        n_signals = sum(q.n_signals for q in queues)
-        signal_done = max(
-            (copy_end[id(q)] + (c.sync_engine if q.n_signals else 0.0) for q in queues),
-            default=copy_end_max,
-        )
-        total = signal_done + n_signals * c.sync_obs
-
-        per_device[dev] = PhaseBreakdown(
-            control=t_control,
-            schedule=max(0.0, sched_end - t_control),
-            copy=max(0.0, copy_end_max - sched_end),
-            sync=max(0.0, total - copy_end_max),
-        )
-        engines_used[dev] = len({q.engine for q in queues})
-        hbm[dev] = _device_hbm_bytes(queues)
-
-    latency = max(b.total for b in per_device.values())
-    return SimResult(latency=latency, per_device=per_device, engines_used=engines_used, hbm_bytes=hbm)
-
-
-def single_copy_breakdown(size: int, topo: Topology, *, prelaunch: bool = False) -> PhaseBreakdown:
-    """Fig. 7: phase breakdown of one GPU-to-GPU copy of ``size`` bytes."""
-    from . import commands as cmd
-
-    cmds = (cmd.copy(0, 1, size), cmd.signal())
-    if prelaunch:
-        cmds = (cmd.poll(),) + cmds
-    q = EngineQueue(device=0, engine=0, commands=cmds, prelaunched=prelaunch)
-    res = simulate(Schedule(name="single_copy", queues=(q,)), topo)
-    return res.per_device[0]
+__all__ = ["PhaseBreakdown", "SimResult", "simulate", "single_copy_breakdown"]

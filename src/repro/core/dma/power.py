@@ -46,9 +46,13 @@ def dma_collective_power(
     # HBM traffic: local reads (tracked) + symmetric incoming writes.
     gbps = 2 * sim.hbm_bytes[dev] / lat / 1e9
     u = _utilization(size)
+    # Link/SerDes power tracks the ACTUAL wire-busy intervals recorded by the
+    # event simulator, not the nominal message size: an idle link waiting on
+    # control/sync draws (almost) nothing.
+    link_gbps = sim.link_busy_seconds(dev) / lat * topo.link_bw / 1e9
     return PowerReport(
         xcd=c.xcd_dma_collective * (0.5 + 0.5 * u),
-        iod=c.iod_per_engine * engines,
+        iod=c.iod_per_engine * engines + c.link_per_busy_gbps * link_gbps,
         hbm=c.hbm_static + c.hbm_per_gbps * gbps,
         idle=c.idle,
     )

@@ -1,0 +1,348 @@
+"""Event-driven simulator of DMA offload execution (paper §3, Fig. 6/7).
+
+Executes a :class:`~repro.core.dma.commands.Schedule` on a
+:class:`~repro.core.dma.topology.Topology`.  Unlike the original closed-form
+per-device model, every shared piece of hardware is a *contended resource*
+with an explicit busy timeline (DESIGN.md §2):
+
+  host CPU     — serial: command-packet creation, doorbell MMIO writes,
+                 completion-signal observation.
+  engine       — per-(device, engine) streaming capacity: a queue's data
+                 commands stream through it back-to-back at ``engine_bw``.
+  link         — per *directed* peer link: wire time serializes on each link;
+                 transfers on distinct links overlap.  Multi-hop routes
+                 (non-fully-connected topologies) occupy every link on the
+                 path, staggered by the per-hop router latency (cut-through).
+  host link    — the PCIe link, one directed resource per device/direction,
+                 shared by all of that device's engines.
+
+Cross-device dependencies: a ``wait`` command blocks its engine until the
+named tagged signal was raised by its producer (plus ``poll_trigger`` remote
+observation latency), so ring/torus schedules are timed from real signal
+arrival rather than assumed overlap.
+
+The four reported phases keep the paper's meaning (``PhaseBreakdown`` is the
+stable reporting surface):
+
+  control  — CPU creates + enqueues command packets (serial on the host)
+  schedule — doorbell rings (serial on the host) + engine wake/fetch
+  copy     — decode, address translation, reads/writes over the fabric
+             (wait-for-neighbor time lands here)
+  sync     — completion signals (engine atomic + host observation; the host
+             drains its signal set serially once the last signal landed)
+
+Back-to-back overlap (§4.4): data commands queued on a single engine pipeline
+their issue (``b2b_issue`` per extra command) and their wire time overlaps
+across distinct links, bounded by the engine's streaming bandwidth.
+
+Prelaunch (§4.5): queues that begin with a ``poll`` are armed ahead of time;
+control+schedule leave the critical path and are replaced by the poll-trigger
+observation latency.
+
+Symmetric fast path (DESIGN.md §6): schedules whose builder marked them
+``symmetric`` simulate ONE representative device — waits on a neighbor's
+tagged signal resolve, by translation invariance, to the representative's own
+signal of the same (name, step) — and replicate the breakdown.  This is
+bit-identical to the full simulation because symmetric schedules never put
+two devices on the same directed link.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+
+from .commands import DATA_KINDS, CmdKind, EngineQueue, Schedule
+from .topology import Topology
+
+
+@dataclasses.dataclass(frozen=True)
+class PhaseBreakdown:
+    control: float
+    schedule: float
+    copy: float
+    sync: float
+
+    @property
+    def total(self) -> float:
+        return self.control + self.schedule + self.copy + self.sync
+
+    @property
+    def noncopy_fraction(self) -> float:
+        t = self.total
+        return 0.0 if t == 0 else (t - self.copy) / t
+
+    def as_dict(self) -> dict[str, float]:
+        return {
+            "control": self.control,
+            "schedule": self.schedule,
+            "copy": self.copy,
+            "sync": self.sync,
+            "total": self.total,
+        }
+
+
+@dataclasses.dataclass(frozen=True)
+class SimResult:
+    latency: float                       # collective completion (max over devices)
+    per_device: dict[int, PhaseBreakdown]
+    engines_used: dict[int, int]
+    hbm_bytes: dict[int, int]            # local HBM traffic per device (power model)
+    # Per-resource busy timelines: resource name -> ((start, end), ...).
+    # In symmetric mode only the representative device's resources appear.
+    timelines: dict[str, tuple] = dataclasses.field(default_factory=dict)
+    busy: dict[str, float] = dataclasses.field(default_factory=dict)
+    representative: int | None = None    # set when the symmetric fast path ran
+
+    @property
+    def breakdown(self) -> PhaseBreakdown:
+        """Breakdown of the critical-path device."""
+        return max(self.per_device.values(), key=lambda b: b.total)
+
+    def utilization(self, resource: str) -> float:
+        """Busy fraction of one resource over the collective's latency."""
+        if self.latency <= 0:
+            return 0.0
+        return min(1.0, self.busy.get(resource, 0.0) / self.latency)
+
+    def link_busy_seconds(self, device: int) -> float:
+        """Total wire-busy seconds on links sourced at ``device`` (falls back
+        to the representative device under the symmetric fast path)."""
+        dev = device
+        if self.representative is not None and not any(
+                k.startswith(f"link:{device}>") or k.startswith(f"hostlink:{device}:")
+                for k in self.busy):
+            dev = self.representative
+        pfx_l, pfx_h = f"link:{dev}>", f"hostlink:{dev}:"
+        return sum(v for k, v in self.busy.items()
+                   if k.startswith(pfx_l) or k.startswith(pfx_h))
+
+
+class _Timeline:
+    """A serial resource: requests are granted FIFO at max(request, free)."""
+
+    __slots__ = ("free", "busy", "intervals")
+
+    def __init__(self) -> None:
+        self.free = 0.0
+        self.busy = 0.0
+        self.intervals: list[tuple[float, float]] = []
+
+    def acquire(self, t: float, dur: float) -> tuple[float, float]:
+        start = t if t > self.free else self.free
+        end = start + dur
+        self.free = end
+        if dur > 0.0:
+            self.busy += dur
+            self.intervals.append((start, end))
+        return start, end
+
+
+class _QueueState:
+    __slots__ = ("q", "idx", "issue", "seen_data", "last_end", "copy_end", "start")
+
+    def __init__(self, q: EngineQueue, start: float) -> None:
+        self.q = q
+        self.idx = 0
+        self.start = start
+        self.issue = start          # engine front-end clock
+        self.seen_data = False
+        self.last_end = start       # completion of the latest data command
+        self.copy_end = start       # max data completion (device copy phase)
+
+
+class _Sim:
+    def __init__(self, topo: Topology, rep: int | None) -> None:
+        self.topo = topo
+        self.calib = topo.calib
+        self.rep = rep                      # symmetric-mode representative
+        self.timelines: dict[str, _Timeline] = {}
+        self.tags: dict[tuple, float] = {}  # tagged signal -> raise time
+        self.host_signals: dict[int, list[float]] = defaultdict(list)
+
+    def timeline(self, key: str) -> _Timeline:
+        tl = self.timelines.get(key)
+        if tl is None:
+            tl = self.timelines[key] = _Timeline()
+        return tl
+
+    def resolve(self, tag: tuple) -> tuple:
+        if self.rep is not None and len(tag) >= 2:
+            return (tag[0], self.rep) + tuple(tag[2:])
+        return tag
+
+    # ------------------------------------------------------------ wire ----
+    def transfer(self, src, dst, size: int, start: float) -> float:
+        """Occupy every link on the src->dst route; returns completion time."""
+        c = self.calib
+        eff = c.dma_link_efficiency
+        if src == "host" or dst == "host":
+            dev = dst if src == "host" else src
+            dirn = "h2d" if src == "host" else "d2h"
+            tl = self.timeline(f"hostlink:{dev}:{dirn}")
+            _, end = tl.acquire(start, size / (self.topo.host_link_bw * eff))
+            return end
+        wire = size / (self.topo.link_bw * eff)
+        t = start
+        end = start
+        for h, (a, b) in enumerate(self.topo.route(src, dst)):
+            req = t if h == 0 else t + c.hop_latency
+            s, end = self.timeline(f"link:{a}>{b}").acquire(req, wire)
+            t = s                    # cut-through: next hop staggers off start
+        return end
+
+    # --------------------------------------------------------- queue run ----
+    def advance(self, st: _QueueState) -> bool:
+        """Run one queue until finished (True) or blocked on a wait (False)."""
+        c = self.calib
+        cmds = st.q.commands
+        while st.idx < len(cmds):
+            cmd = cmds[st.idx]
+            kind = cmd.kind
+            if kind is CmdKind.WAIT:
+                t = self.tags.get(self.resolve(cmd.tag))
+                if t is None:
+                    return False
+                arrival = t + c.poll_trigger
+                if arrival > st.issue:
+                    st.issue = arrival
+            elif kind is CmdKind.POLL:
+                pass                      # arming handled via the queue start
+            elif kind is CmdKind.SIGNAL:
+                t = max(st.issue, st.last_end) + c.sync_engine
+                if cmd.tag is not None:
+                    # Semaphore update gates the engine's next command.
+                    st.issue = t
+                    self.tags[self.resolve(cmd.tag)] = t
+                else:
+                    # Completion signals post asynchronously (fire-and-forget):
+                    # later copies in the queue are not delayed.
+                    self.host_signals[st.q.device].append(t)
+            elif kind in DATA_KINDS:
+                st.issue += c.b2b_issue if st.seen_data else c.copy_setup
+                st.seen_data = True
+                if kind is CmdKind.SWAP:
+                    stream_bytes = 2 * cmd.size
+                else:
+                    stream_bytes = max(cmd.local_read_bytes, cmd.remote_write_bytes)
+                engine = self.timeline(f"engine:{st.q.device}.{st.q.engine}")
+                start = max(st.issue, engine.free)
+                _, end = engine.acquire(start, stream_bytes / c.engine_bw)
+                for dst in cmd.dsts:
+                    end = max(end, self.transfer(cmd.src, dst, cmd.size, start))
+                if kind is CmdKind.SWAP:  # reverse direction, concurrently
+                    end = max(end, self.transfer(cmd.dsts[0], cmd.src, cmd.size, start))
+                st.last_end = max(st.last_end, end)
+                st.copy_end = max(st.copy_end, end)
+            st.idx += 1
+        return True
+
+
+def _start_device(sim: _Sim, dev: int, queues: list[EngineQueue]) -> tuple[float, list[_QueueState]]:
+    """Host control + doorbells; returns (t_control, queue states)."""
+    c = sim.topo.calib
+    live = [q for q in queues if not q.prelaunched]
+    pre = [q for q in queues if q.prelaunched]
+    host = sim.timeline(f"host:{dev}")
+
+    t_control = sum(len(q.commands) for q in live) * c.control
+    host.acquire(0.0, t_control)
+
+    states: list[_QueueState] = []
+    for q in live:
+        _, bell = host.acquire(host.free, c.doorbell)
+        engine_start = bell + c.fetch
+        sim.timeline(f"engine:{dev}.{q.engine}").acquire(bell, c.fetch)
+        states.append(_QueueState(q, engine_start))
+    for q in pre:
+        states.append(_QueueState(q, c.poll_trigger))
+    return t_control, states
+
+
+def _finish_device(sim: _Sim, dev: int, t_control: float,
+                   states: list[_QueueState]) -> PhaseBreakdown:
+    c = sim.topo.calib
+    sched_end = max((st.start for st in states), default=t_control)
+    copy_end = max((st.copy_end for st in states), default=sched_end)
+    sigs = sim.host_signals.get(dev, [])
+    # The host drains its completion-signal set serially once the last
+    # engine signal has landed (one observation per signal).
+    signal_done = max([copy_end] + sigs)
+    _, total = sim.timeline(f"host:{dev}").acquire(signal_done,
+                                                   len(sigs) * c.sync_obs)
+    return PhaseBreakdown(
+        control=t_control,
+        schedule=max(0.0, sched_end - t_control),
+        copy=max(0.0, copy_end - sched_end),
+        sync=max(0.0, total - copy_end),
+    )
+
+
+def _run(sim: _Sim, device_queues: dict[int, list[EngineQueue]]) -> dict[int, PhaseBreakdown]:
+    started = {dev: _start_device(sim, dev, qs) for dev, qs in device_queues.items()}
+    pending = [st for _, states in started.values() for st in states]
+    while pending:
+        progressed = False
+        still = []
+        for st in pending:
+            before = st.idx
+            if not sim.advance(st):
+                still.append(st)
+            progressed = progressed or st.idx != before or st not in still
+        if not progressed:
+            blocked = {st.q.commands[st.idx].tag for st in still}
+            raise RuntimeError(f"deadlocked schedule: waits on unsignaled tags {blocked}")
+        pending = still
+    return {dev: _finish_device(sim, dev, t_control, states)
+            for dev, (t_control, states) in started.items()}
+
+
+def _device_hbm_bytes(queues: list[EngineQueue]) -> int:
+    """Local-HBM traffic generated by this device's outbound commands.
+
+    Incoming writes are attributed by the collective-level wrapper (the
+    schedule is symmetric so local accounting suffices for relative power).
+    """
+    return sum(cmd.local_read_bytes for q in queues for cmd in q.data_commands)
+
+
+def simulate(schedule: Schedule, topo: Topology, *, symmetric: bool | None = None) -> SimResult:
+    """Simulate ``schedule``; ``symmetric`` overrides the builder's marking."""
+    sym = schedule.symmetric if symmetric is None else symmetric
+    devices = schedule.devices
+    if sym and len(devices) > 1:
+        rep = devices[0]
+        sim = _Sim(topo, rep)
+        rep_queues = schedule.queues_for(rep)
+        breakdown = _run(sim, {rep: rep_queues})[rep]
+        per_device = {d: breakdown for d in devices}
+        engines = {d: len({q.engine for q in rep_queues}) for d in devices}
+        hbm = {d: _device_hbm_bytes(rep_queues) for d in devices}
+    else:
+        sim = _Sim(topo, None)
+        per_device = _run(sim, {d: schedule.queues_for(d) for d in devices})
+        engines = {d: schedule.engines_used(d) for d in devices}
+        hbm = {d: _device_hbm_bytes(schedule.queues_for(d)) for d in devices}
+        rep = None
+
+    latency = max(b.total for b in per_device.values())
+    return SimResult(
+        latency=latency,
+        per_device=per_device,
+        engines_used=engines,
+        hbm_bytes=hbm,
+        timelines={k: tuple(tl.intervals) for k, tl in sim.timelines.items()},
+        busy={k: tl.busy for k, tl in sim.timelines.items()},
+        representative=rep,
+    )
+
+
+def single_copy_breakdown(size: int, topo: Topology, *, prelaunch: bool = False) -> PhaseBreakdown:
+    """Fig. 7: phase breakdown of one GPU-to-GPU copy of ``size`` bytes."""
+    from . import commands as cmd
+
+    cmds = (cmd.copy(0, 1, size), cmd.signal())
+    if prelaunch:
+        cmds = (cmd.poll(),) + cmds
+    q = EngineQueue(device=0, engine=0, commands=cmds, prelaunched=prelaunch)
+    res = simulate(Schedule(name="single_copy", queues=(q,)), topo)
+    return res.per_device[0]

@@ -11,6 +11,13 @@ Two topologies are modeled:
   torus with ~50 GB/s links, used to re-derive the size-dispatch thresholds
   for the TPU-native collectives (DESIGN.md §4).
 
+Routing (DESIGN.md §3): a topology exposes ``route(src, dst)`` returning the
+directed links a transfer traverses.  The fully-connected MI300X box routes
+everything over the single direct xGMI link; the TPU torus routes
+dimension-ordered (rows first, then columns) with wraparound, so non-neighbor
+transfers are multi-hop and the simulator charges every link on the path plus
+a per-hop router latency (``Calibration.hop_latency``).
+
 Phase constants live in :class:`Calibration` and are fit once (see
 ``benchmarks/calibration.py`` and EXPERIMENTS.md) so that the model reproduces
 the paper's measured figures.
@@ -18,6 +25,7 @@ the paper's measured figures.
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 
 @dataclasses.dataclass(frozen=True)
@@ -33,7 +41,10 @@ class Calibration:
     sync_engine: engine-side atomic signal update.
     sync_obs : CPU-side completion observation, per signal (serialized).
     poll_trigger: latency from the triggering memory write until a polling
-               engine observes it (prelaunch, §4.5).
+               engine observes it (prelaunch, §4.5); also the latency for a
+               remote engine to observe a tagged semaphore signal (wait).
+    hop_latency: per-router forwarding latency charged for every hop beyond
+               the first on a multi-hop route (0 on fully-connected fabrics).
     """
 
     # Values fit by benchmarks/calibration.py so the model lands on the
@@ -46,6 +57,7 @@ class Calibration:
     sync_engine: float = 0.9165e-6
     sync_obs: float = 1.596e-6
     poll_trigger: float = 0.5838e-6
+    hop_latency: float = 0.0
     # Effective per-engine streaming bandwidth (one engine saturates roughly
     # one xGMI link; pcpy engages one engine per link).
     engine_bw: float = 64e9
@@ -110,6 +122,51 @@ class PowerCalibration:
     hbm_per_gbps: float = 0.12         # HBM power tracks streamed traffic
     hbm_static: float = 60.0
     cu_traffic_multiplier: float = 1.6  # CU protocol staging vs pure payload
+    link_per_busy_gbps: float = 0.04   # per-link power tracks actual busy traffic
+
+
+# ---------------------------------------------------------------- routing ----
+
+def _torus_axis_hops(a: int, b: int, n: int) -> list[int]:
+    """Signed unit steps (+1/-1) to travel a->b on a ring of size n, shortest way."""
+    fwd = (b - a) % n
+    bwd = (a - b) % n
+    if fwd == 0:
+        return []
+    return [1] * fwd if fwd <= bwd else [-1] * bwd
+
+
+@functools.lru_cache(maxsize=4096)
+def _torus_route(grid: tuple[int, int], src: int, dst: int) -> tuple[tuple[int, int], ...]:
+    """Dimension-ordered (row-first) shortest route on a 2D torus."""
+    rows, cols = grid
+    r, c = divmod(src, cols)
+    rd, cd = divmod(dst, cols)
+    hops: list[tuple[int, int]] = []
+    cur = src
+    for step in _torus_axis_hops(c, cd, cols):        # row links first
+        nxt_c = (cur % cols + step) % cols
+        nxt = (cur // cols) * cols + nxt_c
+        hops.append((cur, nxt))
+        cur = nxt
+    for step in _torus_axis_hops(r, rd, rows):        # then column links
+        nxt = ((cur // cols + step) % rows) * cols + cur % cols
+        hops.append((cur, nxt))
+        cur = nxt
+    return tuple(hops)
+
+
+@functools.lru_cache(maxsize=64)
+def _snake_ring(grid: tuple[int, int]) -> tuple[int, ...]:
+    """A Hamiltonian ring over the torus: boustrophedon rows; the wraparound
+    column link closes last->first (requires an even number of rows, which
+    every supported pod shape satisfies)."""
+    rows, cols = grid
+    order: list[int] = []
+    for r in range(rows):
+        cs = range(cols) if r % 2 == 0 else range(cols - 1, -1, -1)
+        order.extend(r * cols + c for c in cs)
+    return tuple(order)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -122,6 +179,7 @@ class Topology:
     host_link_bw: float                # bytes/s per direction (PCIe for MI300X)
     fully_connected: bool
     calib: Calibration = Calibration()
+    grid: tuple[int, int] | None = None  # 2D torus shape (rows, cols) if not FC
 
     def peer_links(self, device: int) -> int:
         return self.links_per_device
@@ -130,6 +188,40 @@ class Topology:
     def aggregate_bw(self) -> float:
         """Total per-device injection bandwidth (bytes/s, one direction)."""
         return self.link_bw * self.links_per_device
+
+    # ---- routing (DESIGN.md §3) ----
+    def route(self, src: int, dst: int) -> tuple[tuple[int, int], ...]:
+        """Directed links a src->dst transfer traverses, in traversal order."""
+        if src == dst:
+            return ()
+        if self.fully_connected or self.grid is None:
+            return ((src, dst),)
+        return _torus_route(self.grid, src, dst)
+
+    def hops(self, src: int, dst: int) -> int:
+        return len(self.route(src, dst))
+
+    def neighbors(self, device: int) -> tuple[int, ...]:
+        if self.fully_connected or self.grid is None:
+            return tuple(d for d in range(self.n_devices) if d != device)
+        rows, cols = self.grid
+        r, c = divmod(device, cols)
+        out = []
+        for dr, dc in ((0, 1), (0, -1), (1, 0), (-1, 0)):
+            n = ((r + dr) % rows) * cols + (c + dc) % cols
+            if n != device and n not in out:
+                out.append(n)
+        return tuple(out)
+
+    def is_neighbor(self, a: int, b: int) -> bool:
+        return a != b and len(self.route(a, b)) == 1
+
+    def ring_order(self) -> tuple[int, ...]:
+        """A device order in which consecutive (and wraparound) devices are
+        physically adjacent — the embedding used by ring collectives."""
+        if self.fully_connected or self.grid is None:
+            return tuple(range(self.n_devices))
+        return _snake_ring(self.grid)
 
 
 def mi300x_platform(calib: Calibration | None = None) -> Topology:
@@ -143,6 +235,19 @@ def mi300x_platform(calib: Calibration | None = None) -> Topology:
         fully_connected=True,
         calib=calib or Calibration(),
     )
+
+
+def _near_square_grid(n: int) -> tuple[int, int]:
+    """Factor n into the most square (rows, cols) with rows even when possible
+    (an even row count closes the snake ring over the column wraparound)."""
+    best = (1, n)
+    for r in range(1, int(n ** 0.5) + 1):
+        if n % r == 0:
+            best = (r, n // r)
+    r, c = best
+    if r % 2 and c % 2 == 0:   # prefer the even side as rows
+        r, c = c, r
+    return (r, c)
 
 
 def tpu_v5e_pod(n_devices: int = 256, calib: Calibration | None = None) -> Topology:
@@ -162,6 +267,7 @@ def tpu_v5e_pod(n_devices: int = 256, calib: Calibration | None = None) -> Topol
         sync_engine=0.40e-6,   # semaphore signal
         sync_obs=0.20e-6,      # semaphore wait observe
         poll_trigger=0.20e-6,
+        hop_latency=0.40e-6,   # ICI router forward per extra hop
         engine_bw=50e9,
         dma_link_efficiency=0.95,
     )
@@ -174,6 +280,7 @@ def tpu_v5e_pod(n_devices: int = 256, calib: Calibration | None = None) -> Topol
         host_link_bw=32e9,
         fully_connected=False,
         calib=c,
+        grid=_near_square_grid(n_devices),
     )
 
 

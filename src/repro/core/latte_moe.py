@@ -23,6 +23,8 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+
+from repro.compat import axis_size
 import numpy as np
 
 from repro.configs.base import ArchConfig
@@ -48,7 +50,7 @@ def latte_moe_local(cfg: ArchConfig, p: dict, xf: jax.Array, axis_name: str,
     E, K = m.n_experts, m.top_k
     T, D = xf.shape
     C = _local_capacity(cfg, T)
-    n_shards = jax.lax.axis_size(axis_name)
+    n_shards = axis_size(axis_name)
     e_local = E // n_shards
     cd = xf.dtype
 
@@ -98,8 +100,9 @@ def make_latte_moe(cfg: ArchConfig, mesh, axis_name: str, *, all_to_all=None):
     """Returns fn(params, x [B,S,D]) -> (out, aux) running the hierarchical
     dispatch under shard_map: tokens sharded on batch over ``axis_name``,
     expert weights sharded on the expert dim."""
-    from jax import shard_map
     from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map
 
     assert cfg.moe and cfg.moe.n_experts % mesh.shape[axis_name] == 0
 

@@ -4,9 +4,9 @@ from __future__ import annotations
 from functools import partial
 
 import jax
-from jax import shard_map
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from .ring_all_gather import make_ring_all_gather
 
 

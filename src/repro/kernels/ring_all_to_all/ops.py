@@ -2,9 +2,9 @@
 from __future__ import annotations
 
 import jax
-from jax import shard_map
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from .ring_all_to_all import make_all_to_all
 
 

@@ -28,6 +28,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import pltpu_compiler_params, pltpu_interpret_mode
+
 
 def all_to_all_kernel(
     x_ref,          # [n, chunk, F] input chunks (ANY)
@@ -111,8 +113,8 @@ def make_all_to_all(
             scratch_shapes=[pltpu.SemaphoreType.DMA,
                             pltpu.SemaphoreType.DMA((n_steps,)),
                             pltpu.SemaphoreType.DMA((n_steps,))],
-            compiler_params=pltpu.CompilerParams(collective_id=collective_id),
-            interpret=pltpu.InterpretParams() if interpret else False,
+            compiler_params=pltpu_compiler_params(collective_id=collective_id),
+            interpret=pltpu_interpret_mode() if interpret else False,
         )(x)
 
     return fn

@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.compat import cost_analysis_dict
 from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config, get_shape
 from repro.models import build_model
 from repro.models.transformer import Model
@@ -148,7 +149,7 @@ def run_one(arch_id: str, shape_id: str, *, multi_pod: bool = False,
             lowered = jitted.lower(*args)
             compiled = lowered.compile()
         dt = time.perf_counter() - t0
-        ca = compiled.cost_analysis() or {}
+        ca = cost_analysis_dict(compiled)
         mem = compiled.memory_analysis()
         counts: dict[str, int] = {}
         try:

@@ -1,17 +1,19 @@
 """JAX-level latte collectives vs XLA references (8 emulated devices,
 subprocess) + CommBackend dispatch behavior."""
+import pytest
+
 from repro.core.backend import CommBackend, tpu_dispatch_tables
 
 
 LATTE_TEST = r"""
 import jax, jax.numpy as jnp, numpy as np
-from jax import shard_map
 from jax.sharding import PartitionSpec as P
+from repro.compat import make_mesh, shard_map
 from repro.core import collectives as coll
 from repro.core.backend import CommBackend
 
 N = 8
-mesh = jax.make_mesh((N,), ("x",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((N,), ("x",))
 
 x = jax.random.normal(jax.random.PRNGKey(0), (N, 4, 32), jnp.float32)
 def wrap_ag(fn):
@@ -44,6 +46,7 @@ print("LATTE_OK")
 """
 
 
+@pytest.mark.slow
 def test_latte_collectives_match_reference(subproc):
     assert "LATTE_OK" in subproc(LATTE_TEST, n_devices=8)
 

@@ -1,14 +1,16 @@
 """Hierarchical shard_map MoE dispatch vs a no-drop dense oracle."""
+import pytest
 
 LATTE_MOE_TEST = r"""
 import dataclasses
 import jax, jax.numpy as jnp, numpy as np
+from repro.compat import make_mesh
 from repro.configs import get_config
 from repro.core.latte_moe import make_latte_moe
 from repro.models import moe as moe_mod
 
 N = 8
-mesh = jax.make_mesh((N,), ("x",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((N,), ("x",))
 
 cfg = get_config("mixtral-8x7b").reduced()       # 4 experts top-2 reduced
 cfg = dataclasses.replace(
@@ -48,6 +50,7 @@ print("LATTE_MOE_OK err=", err)
 """
 
 
+@pytest.mark.slow
 def test_latte_moe_matches_dense_oracle(subproc):
     out = subproc(LATTE_MOE_TEST, n_devices=8, timeout=600)
     assert "LATTE_MOE_OK" in out

@@ -70,6 +70,7 @@ def test_smoke_train_step(arch_id):
     assert int(state["opt"]["step"]) == 1
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch_id", ["deepseek-7b", "gemma2-27b", "mixtral-8x7b"])
 def test_decode_matches_forward(arch_id):
     """Teacher-forcing consistency: decoding token-by-token from a prefill
@@ -141,6 +142,7 @@ def test_qwen2vl_mrope_text_equals_rope_shape():
     assert l1.shape == (B, S, cfg.vocab)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch_id", ["rwkv6-1.6b", "zamba2-2.7b"])
 def test_ssm_state_streaming_equivalence(arch_id):
     """Processing [first half] then [second half with carried state] must

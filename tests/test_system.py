@@ -2,6 +2,7 @@
 host-cached KV matches prefill, the benchmark harness's claim set passes,
 and the dry-run lowers representative (arch x shape x mesh) combos."""
 import numpy as np
+import pytest
 
 import jax
 
@@ -13,6 +14,7 @@ from repro.train.loop import train_loop
 from repro.train.optimizer import AdamWConfig
 
 
+@pytest.mark.slow
 def test_training_reduces_loss():
     cfg = get_config("qwen2-0.5b").reduced()
     model = build_model(cfg)
@@ -54,6 +56,7 @@ print("DRYRUN_OK")
 """
 
 
+@pytest.mark.slow
 def test_dryrun_lowers_and_compiles(subproc):
     out = subproc(DRYRUN_TEST, n_devices=512, timeout=900)
     assert "DRYRUN_OK" in out
@@ -69,6 +72,7 @@ print("SKIP_OK")
 """
 
 
+@pytest.mark.slow
 def test_dryrun_long_context_policy(subproc):
     out = subproc(DRYRUN_SKIP_TEST, n_devices=512, timeout=900)
     assert "SKIP_OK" in out
