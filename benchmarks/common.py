@@ -36,6 +36,32 @@ def time_us(fn, *args, reps: int = 200, warmup: int = 20) -> float:
     return (time.perf_counter() - t0) / reps * 1e6
 
 
+def optimized_report(cc: "ClaimChecker", topo, collective: str,
+                     lat: dict, rccl: dict, verbose: bool) -> None:
+    """Shared ``--optimized`` tail for fig13/fig14: baseline-vs-optimized
+    curve, re-derived dispatch with the ``opt_`` streams (DESIGN.md §7), and
+    the optimized claim bands for ``collective``."""
+    from repro.core.dma import derive_dispatch
+    from repro.core.dma.claims import optimized_stream_claims
+
+    base_vs = {v for v in lat if not v.startswith("opt_")}
+    opt_vs = {v for v in lat if v.startswith("opt_")}
+    if verbose:
+        print("\nbaseline-vs-optimized (speedup vs RCCL; gain = best-opt/best-base):")
+        print(f"{'size':>5} {'best-baseline':>16} {'best-optimized':>16} {'gain':>7}")
+        for s in ALL_SIZES:
+            b = min(lat[v][s] for v in base_vs)
+            o = min(lat[v][s] for v in opt_vs)
+            print(f"{fmt_size(s):>5} {rccl[s]/b:16.2f} {rccl[s]/o:16.2f} {b/o:7.2f}")
+        table = derive_dispatch(topo, collective, ALL_SIZES, allow_optimized=True)
+        print("\nDerived dispatch with optimized streams (DESIGN.md §7):")
+        for e in table:
+            hi = fmt_size(e.hi) if e.hi else "inf"
+            print(f"  [{fmt_size(e.lo)}, {hi}) -> {e.variant}")
+    for c in optimized_stream_claims(topo, collectives=(collective,)):
+        cc.check(c.description, c.model_value, c.paper_value, c.lo, c.hi)
+
+
 class ClaimChecker:
     def __init__(self, name: str):
         self.name = name

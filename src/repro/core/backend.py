@@ -24,7 +24,9 @@ MB = 1024 * 1024
 
 # Bump when the simulator/calibration changes in a way that invalidates
 # previously derived dispatch tables.
-_TABLE_CACHE_VERSION = 1
+# v2: optimized command streams (DESIGN.md §7) — new Calibration constants
+# (control_batched/doorbell_batched/fused_sync/sync_obs_batched).
+_TABLE_CACHE_VERSION = 2
 # The size sweep behind every cached/bundled table; part of the cache key.
 _SWEEP_SIZES = [2 ** i for i in range(10, 31)]
 _TABLE_CACHE_DIR = os.environ.get(
@@ -169,13 +171,15 @@ def regenerate_bundled_tables(device_counts=(16,)) -> str:
     """Derive the standard TPU dispatch tables and write the bundled package
     copy (`python -m repro.core.backend`).  Run after any simulator or
     calibration change (and bump _TABLE_CACHE_VERSION if the key inputs did
-    not change but the semantics did)."""
+    not change but the semantics did).  Also writes through to the disk
+    cache ($REPRO_DISPATCH_CACHE) so CI can upload the sweep artifact."""
     out = {}
     for n in device_counts:
         topo = tpu_v5e_pod(n)
         sizes = _SWEEP_SIZES
-        ag = derive_dispatch(topo, "all_gather", sizes)
-        aa = derive_dispatch(topo, "all_to_all", sizes)
+        ag = tuple(derive_dispatch(topo, "all_gather", sizes))
+        aa = tuple(derive_dispatch(topo, "all_to_all", sizes))
+        _store_table_cache(topo, sizes, (ag, aa))
         out[_table_key(topo, sizes)] = [
             [{"lo": e.lo, "hi": e.hi, "variant": e.variant} for e in tbl]
             for tbl in (ag, aa)]

@@ -1,19 +1,29 @@
 """DMA-Latte core: command set, event-driven engine simulator, collective
-schedules, dispatch policy, RCCL baseline and power models (the paper's
-contribution)."""
+schedules, optimized command-stream transforms, dispatch policy, RCCL
+baseline and power models (the paper's contribution)."""
 from . import commands
 from .commands import CmdKind, Command, EngineQueue, Schedule
 from .collectives import allgather_schedule, alltoall_schedule, kv_fetch_schedule
 from .dispatch import (
     PAPER_AA_DISPATCH,
     PAPER_AG_DISPATCH,
+    best_variant_for,
     candidate_variants,
     derive_dispatch,
+    optimized_variants,
     paper_dispatch,
     pick_variant,
     variant_latency,
 )
 from .engine import PhaseBreakdown, SimResult, simulate, single_copy_breakdown
+from .optimizations import (
+    OptimizationConfig,
+    batch_commands,
+    fuse_signals,
+    optimize,
+    parse_optimized,
+    split_queues,
+)
 from .power import cu_collective_power, dma_collective_power
 from .rccl_model import kernel_copy_latency, rccl_collective_latency
 from .topology import (
@@ -30,9 +40,12 @@ from .topology import (
 __all__ = [
     "commands", "CmdKind", "Command", "EngineQueue", "Schedule",
     "allgather_schedule", "alltoall_schedule", "kv_fetch_schedule",
-    "PAPER_AA_DISPATCH", "PAPER_AG_DISPATCH", "candidate_variants",
-    "derive_dispatch", "paper_dispatch", "pick_variant", "variant_latency",
+    "PAPER_AA_DISPATCH", "PAPER_AG_DISPATCH", "best_variant_for",
+    "candidate_variants", "derive_dispatch", "optimized_variants",
+    "paper_dispatch", "pick_variant", "variant_latency",
     "PhaseBreakdown", "SimResult", "simulate", "single_copy_breakdown",
+    "OptimizationConfig", "batch_commands", "fuse_signals", "optimize",
+    "parse_optimized", "split_queues",
     "cu_collective_power", "dma_collective_power",
     "kernel_copy_latency", "rccl_collective_latency",
     "Calibration", "PowerCalibration", "RcclCalibration", "Topology",

@@ -7,7 +7,12 @@ import dataclasses
 import math
 
 from . import collectives as C
-from .dispatch import paper_dispatch, variant_latency
+from .dispatch import (
+    best_variant_for,
+    optimized_variants,
+    paper_dispatch,
+    variant_latency,
+)
 from .engine import simulate, single_copy_breakdown
 from .power import cu_collective_power, dma_collective_power
 from .rccl_model import rccl_collective_latency
@@ -43,6 +48,14 @@ def rccl_latency(topo: Topology, collective: str, size: int) -> float:
 def best_variant_latency(topo: Topology, collective: str, size: int) -> tuple[str, float]:
     v = paper_dispatch(collective, size)
     return v, dma_latency(topo, collective, size, v)
+
+
+def best_optimized_latency(topo: Topology, collective: str, size: int) -> tuple[str, float]:
+    """Best ``opt_`` command stream at one size (DESIGN.md §7): the argmin
+    over the optimized candidate set — what the paper's Fig. 13/14
+    "optimized" curves plot."""
+    return best_variant_for(topo, collective, size,
+                            optimized_variants(topo, collective))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -127,4 +140,51 @@ def evaluate_claims(topo: Topology | None = None) -> list[Claim]:
         Claim("power_saving_bw_bound", 0.32, power_saving_bw, 0.20, 0.45,
               "DMA AG power saving vs RCCL at >=64MB (paper ~32%)"),
     ]
+    claims += optimized_stream_claims(topo)
+    return claims
+
+
+def optimized_stream_claims(
+    topo: Topology | None = None,
+    collectives: tuple[str, ...] = ("all_gather", "all_to_all"),
+) -> list[Claim]:
+    """Claim bands for the optimized command streams (DESIGN.md §7).
+
+    The paper's optimized implementations (batched scheduling, SDMA queue
+    parallelism, fused write+signal) close the small-size gap to ~30% slower
+    (all-gather) / ~20% faster (all-to-all) than RCCL and add ~7% at
+    bandwidth-bound sizes.  The model lands in-band but conservative on the
+    large-size gain: the calibrated host-side constants are tighter than the
+    measured system's, so less overhead is available to remove.
+
+    ``collectives`` restricts which sweeps run — benchmarks that report a
+    single collective pass just that one to skip the other's simulations.
+    """
+    topo = topo or mi300x_platform()
+
+    def opt_small(coll):
+        return geomean(
+            best_optimized_latency(topo, coll, s)[1] / rccl_latency(topo, coll, s)
+            for s in SMALL_SIZES)
+
+    def opt_large_gain(coll):
+        return geomean(
+            dma_latency(topo, coll, s, "pcpy") / dma_latency(topo, coll, s, "opt_pcpy")
+            for s in LARGE_SIZES)
+
+    claims: list[Claim] = []
+    if "all_gather" in collectives:
+        claims += [
+            Claim("opt_ag_small", 1.30, opt_small("all_gather"), 1.10, 1.55,
+                  "Optimized-stream AG geomean vs RCCL <32MB (paper: 30% slower)"),
+            Claim("opt_ag_large_gain", 1.07, opt_large_gain("all_gather"), 1.03, 1.15,
+                  "opt_pcpy over pcpy, AG >=64MB (paper: ~7% large-size gain)"),
+        ]
+    if "all_to_all" in collectives:
+        claims += [
+            Claim("opt_aa_small", 0.83, opt_small("all_to_all"), 0.70, 0.95,
+                  "Optimized-stream AA geomean vs RCCL <32MB (paper: 20% faster)"),
+            Claim("opt_aa_large_gain", 1.07, opt_large_gain("all_to_all"), 1.03, 1.15,
+                  "opt_pcpy over pcpy, AA >=64MB (paper: ~7% large-size gain)"),
+        ]
     return claims

@@ -26,6 +26,14 @@ cross-device dependencies (``wait`` on the predecessor's tagged signal):
 * ``bidir_ring`` — all-gather only: both directions per step (the step-0
   send is a single-read ``bcst`` feeding both neighbors), halving steps.
 
+Optimized command streams (DESIGN.md §7): any variant may be prefixed with
+``opt_`` (``opt_pcpy``, ``opt_prelaunch_b2b``, ``opt_ring``, ...) to run the
+same schedule through :func:`repro.core.dma.optimizations.optimize` — batched
+submission, SDMA queue-slot parallelism and fused write+signal.  The ring /
+bidir-ring / rotation-AA builders benefit chiefly from fused signaling (each
+chained step drops its standalone semaphore command) and batching; the
+one-shot builders additionally pick up multi-queue dispatch.
+
 Size convention: ``size`` is the collective's *total message size* as in the
 paper's figures (1KB–4GB).  Each device's per-peer shard is ``size / n``.
 """
@@ -33,6 +41,7 @@ from __future__ import annotations
 
 from . import commands as cmd
 from .commands import EngineQueue, Schedule
+from .optimizations import OptimizationConfig, optimize, parse_optimized
 from .topology import Topology
 
 AG_VARIANTS = ("pcpy", "bcst", "b2b", "ring", "bidir_ring")
@@ -59,6 +68,11 @@ def parse_variant(variant: str) -> tuple[str, bool]:
     if variant.startswith("prelaunch_"):
         return variant[len("prelaunch_"):], True
     return variant, False
+
+
+def _maybe_optimize(sched: Schedule, optimized: bool,
+                    config: OptimizationConfig | None) -> Schedule:
+    return optimize(sched, config) if optimized else sched
 
 
 def _ring_neighbors(topo: Topology) -> dict[int, tuple[int, int]]:
@@ -146,11 +160,19 @@ def _ring_aa_queues(topo: Topology, shard: int) -> list[EngineQueue]:
     return queues
 
 
-def allgather_schedule(topo: Topology, size: int, variant: str = "pcpy") -> Schedule:
-    """All-gather: every device sends its shard (size/n) to all n-1 peers."""
+def allgather_schedule(topo: Topology, size: int, variant: str = "pcpy", *,
+                       opt_config: OptimizationConfig | None = None) -> Schedule:
+    """All-gather: every device sends its shard (size/n) to all n-1 peers.
+
+    An ``opt_`` variant prefix applies the optimized command-stream
+    transforms (DESIGN.md §7) to the built schedule; ``opt_config``
+    customizes them.
+    """
+    requested = variant
+    variant, optimized = parse_optimized(variant)
     base, prelaunch = parse_variant(variant)
     if base not in AG_VARIANTS:
-        raise ValueError(f"unknown all-gather variant {variant!r}")
+        raise ValueError(f"unknown all-gather variant {requested!r}")
     n = topo.n_devices
     shard = max(1, size // n)
     queues: list[EngineQueue] = []
@@ -184,20 +206,26 @@ def allgather_schedule(topo: Topology, size: int, variant: str = "pcpy") -> Sche
     else:  # bidir_ring
         queues = _bidir_ring_ag_queues(topo, shard)
         symmetric = _ring_closes_on_neighbors(topo)
-    return Schedule(name=f"ag_{variant}", queues=_maybe_prelaunch(queues, prelaunch),
-                    symmetric=symmetric)
+    name = f"ag_opt_{variant}" if optimized else f"ag_{variant}"
+    sched = Schedule(name=name, queues=_maybe_prelaunch(queues, prelaunch),
+                     symmetric=symmetric)
+    return _maybe_optimize(sched, optimized, opt_config)
 
 
-def alltoall_schedule(topo: Topology, size: int, variant: str = "pcpy") -> Schedule:
+def alltoall_schedule(topo: Topology, size: int, variant: str = "pcpy", *,
+                      opt_config: OptimizationConfig | None = None) -> Schedule:
     """All-to-all: every device exchanges a size/n shard with every peer.
 
     With ``swap``, pair (i, j) is served by a single in-place swap command
     executed by one of the two devices (balanced round-robin assignment), so
-    system-wide command count halves.
+    system-wide command count halves.  An ``opt_`` variant prefix applies the
+    optimized command-stream transforms (DESIGN.md §7).
     """
+    requested = variant
+    variant, optimized = parse_optimized(variant)
     base, prelaunch = parse_variant(variant)
     if base not in AA_VARIANTS:
-        raise ValueError(f"unknown all-to-all variant {variant!r}")
+        raise ValueError(f"unknown all-to-all variant {requested!r}")
     n = topo.n_devices
     shard = max(1, size // n)
     queues: list[EngineQueue] = []
@@ -227,8 +255,10 @@ def alltoall_schedule(topo: Topology, size: int, variant: str = "pcpy") -> Sched
             else:  # b2b
                 copies = tuple(cmd.copy(d, p, shard) for p in peers)
                 queues.append(EngineQueue(d, 0, copies + (cmd.signal(),)))
-    return Schedule(name=f"aa_{variant}", queues=_maybe_prelaunch(queues, prelaunch),
-                    symmetric=symmetric)
+    name = f"aa_opt_{variant}" if optimized else f"aa_{variant}"
+    sched = Schedule(name=name, queues=_maybe_prelaunch(queues, prelaunch),
+                     symmetric=symmetric)
+    return _maybe_optimize(sched, optimized, opt_config)
 
 
 def kv_fetch_schedule(
@@ -248,7 +278,12 @@ def kv_fetch_schedule(
       with a single trailing signal; above the empirical 4MB threshold the
       runtime fans out to multiple engines (one signal each) for parallelism
       (paper §5.3.1).
+
+    An ``opt_`` prefix additionally applies the optimized command-stream
+    transforms (DESIGN.md §7) to the built schedule.
     """
+    requested = variant
+    variant, optimized = parse_optimized(variant)
     base, prelaunch = parse_variant(variant)
     total = n_blocks * block_bytes
     queues: list[EngineQueue] = []
@@ -267,5 +302,7 @@ def kv_fetch_schedule(
             if copies:
                 queues.append(EngineQueue(device, e, copies + (cmd.signal(),)))
     else:
-        raise ValueError(f"unknown kv-fetch variant {variant!r}")
-    return Schedule(name=f"kvfetch_{variant}", queues=_maybe_prelaunch(queues, prelaunch))
+        raise ValueError(f"unknown kv-fetch variant {requested!r}")
+    name = f"kvfetch_opt_{variant}" if optimized else f"kvfetch_{variant}"
+    sched = Schedule(name=name, queues=_maybe_prelaunch(queues, prelaunch))
+    return _maybe_optimize(sched, optimized, None)

@@ -14,6 +14,14 @@ signals are engine-to-engine semaphores and are NOT observed by the host;
 untagged signals are the host-observed completion signals of the original
 model.  Ring/torus schedules are built from these so that step *k* is timed
 from the real arrival of step *k-1*'s data rather than assumed overlap.
+
+Optimized command streams (DESIGN.md §7): a data command may carry a *fused*
+signal (``fused_signal``/``fused_tag``, §7.3) that rides the transfer's final
+write packet instead of occupying a standalone ``signal`` slot, and an
+:class:`EngineQueue` records the host submission batch size (``batch``, §7.1)
+and its SDMA queue slot on the engine (``slot``, §7.2).  The transforms in
+:mod:`repro.core.dma.optimizations` produce these; baseline builders never
+set them, so default schedules time identically to the unoptimized model.
 """
 from __future__ import annotations
 
@@ -45,6 +53,13 @@ class Command:
     ``src`` and ``dsts[0]``.  ``poll``/``signal``/``wait`` carry no payload.
     ``tag`` names the semaphore a ``signal`` raises / a ``wait`` blocks on;
     a tagged signal is engine-scope (not host-observed).
+
+    Fused signaling (DESIGN.md §7.3): a *data* command may additionally carry
+    ``fused_signal=True`` (a host-observed completion rides the final write
+    packet — the host still pays one observation per fused completion) and/or
+    ``fused_tag`` (an engine-scope semaphore is raised at write completion
+    plus ``Calibration.fused_sync`` instead of via a standalone ``signal``
+    command costing a ``sync_engine`` scheduling round-trip).
     """
 
     kind: CmdKind
@@ -52,6 +67,8 @@ class Command:
     dsts: tuple[int | str, ...] = ()
     size: int = 0
     tag: Tag | None = None
+    fused_tag: Tag | None = None
+    fused_signal: bool = False
 
     def __post_init__(self) -> None:
         if self.kind is CmdKind.COPY and len(self.dsts) != 1:
@@ -64,6 +81,9 @@ class Command:
             raise ValueError("wait needs a tag to block on")
         if self.size < 0:
             raise ValueError("negative size")
+        if (self.fused_tag is not None or self.fused_signal) \
+                and self.kind not in DATA_KINDS:
+            raise ValueError("only data commands can carry a fused signal")
 
     # ---- traffic accounting (used by the engine model & power model) ----
     @property
@@ -132,16 +152,37 @@ DATA_KINDS = (CmdKind.COPY, CmdKind.BCST, CmdKind.SWAP)
 
 @dataclasses.dataclass(frozen=True)
 class EngineQueue:
-    """Ordered commands bound to one DMA engine of one device."""
+    """Ordered commands bound to one SDMA queue of one device.
+
+    ``(engine, slot)`` identifies the hardware queue: every engine exposes
+    several independent queue slots (DESIGN.md §7.2) that each keep their own
+    doorbell and command decode/issue stage, while sharing the engine's
+    queue-read port (fetches serialize on the engine) and its streaming
+    bandwidth.  Baseline builders leave ``slot=0`` (one queue per engine);
+    the multi-queue transform spreads a queue's data commands over
+    additional slots of the *same* engine.
+
+    ``batch`` is the host submission batch size (§7.1): the host creates this
+    queue's command packets in groups of ``batch`` per scheduling event,
+    paying the full per-command ``control`` cost once per group and the
+    amortized ``control_batched`` cost for the rest.  ``batch=1`` is the
+    baseline one-event-per-command behavior.
+    """
 
     device: int
     engine: int
     commands: tuple[Command, ...]
     prelaunched: bool = False   # queue was enqueued ahead of time, gated by a poll
+    slot: int = 0               # SDMA queue slot on the engine (§7.2)
+    batch: int = 1              # host submission batch size (§7.1)
 
     def __post_init__(self) -> None:
         if self.prelaunched and (not self.commands or self.commands[0].kind is not CmdKind.POLL):
             raise ValueError("a prelaunched queue must start with a poll command")
+        if self.batch < 1:
+            raise ValueError("batch size must be >= 1")
+        if self.slot < 0:
+            raise ValueError("negative queue slot")
 
     @property
     def data_commands(self) -> tuple[Command, ...]:
@@ -149,9 +190,10 @@ class EngineQueue:
 
     @property
     def n_signals(self) -> int:
-        """Host-observed completion signals (tagged signals are engine-scope)."""
+        """Host-observed completion signals (tagged signals are engine-scope;
+        fused completion signals count — they still notify the host)."""
         return sum(1 for c in self.commands
-                   if c.kind is CmdKind.SIGNAL and c.tag is None)
+                   if (c.kind is CmdKind.SIGNAL and c.tag is None) or c.fused_signal)
 
 
 @dataclasses.dataclass(frozen=True)

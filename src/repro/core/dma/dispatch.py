@@ -3,6 +3,14 @@ policy that re-discovers the thresholds from the timing model (used both to
 validate the model against the paper and to re-derive thresholds for the TPU
 topology used by the JAX-level latte collectives, DESIGN.md §4/§5).
 
+Optimized command streams (DESIGN.md §7): passing ``allow_optimized=True``
+to :func:`candidate_variants` / :func:`derive_dispatch` adds the ``opt_``
+variants (batched submission + SDMA queue slots + fused write+signal) to the
+argmin, re-deriving the thresholds with the optimization layer available —
+the baseline-vs-optimized sweep behind ``benchmarks/fig13*/fig14*
+--optimized``.  The default sweeps stay baseline-only so the paper's
+Tables 2/3 structure remains reproducible as published.
+
 Simulation results are memoized: :func:`variant_latency` caches every
 (topology, collective, size, variant) point and :func:`derive_dispatch`
 caches whole argmin sweeps, so repeated claim evaluations and dispatch-table
@@ -61,8 +69,19 @@ def variant_latency(topo: Topology, collective: str, size: int, variant: str) ->
     return simulate(builder(topo, size, variant), topo).latency
 
 
-def candidate_variants(topo: Topology, collective: str, *, allow_prelaunch: bool = True) -> list[str]:
-    """Variants an argmin sweep should consider on this topology."""
+def candidate_variants(
+    topo: Topology,
+    collective: str,
+    *,
+    allow_prelaunch: bool = True,
+    allow_optimized: bool = False,
+) -> list[str]:
+    """Variants an argmin sweep should consider on this topology.
+
+    ``allow_optimized`` additionally offers every candidate with the
+    optimized command-stream transforms applied (``opt_`` prefix,
+    DESIGN.md §7).
+    """
     variants = ["pcpy", "b2b", "bcst" if collective == "all_gather" else "swap"]
     if not topo.fully_connected:
         variants.append("ring")
@@ -70,7 +89,16 @@ def candidate_variants(topo: Topology, collective: str, *, allow_prelaunch: bool
             variants.append("bidir_ring")
     if allow_prelaunch:
         variants += [f"prelaunch_{v}" for v in list(variants)]
+    if allow_optimized:
+        variants += [f"opt_{v}" for v in list(variants)]
     return variants
+
+
+def optimized_variants(topo: Topology, collective: str) -> list[str]:
+    """The ``opt_`` candidate set alone (DESIGN.md §7) — what the optimized
+    claim bands and the ``--optimized`` benchmark curves sweep over."""
+    return [v for v in candidate_variants(topo, collective, allow_optimized=True)
+            if v.startswith("opt_")]
 
 
 @functools.lru_cache(maxsize=256)
@@ -79,8 +107,10 @@ def _derive_dispatch_cached(
     collective: str,
     sizes: tuple[int, ...],
     allow_prelaunch: bool,
+    allow_optimized: bool,
 ) -> tuple[DispatchEntry, ...]:
-    variants = candidate_variants(topo, collective, allow_prelaunch=allow_prelaunch)
+    variants = candidate_variants(topo, collective, allow_prelaunch=allow_prelaunch,
+                                  allow_optimized=allow_optimized)
 
     winners: list[tuple[int, str]] = []
     for size in sizes:
@@ -108,15 +138,31 @@ def derive_dispatch(
     sizes: list[int],
     *,
     allow_prelaunch: bool = True,
+    allow_optimized: bool = False,
 ) -> list[DispatchEntry]:
     """Re-derive the best variant per size from the timing model (argmin).
 
     Adjacent sizes with the same winner are merged into ranges, which should
     approximately reproduce Tables 2/3 on the MI300X topology (validated in
-    tests/benchmarks) and gives the policy for the TPU topology.  Sweeps are
-    memoized per (topology, collective, sizes, allow_prelaunch).
+    tests/benchmarks) and gives the policy for the TPU topology.  With
+    ``allow_optimized`` the sweep also offers the ``opt_`` command streams
+    (DESIGN.md §7), yielding the re-derived thresholds for optimized
+    collectives.  Sweeps are memoized per (topology, collective, sizes,
+    allow_prelaunch, allow_optimized).
     """
-    return list(_derive_dispatch_cached(topo, collective, tuple(sizes), allow_prelaunch))
+    return list(_derive_dispatch_cached(topo, collective, tuple(sizes),
+                                        allow_prelaunch, allow_optimized))
+
+
+def best_variant_for(topo: Topology, collective: str, size: int,
+                     variants) -> tuple[str, float]:
+    """Argmin over an explicit variant list at one size (memoized points)."""
+    best, best_t = None, float("inf")
+    for v in variants:
+        t = variant_latency(topo, collective, size, v)
+        if t < best_t:
+            best, best_t = v, t
+    return best, best_t
 
 
 def pick_variant(entries: list[DispatchEntry], size: int) -> str:

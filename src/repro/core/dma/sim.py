@@ -1,14 +1,16 @@
 """Event-driven simulator of DMA offload execution (paper §3, Fig. 6/7).
 
-Executes a :class:`~repro.core.dma.commands.Schedule` on a
-:class:`~repro.core.dma.topology.Topology`.  Unlike the original closed-form
-per-device model, every shared piece of hardware is a *contended resource*
-with an explicit busy timeline (DESIGN.md §2):
+:func:`simulate` executes a :class:`~repro.core.dma.commands.Schedule` on a
+:class:`~repro.core.dma.topology.Topology` and returns a :class:`SimResult`.
+Unlike the original closed-form per-device model, every shared piece of
+hardware is a *contended resource* with an explicit busy timeline
+(DESIGN.md §2):
 
   host CPU     — serial: command-packet creation, doorbell MMIO writes,
                  completion-signal observation.
-  engine       — per-(device, engine) streaming capacity: a queue's data
-                 commands stream through it back-to-back at ``engine_bw``.
+  engine       — per-(device, engine) streaming capacity: data commands
+                 stream through it back-to-back at ``engine_bw``; all SDMA
+                 queue slots of an engine share this one resource.
   link         — per *directed* peer link: wire time serializes on each link;
                  transfers on distinct links overlap.  Multi-hop routes
                  (non-fully-connected topologies) occupy every link on the
@@ -39,12 +41,51 @@ Prelaunch (§4.5): queues that begin with a ``poll`` are armed ahead of time;
 control+schedule leave the critical path and are replaced by the poll-trigger
 observation latency.
 
+Optimized command streams (DESIGN.md §7): queues built by
+:mod:`repro.core.dma.optimizations` may carry a host submission batch size
+(``EngineQueue.batch`` — packet creation and doorbells amortize inside one
+scheduling event, §7.1), occupy extra SDMA queue slots of one engine
+(``EngineQueue.slot`` — decode/issue overlaps across slots; fetch and
+streaming bandwidth still contend on the engine, §7.2), and fuse completion
+signals into the final write packet of a
+data command (``Command.fused_tag``/``fused_signal`` — the engine scheduling
+round-trip ``sync_engine`` is replaced by the posted-write delay
+``fused_sync``; the host-side observation cost is unchanged, §7.3).  Baseline
+schedules set none of these and time identically to the unoptimized model.
+
 Symmetric fast path (DESIGN.md §6): schedules whose builder marked them
 ``symmetric`` simulate ONE representative device — waits on a neighbor's
 tagged signal resolve, by translation invariance, to the representative's own
 signal of the same (name, step) — and replicate the breakdown.  This is
 bit-identical to the full simulation because symmetric schedules never put
 two devices on the same directed link.
+
+Worked example — two devices, one copy each way, chained by a tagged signal::
+
+    from repro.core.dma import commands as cmd, mi300x_platform, simulate
+    from repro.core.dma.commands import EngineQueue, Schedule
+
+    topo = mi300x_platform()
+    MB = 1 << 20
+    q0 = EngineQueue(device=0, engine=0, commands=(
+        cmd.copy(0, 1, 4 * MB),          # dev0 pushes 4MB to dev1
+        cmd.signal(("done", 0, 0)),      # engine-scope semaphore, step 0
+        cmd.signal(),                    # host-observed completion
+    ))
+    q1 = EngineQueue(device=1, engine=0, commands=(
+        cmd.wait(("done", 0, 0)),        # block until dev0's data arrived
+        cmd.copy(1, 0, 4 * MB),          # then push 4MB back
+        cmd.signal(),
+    ))
+    res = simulate(Schedule(name="pingpong", queues=(q0, q1)), topo)
+    res.latency                  # end-to-end seconds (max over devices)
+    res.per_device[1].copy       # dev1's copy phase INCLUDES its wait time
+    res.breakdown.as_dict()      # critical-path device's 4-phase split
+    res.utilization("link:0>1")  # busy fraction of the 0->1 wire
+
+Device 1's queue makes no progress until device 0's tagged signal is raised;
+the worklist in :func:`_run` replays queues until all complete (a full pass
+with no progress raises ``RuntimeError`` naming the blocked tags).
 """
 from __future__ import annotations
 
@@ -57,6 +98,16 @@ from .topology import Topology
 
 @dataclasses.dataclass(frozen=True)
 class PhaseBreakdown:
+    """One device's latency split into the paper's four phases (Fig. 6/7).
+
+    The fields are durations in seconds and partition the device's total:
+    ``control`` (host packet creation), ``schedule`` (doorbells + engine
+    wake), ``copy`` (data movement, including time spent waiting on a
+    neighbor's signal) and ``sync`` (completion signaling + host
+    observation).  ``total`` is their sum; ``noncopy_fraction`` is the
+    paper's headline "how much of a small transfer is overhead" metric.
+    """
+
     control: float
     schedule: float
     copy: float
@@ -64,10 +115,12 @@ class PhaseBreakdown:
 
     @property
     def total(self) -> float:
+        """End-to-end seconds for this device (sum of the four phases)."""
         return self.control + self.schedule + self.copy + self.sync
 
     @property
     def noncopy_fraction(self) -> float:
+        """Fraction of ``total`` spent outside the copy phase (Fig. 7)."""
         t = self.total
         return 0.0 if t == 0 else (t - self.copy) / t
 
@@ -83,6 +136,16 @@ class PhaseBreakdown:
 
 @dataclasses.dataclass(frozen=True)
 class SimResult:
+    """Everything :func:`simulate` learned about one schedule execution.
+
+    ``latency`` is the collective's completion time (max over devices);
+    ``per_device`` maps device id to its :class:`PhaseBreakdown`;
+    ``timelines``/``busy`` expose the per-resource busy intervals recorded by
+    the event loop (resource keys are ``host:<dev>``, ``engine:<dev>.<e>``,
+    ``link:<a>><b>`` and ``hostlink:<dev>:<dir>``), which the power model and
+    the utilization reports consume.
+    """
+
     latency: float                       # collective completion (max over devices)
     per_device: dict[int, PhaseBreakdown]
     engines_used: dict[int, int]
@@ -158,6 +221,10 @@ class _Sim:
         self.timelines: dict[str, _Timeline] = {}
         self.tags: dict[tuple, float] = {}  # tagged signal -> raise time
         self.host_signals: dict[int, list[float]] = defaultdict(list)
+        # Fused completions (§7.3) write adjacent slots of one completion
+        # record per device: the host drains them in a single sweep, paying
+        # sync_obs once and sync_obs_batched for each further entry.
+        self.fused_signals: dict[int, list[float]] = defaultdict(list)
 
     def timeline(self, key: str) -> _Timeline:
         tl = self.timelines.get(key)
@@ -233,23 +300,75 @@ class _Sim:
                     end = max(end, self.transfer(cmd.dsts[0], cmd.src, cmd.size, start))
                 st.last_end = max(st.last_end, end)
                 st.copy_end = max(st.copy_end, end)
+                # Fused write+signal (§7.3): the signal payload rides the
+                # final write packet — no engine scheduling round-trip, so
+                # the queue front end (st.issue) is NOT gated.
+                if cmd.fused_tag is not None:
+                    self.tags[self.resolve(cmd.fused_tag)] = end + c.fused_sync
+                if cmd.fused_signal:
+                    self.fused_signals[st.q.device].append(end + c.fused_sync)
             st.idx += 1
         return True
 
 
+def _control_cost(live: list[EngineQueue], c) -> float:
+    """Host packet-creation seconds for one device's live queues.
+
+    Baseline (``batch=1``): ``control`` per command.  Batched submission
+    (§7.1): commands are created in groups of up to ``batch`` per host
+    scheduling event — the first command of each event pays the full
+    ``control``, the rest the amortized ``control_batched``.  Events span
+    queue boundaries: consecutively submitted batched queues fill the same
+    scheduling event (the host builds all their packets in one pass).
+    """
+    t = 0.0
+    room = 0                       # remaining commands in the current event
+    for q in live:
+        if q.batch <= 1:
+            t += len(q.commands) * c.control
+            room = 0               # an unbatched submission breaks the event
+            continue
+        for _ in q.commands:
+            if room == 0:
+                t += c.control
+                room = q.batch - 1
+            else:
+                t += c.control_batched
+                room -= 1
+    return t
+
+
 def _start_device(sim: _Sim, dev: int, queues: list[EngineQueue]) -> tuple[float, list[_QueueState]]:
-    """Host control + doorbells; returns (t_control, queue states)."""
+    """Host control + doorbells; returns (t_control, queue states).
+
+    Doorbells are serial MMIO writes on the host.  Batched queues
+    (``batch > 1``) submitted consecutively ring back-to-back: the first
+    rings at the full ``doorbell`` cost, subsequent ones at
+    ``doorbell_batched`` (§7.1).  This is deliberately coarser than the
+    command-level event accounting of :func:`_control_cost` (which may
+    start a new event mid-queue when ``batch`` commands fill up): doorbells
+    are per *queue*, so only an intervening unbatched queue resets the
+    amortization.  Unbatched queues always pay ``doorbell``.
+    """
     c = sim.topo.calib
     live = [q for q in queues if not q.prelaunched]
     pre = [q for q in queues if q.prelaunched]
     host = sim.timeline(f"host:{dev}")
 
-    t_control = sum(len(q.commands) for q in live) * c.control
+    t_control = _control_cost(live, c)
     host.acquire(0.0, t_control)
 
     states: list[_QueueState] = []
+    batched_seen = False
     for q in live:
-        _, bell = host.acquire(host.free, c.doorbell)
+        if q.batch > 1 and batched_seen:
+            bell_cost = c.doorbell_batched
+        else:
+            bell_cost = c.doorbell
+        # An intervening unbatched submission resets the amortization:
+        # the next batched queue rings at full cost again.
+        batched_seen = q.batch > 1
+        _, bell = host.acquire(host.free, bell_cost)
         engine_start = bell + c.fetch
         sim.timeline(f"engine:{dev}.{q.engine}").acquire(bell, c.fetch)
         states.append(_QueueState(q, engine_start))
@@ -264,11 +383,17 @@ def _finish_device(sim: _Sim, dev: int, t_control: float,
     sched_end = max((st.start for st in states), default=t_control)
     copy_end = max((st.copy_end for st in states), default=sched_end)
     sigs = sim.host_signals.get(dev, [])
+    fused = sim.fused_signals.get(dev, [])
     # The host drains its completion-signal set serially once the last
-    # engine signal has landed (one observation per signal).
-    signal_done = max([copy_end] + sigs)
-    _, total = sim.timeline(f"host:{dev}").acquire(signal_done,
-                                                   len(sigs) * c.sync_obs)
+    # engine signal has landed: one observation per scattered per-queue
+    # signal; fused completions (§7.3) share one contiguous completion
+    # record, so the sweep pays sync_obs once plus sync_obs_batched per
+    # further entry.
+    t_obs = len(sigs) * c.sync_obs
+    if fused:
+        t_obs += c.sync_obs + (len(fused) - 1) * c.sync_obs_batched
+    signal_done = max([copy_end] + sigs + fused)
+    _, total = sim.timeline(f"host:{dev}").acquire(signal_done, t_obs)
     return PhaseBreakdown(
         control=t_control,
         schedule=max(0.0, sched_end - t_control),
@@ -306,7 +431,18 @@ def _device_hbm_bytes(queues: list[EngineQueue]) -> int:
 
 
 def simulate(schedule: Schedule, topo: Topology, *, symmetric: bool | None = None) -> SimResult:
-    """Simulate ``schedule``; ``symmetric`` overrides the builder's marking."""
+    """Execute ``schedule`` on ``topo`` and return a :class:`SimResult`.
+
+    ``symmetric=None`` (default) honors the builder's ``Schedule.symmetric``
+    marking: marked schedules run the one-representative-device fast path
+    (DESIGN.md §6), everything else runs the full multi-device event loop.
+    Pass ``True``/``False`` to override — forcing ``True`` on a schedule that
+    is not actually device-symmetric produces wrong (optimistic) timings and
+    is only useful for testing the fast path itself.
+
+    Raises ``RuntimeError`` if the schedule deadlocks (a ``wait`` on a tag no
+    remaining queue can raise); the message names the blocked tags.
+    """
     sym = schedule.symmetric if symmetric is None else symmetric
     devices = schedule.devices
     if sym and len(devices) > 1:

@@ -19,8 +19,8 @@ transfers are multi-hop and the simulator charges every link on the path plus
 a per-hop router latency (``Calibration.hop_latency``).
 
 Phase constants live in :class:`Calibration` and are fit once (see
-``benchmarks/calibration.py`` and EXPERIMENTS.md) so that the model reproduces
-the paper's measured figures.
+``benchmarks/calibration.py``) so that the model reproduces the paper's
+measured figures.
 """
 from __future__ import annotations
 
@@ -33,13 +33,30 @@ class Calibration:
     """Per-phase latency constants (seconds) of a single DMA offload (Fig. 6/7).
 
     control  : CPU command-packet creation, per command.
+    control_batched: marginal packet-creation cost for the 2nd..Nth command of
+               one batched submission event (DESIGN.md §7.1): the descriptor
+               template, queue pointers and cache lines are already hot, so
+               only the per-command payload fields are written.
     doorbell : CPU MMIO doorbell write, per engine (serialized on the CPU).
+    doorbell_batched: marginal doorbell cost for the 2nd..Nth hardware queue
+               rung within one batched submission event (§7.1) — the MMIO
+               writes are posted back-to-back without an intervening
+               scheduling round-trip.
     fetch    : engine wake + command fetch from the system-memory queue.
     copy_setup: per data-command decode + address translation on the engine.
     b2b_issue: incremental issue cost of an overlapped back-to-back copy
                (subsequent loads issued before prior stores complete, §4.4).
     sync_engine: engine-side atomic signal update.
+    fused_sync: latency of a *fused* write+signal (DESIGN.md §7.3): the
+               signal payload rides the final write packet of the transfer,
+               so only the fabric's posted-write completion delay remains
+               instead of a full engine scheduling round (``sync_engine``).
     sync_obs : CPU-side completion observation, per signal (serialized).
+    sync_obs_batched: marginal observation cost for the 2nd..Nth *fused*
+               completion of one device (§7.3): fused signals write adjacent
+               slots of a contiguous completion record, so the host's drain
+               loop sweeps them in one pass instead of polling scattered
+               per-queue signal addresses.
     poll_trigger: latency from the triggering memory write until a polling
                engine observes it (prelaunch, §4.5); also the latency for a
                remote engine to observe a tagged semaphore signal (wait).
@@ -48,14 +65,18 @@ class Calibration:
     """
 
     # Values fit by benchmarks/calibration.py so the model lands on the
-    # paper's measured claims (see EXPERIMENTS.md §Calibration).
+    # paper's measured claims.
     control: float = 0.5987e-6
+    control_batched: float = 0.1497e-6
     doorbell: float = 2.436e-6
+    doorbell_batched: float = 0.406e-6
     fetch: float = 0.5014e-6
     copy_setup: float = 3.146e-6
     b2b_issue: float = 0.2919e-6
     sync_engine: float = 0.9165e-6
+    fused_sync: float = 0.1833e-6
     sync_obs: float = 1.596e-6
+    sync_obs_batched: float = 1.041e-6
     poll_trigger: float = 0.5838e-6
     hop_latency: float = 0.0
     # Effective per-engine streaming bandwidth (one engine saturates roughly
@@ -260,12 +281,16 @@ def tpu_v5e_pod(n_devices: int = 256, calib: Calibration | None = None) -> Topol
     """
     c = calib or Calibration(
         control=0.05e-6,
+        control_batched=0.0125e-6,  # descriptor template reuse on-chip
         doorbell=0.0,          # no host doorbell: descriptors issue on-chip
+        doorbell_batched=0.0,
         fetch=0.10e-6,
         copy_setup=0.80e-6,    # DMA descriptor + route setup
         b2b_issue=0.05e-6,
         sync_engine=0.40e-6,   # semaphore signal
+        fused_sync=0.08e-6,    # semaphore rides the final write packet
         sync_obs=0.20e-6,      # semaphore wait observe
+        sync_obs_batched=0.05e-6,
         poll_trigger=0.20e-6,
         hop_latency=0.40e-6,   # ICI router forward per extra hop
         engine_bw=50e9,

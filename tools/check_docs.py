@@ -1,0 +1,77 @@
+#!/usr/bin/env python3
+"""Docs sanity checker (CI): the documentation cross-links must not rot.
+
+Checks, over the whole repo:
+
+1. Every ``DESIGN.md §N`` / ``DESIGN.md §N.M`` citation in source docstrings
+   and comments resolves to a real ``## §N`` / ``### §N.M`` heading.
+2. README.md exists and every ``benchmarks/<x>.py`` / ``src/...`` /
+   ``tests/...`` path it mentions exists on disk.
+3. The markdown files README.md links to exist.
+
+Exit code 0 when everything resolves; 1 with a line per broken reference.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+SOURCE_DIRS = ("src", "benchmarks", "tests", "examples", "tools")
+
+CITATION = re.compile(r"DESIGN\.md\s+§(\d+(?:\.\d+)?)")
+REPO_PATH = re.compile(r"\b((?:src|benchmarks|tests|examples|tools)/[\w./-]+\.\w+)")
+MD_LINK = re.compile(r"\]\(([\w./-]+\.md)\)")
+
+
+def design_anchors(design_text: str) -> set[str]:
+    return set(re.findall(r"^#{2,}\s+§(\d+(?:\.\d+)?)\b", design_text, re.M))
+
+
+def check() -> list[str]:
+    errors: list[str] = []
+
+    design_path = ROOT / "DESIGN.md"
+    if not design_path.exists():
+        return ["DESIGN.md is missing"]
+    anchors = design_anchors(design_path.read_text())
+
+    for d in SOURCE_DIRS:
+        for py in sorted((ROOT / d).rglob("*.py")):
+            text = py.read_text()
+            for line_no, line in enumerate(text.splitlines(), 1):
+                for sec in CITATION.findall(line):
+                    # A dotted citation must resolve to its exact §N.M
+                    # heading; only undotted ones resolve at section level.
+                    if sec not in anchors:
+                        errors.append(
+                            f"{py.relative_to(ROOT)}:{line_no}: cites "
+                            f"DESIGN.md §{sec}, no such heading")
+
+    readme = ROOT / "README.md"
+    if not readme.exists():
+        errors.append("README.md is missing")
+    else:
+        text = readme.read_text()
+        for rel in sorted({*REPO_PATH.findall(text)}):
+            if not (ROOT / rel).exists():
+                errors.append(f"README.md references missing file {rel}")
+        for rel in sorted({*MD_LINK.findall(text)}):
+            if not (ROOT / rel).exists():
+                errors.append(f"README.md links to missing doc {rel}")
+
+    return errors
+
+
+def main() -> int:
+    errors = check()
+    for e in errors:
+        print(f"docs-sanity: {e}", file=sys.stderr)
+    if not errors:
+        print("docs-sanity: all DESIGN.md anchors and README references resolve")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
