@@ -36,12 +36,18 @@ def time_us(fn, *args, reps: int = 200, warmup: int = 20) -> float:
     return (time.perf_counter() - t0) / reps * 1e6
 
 
+#: Chunk granularities the ``--optimized`` figure sweeps offer the argmin
+#: (DESIGN.md §8.1): the calibrated hardware ceiling (None) plus finer splits.
+CHUNK_SWEEP = (None, 2 * MB, 1 * MB)
+
+
 def optimized_report(cc: "ClaimChecker", topo, collective: str,
                      lat: dict, rccl: dict, verbose: bool) -> None:
     """Shared ``--optimized`` tail for fig13/fig14: baseline-vs-optimized
-    curve, re-derived dispatch with the ``opt_`` streams (DESIGN.md §7), and
-    the optimized claim bands for ``collective``."""
-    from repro.core.dma import derive_dispatch
+    curve, chunk-size sensitivity at GB scale, re-derived dispatch with the
+    ``opt_`` streams over (variant, chunk) pairs (DESIGN.md §7/§8), and the
+    optimized claim bands for ``collective``."""
+    from repro.core.dma import derive_dispatch, variant_latency
     from repro.core.dma.claims import optimized_stream_claims
 
     base_vs = {v for v in lat if not v.startswith("opt_")}
@@ -53,11 +59,26 @@ def optimized_report(cc: "ClaimChecker", topo, collective: str,
             b = min(lat[v][s] for v in base_vs)
             o = min(lat[v][s] for v in opt_vs)
             print(f"{fmt_size(s):>5} {rccl[s]/b:16.2f} {rccl[s]/o:16.2f} {b/o:7.2f}")
-        table = derive_dispatch(topo, collective, ALL_SIZES, allow_optimized=True)
-        print("\nDerived dispatch with optimized streams (DESIGN.md §7):")
+        chunks = [c for c in (512 * KB, 1 * MB, 2 * MB, 4 * MB)
+                  if c <= topo.calib.max_chunk_bytes]
+        print("\nchunk-size sensitivity (opt gain = pcpy/opt_pcpy per "
+              "max_chunk_bytes, DESIGN.md §8.1):")
+        print(f"{'size':>5} " + "".join(f"{fmt_size(c):>10}" for c in chunks))
+        for s in (256 * MB, 1 * GB, 4 * GB):
+            row = []
+            for ch in chunks:
+                b = variant_latency(topo, collective, s, "pcpy", ch)
+                o = variant_latency(topo, collective, s, "opt_pcpy", ch)
+                row.append(b / o)
+            print(f"{fmt_size(s):>5} " + "".join(f"{g:10.3f}" for g in row))
+        table = derive_dispatch(topo, collective, ALL_SIZES,
+                                allow_optimized=True, chunk_sizes=CHUNK_SWEEP)
+        print("\nDerived dispatch with optimized streams + chunk sweep "
+              "(DESIGN.md §7/§8):")
         for e in table:
             hi = fmt_size(e.hi) if e.hi else "inf"
-            print(f"  [{fmt_size(e.lo)}, {hi}) -> {e.variant}")
+            ch = "calib" if e.chunk is None else fmt_size(e.chunk)
+            print(f"  [{fmt_size(e.lo)}, {hi}) -> {e.variant} (chunk {ch})")
     for c in optimized_stream_claims(topo, collectives=(collective,)):
         cc.check(c.description, c.model_value, c.paper_value, c.lo, c.hi)
 

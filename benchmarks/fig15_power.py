@@ -1,6 +1,11 @@
 """Figure 15: total GPU power of the best DMA all-gather vs CU (RCCL):
 ~32% less power at bandwidth-bound sizes (3.7x less XCD power), 3-4% from
-fewer engines (b2b) at 16-64KB, 5-10% from bcst's single source read >1MB."""
+fewer engines (b2b) at 16-64KB, 5-10% from bcst's single source read >1MB.
+
+``--optimized`` additionally prices the §7 command streams (DESIGN.md §8.4:
+fewer host wakeups under batched submission, fused signals skipping the
+engine's atomic round-trip) and checks the paper's 3-10% additional power
+saving at latency-bound sizes."""
 from __future__ import annotations
 
 from repro.core.dma import (allgather_schedule, cu_collective_power,
@@ -10,7 +15,7 @@ from repro.core.dma.rccl_model import rccl_collective_latency
 from .common import KB, MB, ClaimChecker, fmt_size
 
 
-def run(verbose: bool = True):
+def run(verbose: bool = True, optimized: bool = False):
     topo = mi300x_platform()
     rc = rccl_ag_calibration()
     sizes = [16 * KB, 64 * KB, 1 * MB, 4 * MB, 64 * MB, 256 * MB, 1024 * MB]
@@ -22,10 +27,11 @@ def run(verbose: bool = True):
         p_cu = cu_collective_power(topo, s, rccl_collective_latency(topo, s, rc))
         rows.append((s, v, p_dma, p_cu))
     if verbose:
-        print("size   variant           dma_W (xcd/iod/hbm)      cu_W (xcd)   saving")
+        print("size   variant           dma_W (xcd/iod/hbm/host)      cu_W (xcd)   saving")
         for s, v, pd, pc in rows:
             print(f"{fmt_size(s):>5} {v:>16} {pd.total:7.1f} ({pd.xcd:5.1f}/{pd.iod:4.1f}/"
-                  f"{pd.hbm:5.1f}) {pc.total:8.1f} ({pc.xcd:5.1f}) {1-pd.total/pc.total:7.1%}")
+                  f"{pd.hbm:5.1f}/{pd.host:4.1f}) {pc.total:8.1f} ({pc.xcd:5.1f}) "
+                  f"{1-pd.total/pc.total:7.1%}")
 
     cc = ClaimChecker("fig15")
     bw = [r for r in rows if r[0] >= 64 * MB]
@@ -40,11 +46,41 @@ def run(verbose: bool = True):
         pa = dma_collective_power(topo, s, simulate(allgather_schedule(topo, s, a), topo)).total
         pb = dma_collective_power(topo, s, simulate(allgather_schedule(topo, s, b), topo)).total
         cc.check(f"{b} saving vs {a} @{fmt_size(s)}", 1 - pb / pa, paper, lo, hi)
+    if optimized:
+        optimized_power_report(cc, topo, verbose)
     return cc, rows
 
 
-def main():
-    cc, _ = run()
+def optimized_power_report(cc: ClaimChecker, topo, verbose: bool) -> None:
+    """Baseline-vs-optimized stream power (DESIGN.md §8.4) + the claim band."""
+    from repro.core.dma.claims import optimized_power_claims
+
+    if verbose:
+        print("\nbaseline-vs-optimized stream power (same pcpy schedule family):")
+        print(f"{'size':>6} {'pcpy_W':>8} {'opt_W':>8} {'saving':>8}  (host wakeups, atomics)")
+        for s in (16 * KB, 64 * KB, 256 * KB, 1 * MB):
+            base = simulate(allgather_schedule(topo, s, "pcpy"), topo)
+            opt = simulate(allgather_schedule(topo, s, "opt_pcpy"), topo)
+            pb = dma_collective_power(topo, s, base)
+            po = dma_collective_power(topo, s, opt)
+            dev = max(base.per_device, key=lambda d: base.per_device[d].total)
+            print(f"{fmt_size(s):>6} {pb.total:8.1f} {po.total:8.1f} "
+                  f"{1 - po.total / pb.total:8.1%}  "
+                  f"({base.host_events[dev]}->{opt.host_events[dev]}, "
+                  f"{base.engine_atomics[dev]}->{opt.engine_atomics[dev]})")
+    for c in optimized_power_claims(topo):
+        cc.check(c.description, c.model_value, c.paper_value, c.lo, c.hi)
+
+
+def main(argv=None):
+    import argparse
+
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--optimized", action="store_true",
+                   help="also price the opt_ command streams (DESIGN.md §8.4) "
+                        "and check the paper's 3-10%% additional saving")
+    args = p.parse_args(argv)
+    cc, _ = run(optimized=args.optimized)
     return 0 if cc.report() else 1
 
 

@@ -1,5 +1,8 @@
-"""Figure 16: TTFT speedups for LLM inference with optimized (b2b) DMA KV
-fetch vs baseline per-block DMA, at 100% CPU cache hit, prompts 4096/8192."""
+"""Figure 16: TTFT speedups for LLM inference with optimized (opt_b2b) DMA
+KV fetch vs baseline per-block DMA, at 100% CPU cache hit, prompts
+4096/8192.  ``opt_b2b`` is the fetch the serving engine's ``kv_fetch_plan``
+actually requests: the batched path on the optimized command stream
+(DESIGN.md §7/§8)."""
 from __future__ import annotations
 
 from repro.core.serving_model import PAPER_LLMS, ttft
@@ -11,7 +14,7 @@ def run(verbose: bool = True):
     for prompt in (4096, 8192):
         for spec in PAPER_LLMS:
             t_p = ttft(spec, prompt, "pcpy")
-            t_b = ttft(spec, prompt, "b2b")
+            t_b = ttft(spec, prompt, "opt_b2b")
             t_k = ttft(spec, prompt, "kernel")
             rows.append((prompt, spec, t_p, t_b, t_k))
     if verbose:

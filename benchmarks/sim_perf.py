@@ -1,0 +1,324 @@
+"""Simulator hot-path microbenchmark (DESIGN.md §8.2/§8.3) + CI perf guard.
+
+Chunking (§8.1) multiplies event counts 10-100x: a 4GB all-to-all on the
+8-GPU MI300X box is ~7000 commands instead of ~60.  This benchmark times the
+overhauled simulator (heap-based event queue, append-only coalescing
+timelines, closed-form chunk runs) against the **pre-overhaul simulator**
+(vendored below: per-command execution, non-coalescing timelines, scan-based
+worklist — the PR-2 core) on the same chunked schedules, and asserts a >=5x
+speedup on the reference chunked 8-device GB-scale all-to-all sweep.
+
+``--check`` (CI) additionally enforces a wall-clock budget on the new
+simulator's sweep and writes a JSON report next to the dispatch-sweep cache
+(``$REPRO_DISPATCH_CACHE``) so the perf numbers ride the same artifact.
+
+Both simulators produce the same latencies (asserted per scenario): the
+overhaul changes data structures, not semantics.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from collections import defaultdict
+
+from repro.core.dma import alltoall_schedule, mi300x_platform, simulate
+from repro.core.dma.commands import DATA_KINDS, CmdKind
+
+GB = 1024 * 1024 * 1024
+
+#: Reference scenario for the perf guard: chunked 8-device GB-scale
+#: all-to-all, baseline and optimized streams, full (non-symmetric) sim.
+SCENARIOS = tuple(
+    (size, variant)
+    for size in (1 * GB, 2 * GB, 4 * GB)
+    for variant in ("pcpy", "opt_pcpy"))
+
+MIN_SPEEDUP = 5.0        # acceptance floor; the overhaul lands far above
+BUDGET_S = 2.5           # --check: new-sim wall budget for the whole sweep
+
+
+# --------------------------------------------------------------------------
+# Pre-overhaul simulator (vendored PR-2 core, trimmed): per-command event
+# loop, non-coalescing interval timelines, scan-based blocked-queue worklist.
+# Kept verbatim-in-spirit so the speedup is measured against the real thing.
+# --------------------------------------------------------------------------
+
+class _LegacyTimeline:
+    __slots__ = ("free", "busy", "intervals")
+
+    def __init__(self):
+        self.free = 0.0
+        self.busy = 0.0
+        self.intervals = []
+
+    def acquire(self, t, dur):
+        start = t if t > self.free else self.free
+        end = start + dur
+        self.free = end
+        if dur > 0.0:
+            self.busy += dur
+            self.intervals.append((start, end))
+        return start, end
+
+
+class _LegacyQueueState:
+    __slots__ = ("q", "idx", "issue", "seen_data", "last_end", "copy_end", "start")
+
+    def __init__(self, q, start):
+        self.q = q
+        self.idx = 0
+        self.start = start
+        self.issue = start
+        self.seen_data = False
+        self.last_end = start
+        self.copy_end = start
+
+
+class _LegacySim:
+    def __init__(self, topo):
+        self.topo = topo
+        self.calib = topo.calib
+        self.timelines = {}
+        self.tags = {}
+        self.host_signals = defaultdict(list)
+        self.fused_signals = defaultdict(list)
+
+    def timeline(self, key):
+        tl = self.timelines.get(key)
+        if tl is None:
+            tl = self.timelines[key] = _LegacyTimeline()
+        return tl
+
+    def transfer(self, src, dst, size, start):
+        c = self.calib
+        eff = c.dma_link_efficiency
+        if src == "host" or dst == "host":
+            dev = dst if src == "host" else src
+            dirn = "h2d" if src == "host" else "d2h"
+            tl = self.timeline(f"hostlink:{dev}:{dirn}")
+            _, end = tl.acquire(start, size / (self.topo.host_link_bw * eff))
+            return end
+        wire = size / (self.topo.link_bw * eff)
+        t = start
+        end = start
+        for h, (a, b) in enumerate(self.topo.route(src, dst)):
+            req = t if h == 0 else t + c.hop_latency
+            s, end = self.timeline(f"link:{a}>{b}").acquire(req, wire)
+            t = s
+        return end
+
+    def advance(self, st):
+        c = self.calib
+        cmds = st.q.commands
+        while st.idx < len(cmds):
+            cmd = cmds[st.idx]
+            kind = cmd.kind
+            if kind is CmdKind.WAIT:
+                t = self.tags.get(cmd.tag)
+                if t is None:
+                    return False
+                arrival = t + c.poll_trigger
+                if arrival > st.issue:
+                    st.issue = arrival
+            elif kind is CmdKind.POLL:
+                pass
+            elif kind is CmdKind.SIGNAL:
+                t = max(st.issue, st.last_end) + c.sync_engine
+                if cmd.tag is not None:
+                    st.issue = t
+                    self.tags[cmd.tag] = t
+                else:
+                    self.host_signals[st.q.device].append(t)
+            elif kind in DATA_KINDS:
+                st.issue += c.b2b_issue if st.seen_data else c.copy_setup
+                st.seen_data = True
+                if kind is CmdKind.SWAP:
+                    stream_bytes = 2 * cmd.size
+                else:
+                    stream_bytes = max(cmd.local_read_bytes, cmd.remote_write_bytes)
+                engine = self.timeline(f"engine:{st.q.device}.{st.q.engine}")
+                start = max(st.issue, engine.free)
+                _, end = engine.acquire(start, stream_bytes / c.engine_bw)
+                for dst in cmd.dsts:
+                    end = max(end, self.transfer(cmd.src, dst, cmd.size, start))
+                if kind is CmdKind.SWAP:
+                    end = max(end, self.transfer(cmd.dsts[0], cmd.src, cmd.size, start))
+                st.last_end = max(st.last_end, end)
+                st.copy_end = max(st.copy_end, end)
+                if cmd.fused_tag is not None:
+                    self.tags[cmd.fused_tag] = end + c.fused_sync
+                if cmd.fused_signal:
+                    self.fused_signals[st.q.device].append(end + c.fused_sync)
+            st.idx += 1
+        return True
+
+
+def _legacy_control_cost(live, c):
+    t = 0.0
+    room = 0
+    for q in live:
+        if q.batch <= 1:
+            t += len(q.commands) * c.control
+            room = 0
+            continue
+        for _ in q.commands:
+            if room == 0:
+                t += c.control
+                room = q.batch - 1
+            else:
+                t += c.control_batched
+                room -= 1
+    return t
+
+
+def _legacy_start_device(sim, dev, queues):
+    c = sim.topo.calib
+    live = [q for q in queues if not q.prelaunched]
+    pre = [q for q in queues if q.prelaunched]
+    host = sim.timeline(f"host:{dev}")
+    t_control = _legacy_control_cost(live, c)
+    host.acquire(0.0, t_control)
+    states = []
+    batched_seen = False
+    for q in live:
+        bell_cost = c.doorbell_batched if q.batch > 1 and batched_seen else c.doorbell
+        batched_seen = q.batch > 1
+        _, bell = host.acquire(host.free, bell_cost)
+        sim.timeline(f"engine:{dev}.{q.engine}").acquire(bell, c.fetch)
+        states.append(_LegacyQueueState(q, bell + c.fetch))
+    for q in pre:
+        states.append(_LegacyQueueState(q, c.poll_trigger))
+    return t_control, states
+
+
+def _legacy_finish_device(sim, dev, t_control, states):
+    c = sim.topo.calib
+    sched_end = max((st.start for st in states), default=t_control)
+    copy_end = max((st.copy_end for st in states), default=sched_end)
+    sigs = sim.host_signals.get(dev, [])
+    fused = sim.fused_signals.get(dev, [])
+    t_obs = len(sigs) * c.sync_obs
+    if fused:
+        t_obs += c.sync_obs + (len(fused) - 1) * c.sync_obs_batched
+    signal_done = max([copy_end] + sigs + fused)
+    _, total = sim.timeline(f"host:{dev}").acquire(signal_done, t_obs)
+    return total
+
+
+def legacy_simulate(schedule, topo):
+    """Pre-overhaul full simulation; returns end-to-end latency (seconds)."""
+    sim = _LegacySim(topo)
+    devices = schedule.devices
+    started = {d: _legacy_start_device(sim, d, schedule.queues_for(d))
+               for d in devices}
+    pending = [st for _, states in started.values() for st in states]
+    while pending:                      # scan-based worklist: O(passes x queues)
+        progressed = False
+        still = []
+        for st in pending:
+            before = st.idx
+            if not sim.advance(st):
+                still.append(st)
+            progressed = progressed or st.idx != before or st not in still
+        if not progressed:
+            raise RuntimeError("deadlocked schedule")
+        pending = still
+    return max(_legacy_finish_device(sim, d, t, states)
+               for d, (t, states) in started.items())
+
+
+# --------------------------------------------------------------------------
+
+
+def _wall(fn, reps=3):
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(verbose: bool = True) -> dict:
+    topo = mi300x_platform()
+    scenarios = []
+    new_total = legacy_total = 0.0
+    for size, variant in SCENARIOS:
+        sched = alltoall_schedule(topo, size, variant)
+        n_cmds = sched.total_commands()
+        lat_new = simulate(sched, topo, symmetric=False).latency
+        lat_old = legacy_simulate(sched, topo)
+        if abs(lat_new - lat_old) > 1e-9 + 1e-6 * lat_old:
+            raise AssertionError(
+                f"overhauled sim diverged from pre-overhaul reference on "
+                f"{variant}@{size}: {lat_new} vs {lat_old}")
+        t_new = _wall(lambda: simulate(sched, topo, symmetric=False))
+        t_old = _wall(lambda: legacy_simulate(sched, topo))
+        new_total += t_new
+        legacy_total += t_old
+        scenarios.append({
+            "size": size, "variant": variant, "commands": n_cmds,
+            "latency_s": lat_new, "wall_new_s": t_new, "wall_legacy_s": t_old,
+            "speedup": t_old / t_new,
+        })
+        if verbose:
+            print(f"  {variant:>9} @{size // GB}GB: {n_cmds:5d} cmds  "
+                  f"new {t_new * 1e3:7.2f}ms  legacy {t_old * 1e3:7.2f}ms  "
+                  f"{t_old / t_new:6.1f}x")
+    speedup = legacy_total / new_total
+    report = {
+        "scenarios": scenarios,
+        "wall_new_s": new_total,
+        "wall_legacy_s": legacy_total,
+        "speedup": speedup,
+        "min_speedup": MIN_SPEEDUP,
+        "budget_s": BUDGET_S,
+    }
+    if verbose:
+        print(f"chunked 8-device GB-scale all-to-all sweep: "
+              f"{speedup:.1f}x speedup (floor {MIN_SPEEDUP}x), "
+              f"new-sim wall {new_total:.3f}s (budget {BUDGET_S}s)")
+    return report
+
+
+def _json_path() -> str:
+    cache_dir = os.environ.get("REPRO_DISPATCH_CACHE")
+    if cache_dir:
+        os.makedirs(cache_dir, exist_ok=True)
+        return os.path.join(cache_dir, "sim_perf.json")
+    return "sim_perf.json"
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--check", action="store_true",
+                   help="CI perf guard: fail when the speedup floor or the "
+                        "wall-clock budget is violated; write the JSON "
+                        "report next to the dispatch-sweep cache")
+    p.add_argument("--json", default=None,
+                   help="explicit JSON report path (default: "
+                        "$REPRO_DISPATCH_CACHE/sim_perf.json)")
+    args = p.parse_args(argv)
+    report = run()
+    if args.check or args.json:
+        path = args.json or _json_path()
+        with open(path, "w") as f:
+            json.dump(report, f, indent=1)
+        print(f"wrote {path}")
+    if not args.check:
+        return 0
+    ok = True
+    if report["speedup"] < MIN_SPEEDUP:
+        print(f"FAIL: speedup {report['speedup']:.1f}x < {MIN_SPEEDUP}x floor")
+        ok = False
+    if report["wall_new_s"] > BUDGET_S:
+        print(f"FAIL: new-sim wall {report['wall_new_s']:.3f}s exceeds "
+              f"{BUDGET_S}s budget")
+        ok = False
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

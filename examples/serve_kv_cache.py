@@ -29,7 +29,7 @@ def main():
     print(f"miss : ttft={miss.request_stats[0].ttft_wall_s*1e3:7.2f}ms (prefill) "
           f"tok/s={miss.tokens_per_s_wall:7.1f}")
     rows = []
-    for backend in ("pcpy", "b2b", "kernel"):
+    for backend in ("pcpy", "b2b", "opt_b2b", "kernel"):
         res = eng.generate(prompts, keys, NEW, fetch_backend=backend)
         st = res.request_stats[0]
         assert (res.tokens == miss.tokens).all(), backend

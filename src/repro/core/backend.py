@@ -26,9 +26,15 @@ MB = 1024 * 1024
 # previously derived dispatch tables.
 # v2: optimized command streams (DESIGN.md §7) — new Calibration constants
 # (control_batched/doorbell_batched/fused_sync/sync_obs_batched).
-_TABLE_CACHE_VERSION = 2
+# v3: chunked command streams (DESIGN.md §8) — Calibration.max_chunk_bytes
+# and the swept chunk granularities join the fingerprint, entries carry a
+# per-range ``chunk``; stale v2 tables must never serve chunked sweeps.
+_TABLE_CACHE_VERSION = 3
 # The size sweep behind every cached/bundled table; part of the cache key.
 _SWEEP_SIZES = [2 ** i for i in range(10, 31)]
+# Chunk granularities the table sweep offers the argmin (DESIGN.md §8.1):
+# the calibrated default (None) plus a finer split; part of the cache key.
+_SWEEP_CHUNKS = (None, 1 * MB)
 _TABLE_CACHE_DIR = os.environ.get(
     "REPRO_DISPATCH_CACHE",
     os.path.join(tempfile.gettempdir(), "repro-dma-dispatch"))
@@ -42,8 +48,12 @@ _BUNDLED_TABLES = os.path.join(os.path.dirname(__file__), "dma",
 
 
 def _table_key(topo: Topology, sizes: list[int]) -> str:
+    # topo!r embeds the full Calibration (including max_chunk_bytes and the
+    # chunking-relevant issue constants), so any recalibration — not just a
+    # version bump — misses the cache and re-derives.
     return hashlib.sha1(
-        f"v{_TABLE_CACHE_VERSION}|{topo!r}|{sizes!r}".encode()).hexdigest()[:16]
+        f"v{_TABLE_CACHE_VERSION}|{topo!r}|{sizes!r}|{_SWEEP_CHUNKS!r}"
+        .encode()).hexdigest()[:16]
 
 
 def _table_cache_path(topo: Topology, sizes: list[int]) -> str:
@@ -53,7 +63,8 @@ def _table_cache_path(topo: Topology, sizes: list[int]) -> str:
 
 def _parse_tables(raw):
     return tuple(
-        tuple(DispatchEntry(e["lo"], e["hi"], e["variant"]) for e in tbl)
+        tuple(DispatchEntry(e["lo"], e["hi"], e["variant"], e.get("chunk"))
+              for e in tbl)
         for tbl in raw)
 
 
@@ -76,14 +87,18 @@ def _load_table_cache(topo: Topology, sizes: list[int]):
         return None
 
 
+def _serialize_tables(tables):
+    return [[{"lo": e.lo, "hi": e.hi, "variant": e.variant, "chunk": e.chunk}
+             for e in tbl] for tbl in tables]
+
+
 def _store_table_cache(topo: Topology, sizes: list[int], tables) -> None:
     try:
         os.makedirs(_TABLE_CACHE_DIR, exist_ok=True)
         path = _table_cache_path(topo, sizes)
         tmp = f"{path}.{os.getpid()}.tmp"
         with open(tmp, "w") as f:
-            json.dump([[{"lo": e.lo, "hi": e.hi, "variant": e.variant}
-                        for e in tbl] for tbl in tables], f)
+            json.dump(_serialize_tables(tables), f)
         os.replace(tmp, path)
     except OSError:
         pass
@@ -117,8 +132,8 @@ def tpu_dispatch_tables(n_devices: int = 16):
     cached = _load_table_cache(topo, sizes)
     if cached is not None:
         return cached
-    ag = tuple(derive_dispatch(topo, "all_gather", sizes))
-    aa = tuple(derive_dispatch(topo, "all_to_all", sizes))
+    ag = tuple(derive_dispatch(topo, "all_gather", sizes, chunk_sizes=_SWEEP_CHUNKS))
+    aa = tuple(derive_dispatch(topo, "all_to_all", sizes, chunk_sizes=_SWEEP_CHUNKS))
     _store_table_cache(topo, sizes, (ag, aa))
     return ag, aa
 
@@ -158,13 +173,20 @@ class CommBackend:
         return _AA_IMPL.get(variant, coll.reference_all_to_all)(x, axis_name)
 
     def kv_fetch_plan(self, n_blocks: int, block_bytes: int) -> dict:
-        """How the serving engine should fetch dispersed KV blocks (§5.3)."""
+        """How the serving engine should fetch dispersed KV blocks (§5.3).
+
+        The latte plan additionally requests the optimized command stream
+        (``optimized: True`` — batched submission + fused write+signal on
+        the batch's chunk commands, DESIGN.md §7/§8); the serving engine
+        maps it to the ``opt_b2b`` fetch backend.
+        """
         total = n_blocks * block_bytes
         if self.kind == "reference":
-            return {"mode": "pcpy", "fanout": min(n_blocks, 16)}
+            return {"mode": "pcpy", "fanout": min(n_blocks, 16),
+                    "optimized": False}
         if total < self.b2b_fanout_threshold:
-            return {"mode": "b2b", "fanout": 1}
-        return {"mode": "b2b", "fanout": 4}
+            return {"mode": "b2b", "fanout": 1, "optimized": True}
+        return {"mode": "b2b", "fanout": 4, "optimized": True}
 
 
 def regenerate_bundled_tables(device_counts=(16,)) -> str:
@@ -177,12 +199,10 @@ def regenerate_bundled_tables(device_counts=(16,)) -> str:
     for n in device_counts:
         topo = tpu_v5e_pod(n)
         sizes = _SWEEP_SIZES
-        ag = tuple(derive_dispatch(topo, "all_gather", sizes))
-        aa = tuple(derive_dispatch(topo, "all_to_all", sizes))
+        ag = tuple(derive_dispatch(topo, "all_gather", sizes, chunk_sizes=_SWEEP_CHUNKS))
+        aa = tuple(derive_dispatch(topo, "all_to_all", sizes, chunk_sizes=_SWEEP_CHUNKS))
         _store_table_cache(topo, sizes, (ag, aa))
-        out[_table_key(topo, sizes)] = [
-            [{"lo": e.lo, "hi": e.hi, "variant": e.variant} for e in tbl]
-            for tbl in (ag, aa)]
+        out[_table_key(topo, sizes)] = _serialize_tables((ag, aa))
     with open(_BUNDLED_TABLES, "w") as f:
         json.dump(out, f, indent=1)
     return _BUNDLED_TABLES

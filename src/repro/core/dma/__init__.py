@@ -2,7 +2,14 @@
 schedules, optimized command-stream transforms, dispatch policy, RCCL
 baseline and power models (the paper's contribution)."""
 from . import commands
-from .commands import CmdKind, Command, EngineQueue, Schedule
+from .commands import (
+    CmdKind,
+    Command,
+    EngineQueue,
+    Schedule,
+    chunk_command,
+    chunk_schedule,
+)
 from .collectives import allgather_schedule, alltoall_schedule, kv_fetch_schedule
 from .dispatch import (
     PAPER_AA_DISPATCH,
@@ -39,6 +46,7 @@ from .topology import (
 
 __all__ = [
     "commands", "CmdKind", "Command", "EngineQueue", "Schedule",
+    "chunk_command", "chunk_schedule",
     "allgather_schedule", "alltoall_schedule", "kv_fetch_schedule",
     "PAPER_AA_DISPATCH", "PAPER_AG_DISPATCH", "best_variant_for",
     "candidate_variants", "derive_dispatch", "optimized_variants",

@@ -141,7 +141,39 @@ def evaluate_claims(topo: Topology | None = None) -> list[Claim]:
               "DMA AG power saving vs RCCL at >=64MB (paper ~32%)"),
     ]
     claims += optimized_stream_claims(topo)
+    claims += optimized_power_claims(topo)
     return claims
+
+
+def optimized_power_claims(topo: Topology | None = None) -> list[Claim]:
+    """Power saving of the optimized command streams (DESIGN.md §8.4).
+
+    The paper reports a 3-10% *additional* GPU power saving for the §7
+    streams on top of the DMA collectives' compute-side savings: batched
+    submission collapses host scheduling wakeups and fused write+signal
+    skips the engine's atomic round-trip.  Priced by
+    :func:`repro.core.dma.power.dma_collective_power` from the simulator's
+    event counts, compared baseline-vs-optimized on the same schedule family
+    over the latency-bound range (where per-command overhead dominates).
+    """
+    topo = topo or mi300x_platform()
+    # Latency-bound range (Fig. 7: non-copy phases dominate below ~1MB);
+    # above it the optimized stream finishes sooner, which *raises* its
+    # average power draw even as energy falls, washing out the comparison.
+    sizes = [s for s in SMALL_SIZES if 16 * KB <= s <= 1 * MB]
+    savings = []
+    for s in sizes:
+        base = simulate(C.allgather_schedule(topo, s, "pcpy"), topo)
+        opt = simulate(C.allgather_schedule(topo, s, "opt_pcpy"), topo)
+        p_base = dma_collective_power(topo, s, base).total
+        p_opt = dma_collective_power(topo, s, opt).total
+        savings.append(1 - p_opt / p_base)
+    avg = sum(savings) / len(savings)
+    return [
+        Claim("opt_power_saving_small", 0.065, avg, 0.03, 0.10,
+              "Additional AG power saving of opt_ streams, 16KB-1MB "
+              "(paper: 3-10%)"),
+    ]
 
 
 def optimized_stream_claims(
@@ -153,9 +185,11 @@ def optimized_stream_claims(
     The paper's optimized implementations (batched scheduling, SDMA queue
     parallelism, fused write+signal) close the small-size gap to ~30% slower
     (all-gather) / ~20% faster (all-to-all) than RCCL and add ~7% at
-    bandwidth-bound sizes.  The model lands in-band but conservative on the
-    large-size gain: the calibrated host-side constants are tighter than the
-    measured system's, so less overhead is available to remove.
+    bandwidth-bound sizes.  With chunked command streams (DESIGN.md §8.1)
+    the model lands on the large-size gain too: a GB-scale copy is hundreds
+    of bounded-size sDMA commands whose per-chunk packet creation §7.1
+    batching amortizes, so the large-size band is pinned at the paper's
+    value (lower bound 1.05) rather than the pre-chunking conservative ~4%.
 
     ``collectives`` restricts which sweeps run — benchmarks that report a
     single collective pass just that one to skip the other's simulations.
@@ -177,14 +211,14 @@ def optimized_stream_claims(
         claims += [
             Claim("opt_ag_small", 1.30, opt_small("all_gather"), 1.10, 1.55,
                   "Optimized-stream AG geomean vs RCCL <32MB (paper: 30% slower)"),
-            Claim("opt_ag_large_gain", 1.07, opt_large_gain("all_gather"), 1.03, 1.15,
+            Claim("opt_ag_large_gain", 1.07, opt_large_gain("all_gather"), 1.05, 1.15,
                   "opt_pcpy over pcpy, AG >=64MB (paper: ~7% large-size gain)"),
         ]
     if "all_to_all" in collectives:
         claims += [
             Claim("opt_aa_small", 0.83, opt_small("all_to_all"), 0.70, 0.95,
                   "Optimized-stream AA geomean vs RCCL <32MB (paper: 20% faster)"),
-            Claim("opt_aa_large_gain", 1.07, opt_large_gain("all_to_all"), 1.03, 1.15,
+            Claim("opt_aa_large_gain", 1.07, opt_large_gain("all_to_all"), 1.05, 1.15,
                   "opt_pcpy over pcpy, AA >=64MB (paper: ~7% large-size gain)"),
         ]
     return claims

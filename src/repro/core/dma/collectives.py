@@ -40,12 +40,25 @@ paper's figures (1KB–4GB).  Each device's per-peer shard is ``size / n``.
 from __future__ import annotations
 
 from . import commands as cmd
-from .commands import EngineQueue, Schedule
+from .commands import EngineQueue, Schedule, chunk_schedule
 from .optimizations import OptimizationConfig, optimize, parse_optimized
 from .topology import Topology
 
 AG_VARIANTS = ("pcpy", "bcst", "b2b", "ring", "bidir_ring")
 AA_VARIANTS = ("pcpy", "swap", "b2b", "ring")
+
+
+def _maybe_chunk(sched: Schedule, topo: Topology,
+                 max_chunk_bytes: int | None) -> Schedule:
+    """Split oversized copies into sDMA chunk commands (DESIGN.md §8.1).
+
+    ``None`` uses the topology's calibrated ``Calibration.max_chunk_bytes``
+    (the hardware packet ceiling); ``0`` disables chunking (used by tests
+    comparing chunked and monolithic timing).  Runs before the optimization
+    transforms so batching/slots/fusion operate on the chunked stream.
+    """
+    mcb = topo.calib.max_chunk_bytes if max_chunk_bytes is None else max_chunk_bytes
+    return chunk_schedule(sched, mcb)
 
 
 def _maybe_prelaunch(queues: list[EngineQueue], prelaunch: bool) -> tuple[EngineQueue, ...]:
@@ -161,12 +174,15 @@ def _ring_aa_queues(topo: Topology, shard: int) -> list[EngineQueue]:
 
 
 def allgather_schedule(topo: Topology, size: int, variant: str = "pcpy", *,
-                       opt_config: OptimizationConfig | None = None) -> Schedule:
+                       opt_config: OptimizationConfig | None = None,
+                       max_chunk_bytes: int | None = None) -> Schedule:
     """All-gather: every device sends its shard (size/n) to all n-1 peers.
 
     An ``opt_`` variant prefix applies the optimized command-stream
     transforms (DESIGN.md §7) to the built schedule; ``opt_config``
-    customizes them.
+    customizes them.  Copies above ``max_chunk_bytes`` (default: the
+    topology's calibrated sDMA packet ceiling, DESIGN.md §8.1) are split
+    into pipelined chunk commands; pass ``0`` to disable chunking.
     """
     requested = variant
     variant, optimized = parse_optimized(variant)
@@ -209,17 +225,20 @@ def allgather_schedule(topo: Topology, size: int, variant: str = "pcpy", *,
     name = f"ag_opt_{variant}" if optimized else f"ag_{variant}"
     sched = Schedule(name=name, queues=_maybe_prelaunch(queues, prelaunch),
                      symmetric=symmetric)
+    sched = _maybe_chunk(sched, topo, max_chunk_bytes)
     return _maybe_optimize(sched, optimized, opt_config)
 
 
 def alltoall_schedule(topo: Topology, size: int, variant: str = "pcpy", *,
-                      opt_config: OptimizationConfig | None = None) -> Schedule:
+                      opt_config: OptimizationConfig | None = None,
+                      max_chunk_bytes: int | None = None) -> Schedule:
     """All-to-all: every device exchanges a size/n shard with every peer.
 
     With ``swap``, pair (i, j) is served by a single in-place swap command
     executed by one of the two devices (balanced round-robin assignment), so
     system-wide command count halves.  An ``opt_`` variant prefix applies the
-    optimized command-stream transforms (DESIGN.md §7).
+    optimized command-stream transforms (DESIGN.md §7); ``max_chunk_bytes``
+    bounds the per-command payload as in :func:`allgather_schedule`.
     """
     requested = variant
     variant, optimized = parse_optimized(variant)
@@ -258,6 +277,7 @@ def alltoall_schedule(topo: Topology, size: int, variant: str = "pcpy", *,
     name = f"aa_opt_{variant}" if optimized else f"aa_{variant}"
     sched = Schedule(name=name, queues=_maybe_prelaunch(queues, prelaunch),
                      symmetric=symmetric)
+    sched = _maybe_chunk(sched, topo, max_chunk_bytes)
     return _maybe_optimize(sched, optimized, opt_config)
 
 
@@ -269,6 +289,7 @@ def kv_fetch_schedule(
     *,
     device: int = 0,
     b2b_fanout_threshold: int = 4 * 1024 * 1024,
+    max_chunk_bytes: int | None = None,
 ) -> Schedule:
     """Host->device fetch of ``n_blocks`` dispersed KV-cache blocks (§5.3).
 
@@ -305,4 +326,5 @@ def kv_fetch_schedule(
         raise ValueError(f"unknown kv-fetch variant {requested!r}")
     name = f"kvfetch_opt_{variant}" if optimized else f"kvfetch_{variant}"
     sched = Schedule(name=name, queues=_maybe_prelaunch(queues, prelaunch))
+    sched = _maybe_chunk(sched, topo, max_chunk_bytes)
     return _maybe_optimize(sched, optimized, None)

@@ -22,6 +22,14 @@ write packet instead of occupying a standalone ``signal`` slot, and an
 and its SDMA queue slot on the engine (``slot``, §7.2).  The transforms in
 :mod:`repro.core.dma.optimizations` produce these; baseline builders never
 set them, so default schedules time identically to the unoptimized model.
+
+Chunking (DESIGN.md §8.1): one sDMA command carries at most
+``Calibration.max_chunk_bytes`` of payload, so the runtime splits GB-scale
+copies into pipelined chunk commands — :func:`chunk_command` /
+:func:`chunk_schedule` model exactly that.  Chunks of one transfer share a
+single :class:`Command` instance (the simulator detects such runs by object
+identity and executes them closed-form); a fused signal rides only the
+*final* chunk.
 """
 from __future__ import annotations
 
@@ -148,6 +156,61 @@ def wait(tag: Tag) -> Command:
 
 
 DATA_KINDS = (CmdKind.COPY, CmdKind.BCST, CmdKind.SWAP)
+
+
+def chunk_command(c: Command, max_bytes: int) -> tuple[Command, ...]:
+    """Split one data command into bounded-size chunk commands (DESIGN.md §8.1).
+
+    A copy/bcst/swap of more than ``max_bytes`` becomes ``ceil(size /
+    max_bytes)`` commands of the same kind/source/destinations: full-size
+    chunks followed by one remainder chunk.  The full-size chunks all share
+    ONE ``Command`` instance — the simulator recognizes such identical runs
+    by object identity and schedules them in closed form.  Any fused signal
+    of the original command rides only the final chunk (the semaphore /
+    completion may not be raised before the last byte landed).
+
+    Non-data commands and commands already within ``max_bytes`` are returned
+    unchanged; ``max_bytes <= 0`` disables chunking.
+    """
+    if c.kind not in DATA_KINDS or max_bytes <= 0 or c.size <= max_bytes:
+        return (c,)
+    n_full, rem = divmod(c.size, max_bytes)
+    body = Command(c.kind, c.src, c.dsts, max_bytes)
+    chunks: list[Command] = [body] * n_full
+    if rem:
+        chunks.append(Command(c.kind, c.src, c.dsts, rem))
+    if c.fused_tag is not None or c.fused_signal:
+        chunks[-1] = dataclasses.replace(
+            chunks[-1], fused_tag=c.fused_tag, fused_signal=c.fused_signal)
+    return tuple(chunks)
+
+
+def chunk_schedule(schedule: "Schedule", max_chunk_bytes: int) -> "Schedule":
+    """Chunk every oversized data command of a schedule (DESIGN.md §8.1).
+
+    Applied by the collective builders with the topology's calibrated
+    ``max_chunk_bytes`` before the optimization transforms, so §7.1 batching
+    amortizes the per-chunk packet creation, §7.2 slots overlap the chunks'
+    front-end decode, and §7.3 fuses the trailing signal onto the final
+    chunk.  Preserves the traffic multiset, command order, queue attributes
+    and the ``symmetric`` marking (every device is rewritten identically).
+    """
+    if max_chunk_bytes <= 0:
+        return schedule
+    queues = []
+    changed = False
+    for q in schedule.queues:
+        if all(c.size <= max_chunk_bytes for c in q.data_commands):
+            queues.append(q)
+            continue
+        cs: list[Command] = []
+        for c in q.commands:
+            cs.extend(chunk_command(c, max_chunk_bytes))
+        queues.append(dataclasses.replace(q, commands=tuple(cs)))
+        changed = True
+    if not changed:
+        return schedule
+    return dataclasses.replace(schedule, queues=tuple(queues))
 
 
 @dataclasses.dataclass(frozen=True)

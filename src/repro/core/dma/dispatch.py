@@ -11,10 +11,17 @@ the baseline-vs-optimized sweep behind ``benchmarks/fig13*/fig14*
 --optimized``.  The default sweeps stay baseline-only so the paper's
 Tables 2/3 structure remains reproducible as published.
 
+Chunked command streams (DESIGN.md §8): every schedule is built with the
+topology's calibrated ``max_chunk_bytes`` by default, and the sweep can
+additionally treat the chunk granularity as a policy dimension —
+``derive_dispatch(..., chunk_sizes=...)`` runs the argmin over
+(variant, chunk) pairs and records the winning chunk size per range.
+
 Simulation results are memoized: :func:`variant_latency` caches every
-(topology, collective, size, variant) point and :func:`derive_dispatch`
-caches whole argmin sweeps, so repeated claim evaluations and dispatch-table
-derivations in one process pay for each simulation once.
+(topology, collective, size, variant, chunk) point and
+:func:`derive_dispatch` caches whole argmin sweeps, so repeated claim
+evaluations and dispatch-table derivations in one process pay for each
+simulation once.
 """
 from __future__ import annotations
 
@@ -60,13 +67,30 @@ class DispatchEntry:
     lo: int
     hi: int | None
     variant: str
+    # Winning sDMA chunk granularity for the range (DESIGN.md §8.1);
+    # None = the topology's calibrated default max_chunk_bytes.
+    chunk: int | None = None
+
+
+def variant_latency(topo: Topology, collective: str, size: int, variant: str,
+                    chunk_bytes: int | None = None) -> float:
+    """Memoized latency of one (collective, size, variant, chunk) point.
+
+    ``chunk_bytes=None`` uses the topology's calibrated ``max_chunk_bytes``
+    (schedules are always chunked, DESIGN.md §8.1); an explicit value
+    overrides the chunk granularity and is part of the memo key.  The thin
+    wrapper normalizes the default so 4-arg callers (claims) and explicit
+    ``chunk_bytes=None`` callers (sweeps) share one cache entry.
+    """
+    return _variant_latency_cached(topo, collective, size, variant, chunk_bytes)
 
 
 @functools.lru_cache(maxsize=65536)
-def variant_latency(topo: Topology, collective: str, size: int, variant: str) -> float:
-    """Memoized end-to-end latency of one (collective, size, variant) point."""
+def _variant_latency_cached(topo: Topology, collective: str, size: int,
+                            variant: str, chunk_bytes: int | None) -> float:
     builder: Callable = allgather_schedule if collective == "all_gather" else alltoall_schedule
-    return simulate(builder(topo, size, variant), topo).latency
+    return simulate(builder(topo, size, variant, max_chunk_bytes=chunk_bytes),
+                    topo).latency
 
 
 def candidate_variants(
@@ -108,27 +132,35 @@ def _derive_dispatch_cached(
     sizes: tuple[int, ...],
     allow_prelaunch: bool,
     allow_optimized: bool,
+    chunk_sizes: tuple[int | None, ...],
 ) -> tuple[DispatchEntry, ...]:
     variants = candidate_variants(topo, collective, allow_prelaunch=allow_prelaunch,
                                   allow_optimized=allow_optimized)
 
-    winners: list[tuple[int, str]] = []
+    winners: list[tuple[int, str, int | None]] = []
     for size in sizes:
-        best, best_t = None, float("inf")
+        best, best_ch, best_t = None, None, float("inf")
         for v in variants:
-            t = variant_latency(topo, collective, size, v)
-            if t < best_t:
-                best, best_t = v, t
-        winners.append((size, best))
+            for ch in chunk_sizes:
+                t = variant_latency(topo, collective, size, v, ch)
+                # Strict-improvement-with-tolerance argmin: prelaunched
+                # variants are chunk-flat (the per-chunk host cost is off
+                # the critical path), so without the epsilon the chunk
+                # winner would be picked on float noise and churn the
+                # derived ranges.  Earlier candidates (the calibrated
+                # default chunk first) win ties.
+                if t < best_t * (1.0 - 1e-9):
+                    best, best_ch, best_t = v, ch, t
+        winners.append((size, best, best_ch))
 
     entries: list[DispatchEntry] = []
-    for i, (size, v) in enumerate(winners):
-        if entries and entries[-1].variant == v:
-            entries[-1] = DispatchEntry(entries[-1].lo, None, v)
+    for size, v, ch in winners:
+        if entries and entries[-1].variant == v and entries[-1].chunk == ch:
+            entries[-1] = DispatchEntry(entries[-1].lo, None, v, ch)
         else:
             if entries:
-                entries[-1] = DispatchEntry(entries[-1].lo, size, entries[-1].variant)
-            entries.append(DispatchEntry(size, None, v))
+                entries[-1] = dataclasses.replace(entries[-1], hi=size)
+            entries.append(DispatchEntry(size, None, v, ch))
     return tuple(entries)
 
 
@@ -139,6 +171,7 @@ def derive_dispatch(
     *,
     allow_prelaunch: bool = True,
     allow_optimized: bool = False,
+    chunk_sizes=None,
 ) -> list[DispatchEntry]:
     """Re-derive the best variant per size from the timing model (argmin).
 
@@ -146,12 +179,16 @@ def derive_dispatch(
     approximately reproduce Tables 2/3 on the MI300X topology (validated in
     tests/benchmarks) and gives the policy for the TPU topology.  With
     ``allow_optimized`` the sweep also offers the ``opt_`` command streams
-    (DESIGN.md §7), yielding the re-derived thresholds for optimized
-    collectives.  Sweeps are memoized per (topology, collective, sizes,
-    allow_prelaunch, allow_optimized).
+    (DESIGN.md §7).  ``chunk_sizes`` adds the sDMA chunk granularity as a
+    policy dimension (DESIGN.md §8.1): the argmin runs over (variant, chunk)
+    pairs and each entry records its winning ``chunk`` (``None`` = the
+    topology's calibrated default).  Sweeps are memoized per (topology,
+    collective, sizes, allow_prelaunch, allow_optimized, chunk_sizes).
     """
+    chunks = (None,) if chunk_sizes is None else tuple(chunk_sizes)
     return list(_derive_dispatch_cached(topo, collective, tuple(sizes),
-                                        allow_prelaunch, allow_optimized))
+                                        allow_prelaunch, allow_optimized,
+                                        chunks))
 
 
 def best_variant_for(topo: Topology, collective: str, size: int,

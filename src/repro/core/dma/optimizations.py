@@ -21,7 +21,10 @@ they compose (DESIGN.md §7):
 :func:`optimize` applies all three in the canonical order (split, then fuse,
 then batch).  The collective builders expose the result as ``opt_``-prefixed
 variants (``opt_pcpy``, ``opt_prelaunch_b2b``, ...) so dispatch sweeps and
-claims can compare baseline and optimized streams point-by-point.
+claims can compare baseline and optimized streams point-by-point.  Builders
+chunk oversized copies (DESIGN.md §8.1) *before* these transforms run, so
+batching amortizes per-chunk packet creation and fusion lands on the final
+chunk — this is where the paper's large-size ~7% gain comes from.
 
 Transforms never change *what* is transferred: byte counts, sources and
 destinations are preserved exactly (asserted in ``tests/test_sim.py``), only
@@ -52,12 +55,18 @@ class OptimizationConfig:
     i.e. for long issue-bound command streams (the empirical-threshold shape
     of the §5.3.1 KV-fetch fanout, but on command count: payload streaming
     hides the front end for big commands regardless of how many slots run).
+    ``split_max_bytes`` is the payload side of the same gate: a queue whose
+    data commands exceed it streams for far longer than a command decodes,
+    so the front end is already hidden and splitting would only multiply
+    doorbells and completion fences — chunked GB-scale streams (DESIGN.md
+    §8.1, 1-4MB per command) therefore stay on one slot.
     ``fuse``: fuse trailing signals into their data command (§7.3).
     """
 
     batch: int = 8
     queues_per_engine: int = 4
     split_min_commands: int = 8
+    split_max_bytes: int = 256 * 1024
     fuse: bool = True
 
     def __post_init__(self) -> None:
@@ -107,16 +116,19 @@ def batch_commands(schedule: Schedule, batch: int = DEFAULT_CONFIG.batch) -> Sch
 
 # ------------------------------------------------------------------ §7.2 ----
 
-def _splittable(q: EngineQueue, min_commands: int) -> bool:
+def _splittable(q: EngineQueue, min_commands: int, max_bytes: int) -> bool:
     """A queue is eligible for multi-queue dispatch when it is an independent
     run of data commands (+ trailing untagged completion signals): no
-    cross-device ordering (``wait``/tagged ``signal``), not poll-gated, and
+    cross-device ordering (``wait``/tagged ``signal``), not poll-gated,
     long enough for per-slot decode overlap to pay for the extra doorbells
-    and completion fences."""
+    and completion fences, and issue-bound (small payloads — large commands
+    stream long enough to hide the front end on one slot)."""
     if q.prelaunched or q.slot != 0:
         return False
     data = q.data_commands
     if len(data) < max(2, min_commands):
+        return False
+    if any(c.size > max_bytes for c in data):
         return False
     seen_signal = False
     for c in q.commands:
@@ -141,6 +153,7 @@ def split_queues(
     queues_per_engine: int = DEFAULT_CONFIG.queues_per_engine,
     *,
     min_commands: int = DEFAULT_CONFIG.split_min_commands,
+    max_bytes: int = DEFAULT_CONFIG.split_max_bytes,
 ) -> Schedule:
     """SDMA queue-level parallelism (DESIGN.md §7.2).
 
@@ -156,9 +169,11 @@ def split_queues(
     trailing completion signal when the original queue signaled the host —
     multi-queue dispatch *multiplies* completion signals and doorbells, a
     real cost the dispatch argmin weighs against the front-end overlap (and
-    why ``min_commands`` gates the transform).  Queues with cross-device
-    ordering (``wait``/tagged signals), poll-gated queues, and queues
-    shorter than ``min_commands`` data commands are left untouched.
+    why ``min_commands``/``max_bytes`` gate the transform).  Queues with
+    cross-device ordering (``wait``/tagged signals), poll-gated queues,
+    queues shorter than ``min_commands`` data commands, and queues carrying
+    commands above ``max_bytes`` (stream-bound: the front end is already
+    hidden, DESIGN.md §8.1) are left untouched.
     """
     if queues_per_engine < 1:
         raise ValueError("queues_per_engine must be >= 1")
@@ -170,7 +185,7 @@ def split_queues(
 
     out: list[EngineQueue] = []
     for q in schedule.queues:
-        if by_hw[(q.device, q.engine)] != 1 or not _splittable(q, min_commands):
+        if by_hw[(q.device, q.engine)] != 1 or not _splittable(q, min_commands, max_bytes):
             out.append(q)
             continue
         data = q.data_commands
@@ -236,7 +251,8 @@ def optimize(schedule: Schedule, config: OptimizationConfig | None = None) -> Sc
     """
     cfg = config or DEFAULT_CONFIG
     out = split_queues(schedule, cfg.queues_per_engine,
-                       min_commands=cfg.split_min_commands)
+                       min_commands=cfg.split_min_commands,
+                       max_bytes=cfg.split_max_bytes)
     if cfg.fuse:
         out = fuse_signals(out)
     return batch_commands(out, cfg.batch)

@@ -1,12 +1,21 @@
 """GPU power model for collectives (paper §5.2.9, Fig. 15).
 
-Total GPU power = idle + XCD (compute dies) + IOD (cache/links/DMA) + HBM.
+Total GPU power = idle + XCD (compute dies) + IOD (cache/links/DMA) + HBM
++ host (command scheduling/sync wakeups).
 
 * CU (RCCL) collectives keep CUs spinning on packet loops -> high XCD power,
   scaled down at latency-bound sizes where CUs are mostly waiting.
 * DMA collectives leave CUs idle (paper: ~3.7x less XCD power) and draw IOD
   power per engaged engine, so fewer engines (b2b) -> lower power, and bcst's
   single source read lowers HBM traffic -> additional HBM power savings.
+* Optimized command streams (DESIGN.md §7/§8.4) price lower still: batched
+  submission collapses host scheduling events (each a CPU-core wakeup,
+  ``host_wakeup_j``) and fused write+signal skips the engine's atomic
+  signal round-trip over the fabric (``atomic_j``) — the paper's 3-10%
+  *additional* power saving at latency-bound sizes.  Both counts come from
+  the event simulator (``SimResult.host_events``/``engine_atomics``), so
+  ``dma_collective_power`` prices baseline and ``opt_`` schedules from the
+  same formula.
 """
 from __future__ import annotations
 
@@ -22,10 +31,11 @@ class PowerReport:
     iod: float
     hbm: float
     idle: float
+    host: float = 0.0    # command scheduling + sync observation wakeups (§8.4)
 
     @property
     def total(self) -> float:
-        return self.xcd + self.iod + self.hbm + self.idle
+        return self.xcd + self.iod + self.hbm + self.idle + self.host
 
 
 def _utilization(size: int, knee: float = 8e6) -> float:
@@ -50,11 +60,19 @@ def dma_collective_power(
     # event simulator, not the nominal message size: an idle link waiting on
     # control/sync draws (almost) nothing.
     link_gbps = sim.link_busy_seconds(dev) / lat * topo.link_bw / 1e9
+    # Host scheduling/sync wakeups and engine atomic round-trips (§8.4):
+    # energy per event over the collective's duration.  Batched submission
+    # (§7.1) collapses scheduling events, fused signals (§7.3) drop the
+    # atomics — this term is where the optimized streams' 3-10% additional
+    # saving comes from; baseline schedules pay one event per command.
+    host_w = c.host_wakeup_j * sim.host_events.get(dev, 0) / lat
+    atomic_w = c.atomic_j * sim.engine_atomics.get(dev, 0) / lat
     return PowerReport(
         xcd=c.xcd_dma_collective * (0.5 + 0.5 * u),
-        iod=c.iod_per_engine * engines + c.link_per_busy_gbps * link_gbps,
+        iod=c.iod_per_engine * engines + c.link_per_busy_gbps * link_gbps + atomic_w,
         hbm=c.hbm_static + c.hbm_per_gbps * gbps,
         idle=c.idle,
+        host=host_w,
     )
 
 
@@ -78,4 +96,7 @@ def cu_collective_power(
         iod=c.iod_cu * (0.6 + 0.4 * u),
         hbm=c.hbm_static + c.hbm_per_gbps * gbps,
         idle=c.idle,
+        # One kernel launch + one completion poll: the CU path schedules on
+        # the GPU, not per-transfer on the host.
+        host=2 * c.host_wakeup_j / max(latency, 1e-9),
     )

@@ -53,6 +53,23 @@ round-trip ``sync_engine`` is replaced by the posted-write delay
 ``fused_sync``; the host-side observation cost is unchanged, §7.3).  Baseline
 schedules set none of these and time identically to the unoptimized model.
 
+Chunked transfers and the simulator hot path (DESIGN.md §8): GB-scale copies
+arrive split into bounded-size chunk commands
+(:func:`repro.core.dma.commands.chunk_schedule`), multiplying event counts by
+10-100x.  Three data structures keep the event loop fast:
+
+  * the worklist is a **heap-based event queue** ordered by each queue's
+    ready time, and a queue blocked on a tagged signal parks on a
+    tag -> waiters map and is re-queued exactly when the producer raises the
+    tag — no repeated scans over blocked queues (§8.2);
+  * busy timelines are **append-only** and coalesce adjacent intervals, so a
+    thousand back-to-back chunks cost one interval, not a thousand (§8.2);
+  * a run of identical chunk commands (they share one ``Command`` instance)
+    is scheduled in **closed form** — per-chunk issue still overlaps the
+    previous chunk's streaming, but the whole run commits with O(1) timeline
+    updates instead of one event per chunk (§8.3).  Runs whose issue rate or
+    engine bandwidth would leave wire gaps fall back to the per-chunk loop.
+
 Symmetric fast path (DESIGN.md §6): schedules whose builder marked them
 ``symmetric`` simulate ONE representative device — waits on a neighbor's
 tagged signal resolve, by translation invariance, to the representative's own
@@ -84,12 +101,14 @@ Worked example — two devices, one copy each way, chained by a tagged signal::
     res.utilization("link:0>1")  # busy fraction of the 0->1 wire
 
 Device 1's queue makes no progress until device 0's tagged signal is raised;
-the worklist in :func:`_run` replays queues until all complete (a full pass
-with no progress raises ``RuntimeError`` naming the blocked tags).
+:func:`_run` parks it on the ``("done", 0, 0)`` waiter list and re-queues it
+the moment device 0's signal lands (a drained heap with parked waiters left
+over raises ``RuntimeError`` naming the blocked tags).
 """
 from __future__ import annotations
 
 import dataclasses
+import heapq
 from collections import defaultdict
 
 from .commands import DATA_KINDS, CmdKind, EngineQueue, Schedule
@@ -143,7 +162,11 @@ class SimResult:
     ``timelines``/``busy`` expose the per-resource busy intervals recorded by
     the event loop (resource keys are ``host:<dev>``, ``engine:<dev>.<e>``,
     ``link:<a>><b>`` and ``hostlink:<dev>:<dir>``), which the power model and
-    the utilization reports consume.
+    the utilization reports consume.  ``host_events`` counts each device's
+    host scheduling events (command-creation passes, full-cost doorbells,
+    completion observations) and ``engine_atomics`` its standalone engine
+    signal round-trips — the quantities the power model prices for the
+    optimized-stream saving (DESIGN.md §8.4).
     """
 
     latency: float                       # collective completion (max over devices)
@@ -154,6 +177,8 @@ class SimResult:
     # In symmetric mode only the representative device's resources appear.
     timelines: dict[str, tuple] = dataclasses.field(default_factory=dict)
     busy: dict[str, float] = dataclasses.field(default_factory=dict)
+    host_events: dict[int, int] = dataclasses.field(default_factory=dict)
+    engine_atomics: dict[int, int] = dataclasses.field(default_factory=dict)
     representative: int | None = None    # set when the symmetric fast path ran
 
     @property
@@ -181,7 +206,12 @@ class SimResult:
 
 
 class _Timeline:
-    """A serial resource: requests are granted FIFO at max(request, free)."""
+    """A serial resource: requests are granted FIFO at max(request, free).
+
+    Intervals are append-only and adjacent back-to-back grants coalesce into
+    one interval (DESIGN.md §8.2) — a chunked GB transfer records one busy
+    span, not hundreds.
+    """
 
     __slots__ = ("free", "busy", "intervals")
 
@@ -190,20 +220,40 @@ class _Timeline:
         self.busy = 0.0
         self.intervals: list[tuple[float, float]] = []
 
+    def _record(self, start: float, end: float) -> None:
+        iv = self.intervals
+        if iv and iv[-1][1] == start:
+            iv[-1] = (iv[-1][0], end)
+        else:
+            iv.append((start, end))
+
     def acquire(self, t: float, dur: float) -> tuple[float, float]:
         start = t if t > self.free else self.free
         end = start + dur
         self.free = end
         if dur > 0.0:
             self.busy += dur
-            self.intervals.append((start, end))
+            self._record(start, end)
         return start, end
+
+    def occupy(self, start: float, end: float) -> None:
+        """Commit a contiguous busy run computed in closed form (§8.3).
+
+        Callers guarantee ``start >= free``; kept separate from ``acquire``
+        so the run's exact closed-form ``end`` lands in ``free`` (re-adding
+        the duration would reassociate the floats).
+        """
+        self.free = end
+        if end > start:
+            self.busy += end - start
+            self._record(start, end)
 
 
 class _QueueState:
-    __slots__ = ("q", "idx", "issue", "seen_data", "last_end", "copy_end", "start")
+    __slots__ = ("q", "idx", "issue", "seen_data", "last_end", "copy_end",
+                 "start", "engine_tl", "blocked")
 
-    def __init__(self, q: EngineQueue, start: float) -> None:
+    def __init__(self, q: EngineQueue, start: float, engine_tl: _Timeline) -> None:
         self.q = q
         self.idx = 0
         self.start = start
@@ -211,6 +261,8 @@ class _QueueState:
         self.seen_data = False
         self.last_end = start       # completion of the latest data command
         self.copy_end = start       # max data completion (device copy phase)
+        self.engine_tl = engine_tl  # the engine's streaming timeline (cached)
+        self.blocked = None         # resolved tag this queue is parked on
 
 
 class _Sim:
@@ -220,11 +272,18 @@ class _Sim:
         self.rep = rep                      # symmetric-mode representative
         self.timelines: dict[str, _Timeline] = {}
         self.tags: dict[tuple, float] = {}  # tagged signal -> raise time
+        self.raised: list[tuple] = []       # tags raised since last drain (§8.2)
         self.host_signals: dict[int, list[float]] = defaultdict(list)
         # Fused completions (§7.3) write adjacent slots of one completion
         # record per device: the host drains them in a single sweep, paying
         # sync_obs once and sync_obs_batched for each further entry.
         self.fused_signals: dict[int, list[float]] = defaultdict(list)
+        self.host_events: dict[int, int] = defaultdict(int)
+        self.engine_atomics: dict[int, int] = defaultdict(int)
+        # (src, dst) -> (timelines along the route, effective wire bandwidth);
+        # resolving the route and the timeline dict once per endpoint pair
+        # keeps the per-command cost flat under chunking.
+        self._routes: dict[tuple, tuple[tuple[_Timeline, ...], float]] = {}
 
     def timeline(self, key: str) -> _Timeline:
         tl = self.timelines.get(key)
@@ -238,104 +297,205 @@ class _Sim:
         return tag
 
     # ------------------------------------------------------------ wire ----
+    def route_tls(self, src, dst) -> tuple[tuple[_Timeline, ...], float]:
+        """Timelines along the src->dst route + the effective wire bandwidth."""
+        key = (src, dst)
+        ent = self._routes.get(key)
+        if ent is None:
+            eff = self.calib.dma_link_efficiency
+            if src == "host" or dst == "host":
+                dev = dst if src == "host" else src
+                dirn = "h2d" if src == "host" else "d2h"
+                tls = (self.timeline(f"hostlink:{dev}:{dirn}"),)
+                bw = self.topo.host_link_bw * eff
+            else:
+                tls = tuple(self.timeline(f"link:{a}>{b}")
+                            for a, b in self.topo.route(src, dst))
+                bw = self.topo.link_bw * eff
+            ent = self._routes[key] = (tls, bw)
+        return ent
+
     def transfer(self, src, dst, size: int, start: float) -> float:
         """Occupy every link on the src->dst route; returns completion time."""
-        c = self.calib
-        eff = c.dma_link_efficiency
-        if src == "host" or dst == "host":
-            dev = dst if src == "host" else src
-            dirn = "h2d" if src == "host" else "d2h"
-            tl = self.timeline(f"hostlink:{dev}:{dirn}")
-            _, end = tl.acquire(start, size / (self.topo.host_link_bw * eff))
-            return end
-        wire = size / (self.topo.link_bw * eff)
+        tls, bw = self.route_tls(src, dst)
+        wire = size / bw
+        hop = self.calib.hop_latency
         t = start
         end = start
-        for h, (a, b) in enumerate(self.topo.route(src, dst)):
-            req = t if h == 0 else t + c.hop_latency
-            s, end = self.timeline(f"link:{a}>{b}").acquire(req, wire)
+        for h, tl in enumerate(tls):
+            req = t if h == 0 else t + hop
+            s, end = tl.acquire(req, wire)
             t = s                    # cut-through: next hop staggers off start
         return end
+
+    # ------------------------------------------------- chunk runs (§8.3) ----
+    def _chunk_run(self, st: _QueueState, cmd, m: int, ts: float) -> bool:
+        """Closed-form schedule of ``m`` identical chunk commands.
+
+        The per-chunk recurrence (issue clock advances ``b2b_issue``, the
+        engine streams chunks FIFO, each wire grants FIFO) telescopes when
+        every chunk streams back-to-back on the engine AND lands back-to-back
+        on each wire; both conditions reduce to endpoint checks, so the whole
+        run commits with one ``occupy`` per resource.  Returns False (no
+        state touched) when the run is issue-bound, engine-bound relative to
+        a wire, multi-hop, or carries fused flags — the caller then executes
+        it per-chunk, which is always correct.
+        """
+        if cmd.fused_tag is not None or cmd.fused_signal:
+            return False
+        size = cmd.size
+        wires: list[tuple[_Timeline, float]] = []
+        for dst in cmd.dsts:
+            tls, bw = self.route_tls(cmd.src, dst)
+            if len(tls) != 1:
+                return False
+            wires.append((tls[0], size / bw))
+        if cmd.kind is CmdKind.SWAP:
+            tls, bw = self.route_tls(cmd.dsts[0], cmd.src)
+            if len(tls) != 1:
+                return False
+            wires.append((tls[0], size / bw))
+        b = self.calib.b2b_issue
+        engine = st.engine_tl
+        issue0 = st.issue
+        s1 = issue0 + b
+        if engine.free > s1:
+            s1 = engine.free
+        sm = s1 + (m - 1) * ts
+        tail = issue0 + m * b
+        if tail > sm:                       # issue-bound: chunks gap on the engine
+            return False
+        end = sm + ts
+        commits: list[tuple[_Timeline, float, float]] = []
+        for tl, tw in wires:
+            w1 = s1 if s1 > tl.free else tl.free
+            wm = w1 + (m - 1) * tw
+            if sm > wm:                     # engine-bound: chunks gap on this wire
+                return False
+            commits.append((tl, w1, wm + tw))
+            if wm + tw > end:
+                end = wm + tw
+        engine.occupy(s1, sm + ts)
+        for tl, a, z in commits:
+            tl.occupy(a, z)
+        st.issue = tail
+        if end > st.last_end:
+            st.last_end = end
+        if end > st.copy_end:
+            st.copy_end = end
+        return True
 
     # --------------------------------------------------------- queue run ----
     def advance(self, st: _QueueState) -> bool:
         """Run one queue until finished (True) or blocked on a wait (False)."""
         c = self.calib
-        cmds = st.q.commands
-        while st.idx < len(cmds):
-            cmd = cmds[st.idx]
+        q = st.q
+        cmds = q.commands
+        n = len(cmds)
+        tags = self.tags
+        idx = st.idx
+        while idx < n:
+            cmd = cmds[idx]
             kind = cmd.kind
-            if kind is CmdKind.WAIT:
-                t = self.tags.get(self.resolve(cmd.tag))
-                if t is None:
-                    return False
-                arrival = t + c.poll_trigger
-                if arrival > st.issue:
-                    st.issue = arrival
-            elif kind is CmdKind.POLL:
-                pass                      # arming handled via the queue start
-            elif kind is CmdKind.SIGNAL:
-                t = max(st.issue, st.last_end) + c.sync_engine
-                if cmd.tag is not None:
-                    # Semaphore update gates the engine's next command.
-                    st.issue = t
-                    self.tags[self.resolve(cmd.tag)] = t
-                else:
-                    # Completion signals post asynchronously (fire-and-forget):
-                    # later copies in the queue are not delayed.
-                    self.host_signals[st.q.device].append(t)
-            elif kind in DATA_KINDS:
+            if kind in DATA_KINDS:
                 st.issue += c.b2b_issue if st.seen_data else c.copy_setup
                 st.seen_data = True
-                if kind is CmdKind.SWAP:
-                    stream_bytes = 2 * cmd.size
-                else:
-                    stream_bytes = max(cmd.local_read_bytes, cmd.remote_write_bytes)
-                engine = self.timeline(f"engine:{st.q.device}.{st.q.engine}")
-                start = max(st.issue, engine.free)
-                _, end = engine.acquire(start, stream_bytes / c.engine_bw)
+                # Identical chunk commands share one object (chunk_command):
+                # detect the run by identity and try the closed form (§8.3).
+                j = idx + 1
+                while j < n and cmds[j] is cmd:
+                    j += 1
+                size = cmd.size
+                stream_bytes = size if kind is CmdKind.COPY else 2 * size
+                ts = stream_bytes / c.engine_bw
+                engine = st.engine_tl
+                start = st.issue if st.issue > engine.free else engine.free
+                _, end = engine.acquire(start, ts)
                 for dst in cmd.dsts:
-                    end = max(end, self.transfer(cmd.src, dst, cmd.size, start))
-                if kind is CmdKind.SWAP:  # reverse direction, concurrently
-                    end = max(end, self.transfer(cmd.dsts[0], cmd.src, cmd.size, start))
-                st.last_end = max(st.last_end, end)
-                st.copy_end = max(st.copy_end, end)
+                    e = self.transfer(cmd.src, dst, size, start)
+                    if e > end:
+                        end = e
+                if kind is CmdKind.SWAP:    # reverse direction, concurrently
+                    e = self.transfer(cmd.dsts[0], cmd.src, size, start)
+                    if e > end:
+                        end = e
+                if end > st.last_end:
+                    st.last_end = end
+                if end > st.copy_end:
+                    st.copy_end = end
                 # Fused write+signal (§7.3): the signal payload rides the
                 # final write packet — no engine scheduling round-trip, so
                 # the queue front end (st.issue) is NOT gated.
                 if cmd.fused_tag is not None:
-                    self.tags[self.resolve(cmd.fused_tag)] = end + c.fused_sync
+                    rt = self.resolve(cmd.fused_tag)
+                    tags[rt] = end + c.fused_sync
+                    self.raised.append(rt)
                 if cmd.fused_signal:
-                    self.fused_signals[st.q.device].append(end + c.fused_sync)
-            st.idx += 1
+                    self.fused_signals[q.device].append(end + c.fused_sync)
+                idx += 1
+                m = j - idx
+                if m > 0 and self._chunk_run(st, cmd, m, ts):
+                    idx = j
+            elif kind is CmdKind.WAIT:
+                rt = self.resolve(cmd.tag)
+                t = tags.get(rt)
+                if t is None:
+                    st.idx = idx
+                    st.blocked = rt
+                    return False
+                arrival = t + c.poll_trigger
+                if arrival > st.issue:
+                    st.issue = arrival
+                idx += 1
+            elif kind is CmdKind.SIGNAL:
+                t = (st.issue if st.issue > st.last_end else st.last_end) + c.sync_engine
+                self.engine_atomics[q.device] += 1
+                if cmd.tag is not None:
+                    # Semaphore update gates the engine's next command.
+                    st.issue = t
+                    rt = self.resolve(cmd.tag)
+                    tags[rt] = t
+                    self.raised.append(rt)
+                else:
+                    # Completion signals post asynchronously (fire-and-forget):
+                    # later copies in the queue are not delayed.
+                    self.host_signals[q.device].append(t)
+                idx += 1
+            else:                           # POLL: arming handled via queue start
+                idx += 1
+        st.idx = idx
         return True
 
 
-def _control_cost(live: list[EngineQueue], c) -> float:
-    """Host packet-creation seconds for one device's live queues.
+def _control_cost(live: list[EngineQueue], c) -> tuple[float, int]:
+    """Host packet-creation (seconds, scheduling events) for one device.
 
-    Baseline (``batch=1``): ``control`` per command.  Batched submission
-    (§7.1): commands are created in groups of up to ``batch`` per host
-    scheduling event — the first command of each event pays the full
-    ``control``, the rest the amortized ``control_batched``.  Events span
-    queue boundaries: consecutively submitted batched queues fill the same
-    scheduling event (the host builds all their packets in one pass).
+    Baseline (``batch=1``): ``control`` per command, one scheduling event
+    each.  Batched submission (§7.1): commands are created in groups of up to
+    ``batch`` per host scheduling event — the first command of each event
+    pays the full ``control``, the rest the amortized ``control_batched``.
+    Events span queue boundaries: consecutively submitted batched queues fill
+    the same scheduling event (the host builds all their packets in one
+    pass).  The event count feeds the host-wakeup power term (§8.4).
     """
     t = 0.0
+    events = 0
     room = 0                       # remaining commands in the current event
     for q in live:
         if q.batch <= 1:
             t += len(q.commands) * c.control
+            events += len(q.commands)
             room = 0               # an unbatched submission breaks the event
             continue
         for _ in q.commands:
             if room == 0:
                 t += c.control
+                events += 1
                 room = q.batch - 1
             else:
                 t += c.control_batched
                 room -= 1
-    return t
+    return t, events
 
 
 def _start_device(sim: _Sim, dev: int, queues: list[EngineQueue]) -> tuple[float, list[_QueueState]]:
@@ -355,7 +515,7 @@ def _start_device(sim: _Sim, dev: int, queues: list[EngineQueue]) -> tuple[float
     pre = [q for q in queues if q.prelaunched]
     host = sim.timeline(f"host:{dev}")
 
-    t_control = _control_cost(live, c)
+    t_control, events = _control_cost(live, c)
     host.acquire(0.0, t_control)
 
     states: list[_QueueState] = []
@@ -365,15 +525,18 @@ def _start_device(sim: _Sim, dev: int, queues: list[EngineQueue]) -> tuple[float
             bell_cost = c.doorbell_batched
         else:
             bell_cost = c.doorbell
+            events += 1            # a full-cost ring is its own host event
         # An intervening unbatched submission resets the amortization:
         # the next batched queue rings at full cost again.
         batched_seen = q.batch > 1
         _, bell = host.acquire(host.free, bell_cost)
-        engine_start = bell + c.fetch
-        sim.timeline(f"engine:{dev}.{q.engine}").acquire(bell, c.fetch)
-        states.append(_QueueState(q, engine_start))
+        engine_tl = sim.timeline(f"engine:{dev}.{q.engine}")
+        engine_tl.acquire(bell, c.fetch)
+        states.append(_QueueState(q, bell + c.fetch, engine_tl))
     for q in pre:
-        states.append(_QueueState(q, c.poll_trigger))
+        states.append(_QueueState(q, c.poll_trigger,
+                                  sim.timeline(f"engine:{dev}.{q.engine}")))
+    sim.host_events[dev] += events
     return t_control, states
 
 
@@ -392,6 +555,10 @@ def _finish_device(sim: _Sim, dev: int, t_control: float,
     t_obs = len(sigs) * c.sync_obs
     if fused:
         t_obs += c.sync_obs + (len(fused) - 1) * c.sync_obs_batched
+    # One host wakeup drains the whole completion set (scattered signals
+    # still cost a serial sync_obs read each — time, not an extra wakeup).
+    if sigs or fused:
+        sim.host_events[dev] += 1
     signal_done = max([copy_end] + sigs + fused)
     _, total = sim.timeline(f"host:{dev}").acquire(signal_done, t_obs)
     return PhaseBreakdown(
@@ -403,20 +570,45 @@ def _finish_device(sim: _Sim, dev: int, t_control: float,
 
 
 def _run(sim: _Sim, device_queues: dict[int, list[EngineQueue]]) -> dict[int, PhaseBreakdown]:
+    """Heap-based event loop (DESIGN.md §8.2).
+
+    Each queue enters a heap keyed by its ready time (doorbell + fetch, or
+    the poll trigger for prelaunched queues) and runs until it finishes or
+    blocks on an unraised tag; blocked queues park on a tag -> waiters map
+    and re-enter the heap at the producer's raise time.  Grant order on
+    shared timelines is therefore deterministic: ready time, then submission
+    order.  A drained heap with parked waiters left is a deadlock, reported
+    with the blocked tags.
+    """
     started = {dev: _start_device(sim, dev, qs) for dev, qs in device_queues.items()}
-    pending = [st for _, states in started.values() for st in states]
-    while pending:
-        progressed = False
-        still = []
-        for st in pending:
-            before = st.idx
-            if not sim.advance(st):
-                still.append(st)
-            progressed = progressed or st.idx != before or st not in still
-        if not progressed:
-            blocked = {st.q.commands[st.idx].tag for st in still}
-            raise RuntimeError(f"deadlocked schedule: waits on unsignaled tags {blocked}")
-        pending = still
+    heap: list[tuple[float, int, _QueueState]] = []
+    seq = 0
+    for _, states in started.values():
+        for st in states:
+            heap.append((st.start, seq, st))
+            seq += 1
+    heapq.heapify(heap)
+    waiting: dict[tuple, list[_QueueState]] = {}
+    n_waiting = 0
+    while heap:
+        _, _, st = heapq.heappop(heap)
+        if not sim.advance(st):
+            waiting.setdefault(st.blocked, []).append(st)
+            n_waiting += 1
+        if sim.raised:
+            for rt in sim.raised:
+                ws = waiting.pop(rt, None)
+                if ws:
+                    t = sim.tags[rt]
+                    for w in ws:
+                        heapq.heappush(heap, (t, seq, w))
+                        seq += 1
+                    n_waiting -= len(ws)
+            sim.raised.clear()
+    if n_waiting:
+        blocked = {st.q.commands[st.idx].tag
+                   for ws in waiting.values() for st in ws}
+        raise RuntimeError(f"deadlocked schedule: waits on unsignaled tags {blocked}")
     return {dev: _finish_device(sim, dev, t_control, states)
             for dev, (t_control, states) in started.items()}
 
@@ -426,8 +618,10 @@ def _device_hbm_bytes(queues: list[EngineQueue]) -> int:
 
     Incoming writes are attributed by the collective-level wrapper (the
     schedule is symmetric so local accounting suffices for relative power).
+    Every data kind reads ``size`` bytes locally (``Command.local_read_bytes``),
+    inlined here because chunking makes this walk O(chunks).
     """
-    return sum(cmd.local_read_bytes for q in queues for cmd in q.data_commands)
+    return sum(c.size for q in queues for c in q.commands if c.kind in DATA_KINDS)
 
 
 def simulate(schedule: Schedule, topo: Topology, *, symmetric: bool | None = None) -> SimResult:
@@ -453,11 +647,15 @@ def simulate(schedule: Schedule, topo: Topology, *, symmetric: bool | None = Non
         per_device = {d: breakdown for d in devices}
         engines = {d: len({q.engine for q in rep_queues}) for d in devices}
         hbm = {d: _device_hbm_bytes(rep_queues) for d in devices}
+        events = {d: sim.host_events.get(rep, 0) for d in devices}
+        atomics = {d: sim.engine_atomics.get(rep, 0) for d in devices}
     else:
         sim = _Sim(topo, None)
         per_device = _run(sim, {d: schedule.queues_for(d) for d in devices})
         engines = {d: schedule.engines_used(d) for d in devices}
         hbm = {d: _device_hbm_bytes(schedule.queues_for(d)) for d in devices}
+        events = {d: sim.host_events.get(d, 0) for d in devices}
+        atomics = {d: sim.engine_atomics.get(d, 0) for d in devices}
         rep = None
 
     latency = max(b.total for b in per_device.values())
@@ -468,6 +666,8 @@ def simulate(schedule: Schedule, topo: Topology, *, symmetric: bool | None = Non
         hbm_bytes=hbm,
         timelines={k: tuple(tl.intervals) for k, tl in sim.timelines.items()},
         busy={k: tl.busy for k, tl in sim.timelines.items()},
+        host_events=events,
+        engine_atomics=atomics,
         representative=rep,
     )
 

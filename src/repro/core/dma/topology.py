@@ -62,6 +62,12 @@ class Calibration:
                remote engine to observe a tagged semaphore signal (wait).
     hop_latency: per-router forwarding latency charged for every hop beyond
                the first on a multi-hop route (0 on fully-connected fabrics).
+    max_chunk_bytes: largest payload one sDMA command can carry
+               (DESIGN.md §8.1).  The runtime splits bigger copies into
+               bounded-size chunk commands, each paying its own packet
+               creation (host) and issue (engine front end); the MI300X
+               value is the sDMA linear-copy packet ceiling (22-bit byte
+               count, ~4MB).  ``0`` disables chunking.
     """
 
     # Values fit by benchmarks/calibration.py so the model lands on the
@@ -79,6 +85,7 @@ class Calibration:
     sync_obs_batched: float = 1.041e-6
     poll_trigger: float = 0.5838e-6
     hop_latency: float = 0.0
+    max_chunk_bytes: int = 4 * 1024 * 1024
     # Effective per-engine streaming bandwidth (one engine saturates roughly
     # one xGMI link; pcpy engages one engine per link).
     engine_bw: float = 64e9
@@ -144,6 +151,14 @@ class PowerCalibration:
     hbm_static: float = 60.0
     cu_traffic_multiplier: float = 1.6  # CU protocol staging vs pure payload
     link_per_busy_gbps: float = 0.04   # per-link power tracks actual busy traffic
+    # Host/sync energy (DESIGN.md §8.4): every host scheduling event (command
+    # creation pass, doorbell ring, completion observation) wakes a CPU core
+    # for a few microseconds; every standalone engine signal is an atomic
+    # round-trip over the fabric.  Batched submission and fused write+signal
+    # (§7.1/§7.3) remove most of both — the paper's 3-10% *additional* power
+    # saving for optimized streams.
+    host_wakeup_j: float = 4.5e-5      # J per host scheduling event
+    atomic_j: float = 6.0e-6           # J per engine atomic signal round-trip
 
 
 # ---------------------------------------------------------------- routing ----

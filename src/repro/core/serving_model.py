@@ -50,7 +50,12 @@ PAPER_LLMS = (
 
 
 def fetch_time(spec: LLMSpec, prompt: int, backend: str) -> float:
-    """Host->device KV fetch for `prompt` cached tokens."""
+    """Host->device KV fetch for `prompt` cached tokens.
+
+    ``opt_b2b`` is the batched path with the optimized command stream
+    (DESIGN.md §7/§8) — what the serving engine's ``kv_fetch_plan`` requests
+    for the latte backend.
+    """
     topo = mi300x_platform()
     n_blocks = (prompt + BLOCK_TOKENS - 1) // BLOCK_TOKENS
     block_bytes = spec.kv_bytes_per_token * BLOCK_TOKENS
@@ -61,7 +66,8 @@ def fetch_time(spec: LLMSpec, prompt: int, backend: str) -> float:
         sched = kv_fetch_schedule(topo, n_blocks, block_bytes, "pcpy")
         # one hipMemcpyAsync per block, serialized on the host
         return simulate(sched, topo).latency + n_blocks * API_CALL_COST
-    sched = kv_fetch_schedule(topo, n_blocks, block_bytes, "prelaunch_b2b")
+    variant = "opt_prelaunch_b2b" if backend == "opt_b2b" else "prelaunch_b2b"
+    sched = kv_fetch_schedule(topo, n_blocks, block_bytes, variant)
     return simulate(sched, topo).latency + N_BATCH_CALLS * BATCH_API_COST
 
 
@@ -94,7 +100,7 @@ def throughput(spec: LLMSpec, prompt: int, backend: str, *,
     step = decode_step_time(spec, batch)
     exec_per_req = step * 24 / batch            # amortized decode of ~24 tokens
     miss_prefill = 2 * spec.params_b * 1e9 * prompt / 1.3e15 * (1 - hit_rate)
-    if backend == "b2b":
+    if backend in ("b2b", "opt_b2b"):
         per_req = max(f, exec_per_req) + miss_prefill
     elif backend == "kernel":
         per_req = max(f, exec_per_req * KERNEL_CONTENTION) + miss_prefill

@@ -43,7 +43,7 @@ def main() -> None:
     res_miss = eng.generate(prompts, keys, args.new)
     print(f"[miss/prefill] ttft_wall={res_miss.request_stats[0].ttft_wall_s*1e3:.1f}ms "
           f"tok/s={res_miss.tokens_per_s_wall:.1f}")
-    for backend in ("pcpy", "b2b", "kernel"):
+    for backend in ("pcpy", "b2b", "opt_b2b", "kernel"):
         res = eng.generate(prompts, keys, args.new, fetch_backend=backend)
         st = res.request_stats[0]
         same = (res.tokens == res_miss.tokens).all()

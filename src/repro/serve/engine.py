@@ -4,9 +4,12 @@ Serving flow (mirrors the paper's vLLM + KV-offload setup, §5.3):
 
 1. A request arrives with a context key.  On a HOST CACHE MISS the engine
    runs prefill on device, emits the first token, and SAVES the paged KV to
-   the host store.  On a HIT it FETCHES the KV blocks back (pcpy / b2b /
-   kernel backend), rebuilds the device cache, and emits the first token
-   with a single decode step — no prefill compute.
+   the host store.  On a HIT it FETCHES the KV blocks back, rebuilds the
+   device cache, and emits the first token with a single decode step — no
+   prefill compute.  The fetch backend defaults to the CommBackend's
+   ``kv_fetch_plan`` (latte: the optimized ``opt_b2b`` command stream,
+   DESIGN.md §7/§8; reference: per-block ``pcpy``); an explicit
+   ``fetch_backend`` string overrides the plan.
 2. Decode proceeds in batched steps over all active sequences.
 
 TTFT therefore = fetch(+rebuild) time on hits vs prefill time on misses —
@@ -85,17 +88,29 @@ class ServeEngine:
         stacked = jax.tree.map(lambda *a: jnp.stack(a), *layers)
         return (stacked,)   # per_unit tuple
 
+    def _planned_backend(self, keys: Sequence[str]) -> str:
+        """Fetch backend from the CommBackend's plan for these contexts
+        (latte requests the optimized command stream -> ``opt_b2b``)."""
+        n_blocks, block_bytes = self.store.blocks_for(keys[0])
+        plan = self.comm.kv_fetch_plan(n_blocks * len(keys), block_bytes)
+        mode = plan["mode"]
+        return f"opt_{mode}" if plan.get("optimized") else mode
+
     # ------------------------------------------------------------ public ----
     def first_token(self, prompts: np.ndarray, keys: Sequence[str],
-                    *, fetch_backend: str = "b2b", capacity: int | None = None):
+                    *, fetch_backend: str | None = None,
+                    capacity: int | None = None):
         """TTFT path for a batch sharing prompt length.  Returns
-        (first_tokens [B], cache, stats)."""
+        (first_tokens [B], cache, stats).  ``fetch_backend=None`` follows
+        the CommBackend's ``kv_fetch_plan``."""
         B, S = prompts.shape
         capacity = capacity or S + 64
         all_hit = all(k in self.store for k in keys)
         t0 = time.perf_counter()
         stats = []
         if all_hit:
+            if fetch_backend is None:
+                fetch_backend = self._planned_backend(keys)
             ks, vs, modeled_total, n_tr = [], [], 0.0, 0
             for key in keys:
                 res = self.store.fetch(key, fetch_backend)
@@ -128,7 +143,7 @@ class ServeEngine:
         return first, cache, stats
 
     def generate(self, prompts: np.ndarray, keys: Sequence[str], n_new: int,
-                 *, fetch_backend: str = "b2b") -> GenerationResult:
+                 *, fetch_backend: str | None = None) -> GenerationResult:
         B, S = prompts.shape
         capacity = S + n_new + 1
         first, cache, stats = self.first_token(prompts, keys,

@@ -10,6 +10,10 @@ re-running prefill.  Three fetch backends mirror the paper's comparison:
                contiguous staging buffer and moved with one launch + one
                sync (``hipMemcpyBatchAsync`` routed to one engine, §5.3.1);
                fan-out above the 4MB threshold.
+* ``opt_b2b``— the b2b data path with the optimized command stream
+               (DESIGN.md §7/§8): batched submission + fused write+signal
+               over the batch's chunked sDMA commands.  This is what
+               ``CommBackend.kv_fetch_plan`` requests for the latte backend.
 * ``kernel`` — the whole pool region moves once; a Pallas gather kernel
                (repro/kernels/paged_kv_gather) reassembles dispersed blocks
                on device (the CU/workgroup-per-block alternative).
@@ -57,6 +61,12 @@ class HostKVStore:
     def tokens_for(self, key: str) -> int:
         return self._store[key][2]
 
+    def blocks_for(self, key: str) -> tuple[int, int]:
+        """(n_blocks, bytes per K+V block) of a stored context — the inputs
+        ``CommBackend.kv_fetch_plan`` needs to plan the fetch."""
+        kb, vb, _ = self._store[key]
+        return kb.shape[0], kb[0].nbytes + vb[0].nbytes
+
     # ------------------------------------------------------------ fetch ----
     def fetch(self, key: str, backend: str = "b2b") -> FetchResult:
         kb, vb, n_tokens = self._store[key]
@@ -71,15 +81,19 @@ class HostKVStore:
             sched = kv_fetch_schedule(self.topo, n_blocks, block_bytes, "pcpy")
             modeled = simulate(sched, self.topo).latency
             n_transfers = 2 * n_blocks
-        elif backend == "b2b":
-            # chain into one staging buffer; ONE transfer, one sync
+        elif backend in ("b2b", "opt_b2b"):
+            # chain into one staging buffer; ONE transfer, one sync.  The
+            # opt_ flavor moves the same bytes but models the optimized
+            # command stream (batched submission + fused signal, DESIGN.md
+            # §7/§8) for the latency estimate.
             staged = np.concatenate([kb.reshape(n_blocks, -1),
                                      vb.reshape(n_blocks, -1)], axis=1)
             moved = np.asarray(jax.device_put(staged))
             ksz = kb.reshape(n_blocks, -1).shape[1]
             k_out = moved[:, :ksz].reshape(kb.shape)
             v_out = moved[:, ksz:].reshape(vb.shape)
-            sched = kv_fetch_schedule(self.topo, n_blocks, block_bytes, "prelaunch_b2b")
+            variant = "prelaunch_b2b" if backend == "b2b" else "opt_prelaunch_b2b"
+            sched = kv_fetch_schedule(self.topo, n_blocks, block_bytes, variant)
             modeled = simulate(sched, self.topo).latency
             n_transfers = 1
         elif backend == "kernel":

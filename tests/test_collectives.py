@@ -64,7 +64,10 @@ def test_kv_fetch_plan_threshold():
     be = CommBackend("latte")
     small = be.kv_fetch_plan(16, 16 * 1024)
     big = be.kv_fetch_plan(1024, 64 * 1024)
-    assert small == {"mode": "b2b", "fanout": 1}
+    assert small == {"mode": "b2b", "fanout": 1, "optimized": True}
     assert big["fanout"] > 1
+    assert big["optimized"]     # latte plans the optimized command stream
     ref = CommBackend("reference")
-    assert ref.kv_fetch_plan(16, 16 * 1024)["mode"] == "pcpy"
+    ref_plan = ref.kv_fetch_plan(16, 16 * 1024)
+    assert ref_plan["mode"] == "pcpy"
+    assert not ref_plan["optimized"]

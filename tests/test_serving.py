@@ -26,12 +26,36 @@ def test_fetch_backends_bitwise_equal():
     kb = rng.normal(size=(5, 16, 2, 2, 16)).astype(np.float32)
     vb = rng.normal(size=(5, 16, 2, 2, 16)).astype(np.float32)
     store.save("k", kb, vb, 70)
-    res = {b: store.fetch("k", b) for b in ("pcpy", "b2b", "kernel")}
-    for b in ("b2b", "kernel"):
+    res = {b: store.fetch("k", b) for b in ("pcpy", "b2b", "opt_b2b", "kernel")}
+    for b in ("b2b", "opt_b2b", "kernel"):
         np.testing.assert_array_equal(res["pcpy"].k_blocks, res[b].k_blocks)
         np.testing.assert_array_equal(res["pcpy"].v_blocks, res[b].v_blocks)
     assert res["b2b"].n_transfers < res["pcpy"].n_transfers
     assert res["b2b"].modeled_seconds < res["pcpy"].modeled_seconds
+    # the optimized command stream only tightens the modeled latency
+    assert res["opt_b2b"].modeled_seconds < res["b2b"].modeled_seconds
+
+
+def test_engine_follows_kv_fetch_plan():
+    """With no explicit fetch_backend, the engine uses the CommBackend plan:
+    latte requests the optimized command stream (opt_b2b)."""
+    store = HostKVStore()
+    rng = np.random.default_rng(3)
+    kb = rng.normal(size=(4, 16, 2, 2, 16)).astype(np.float32)
+    vb = rng.normal(size=(4, 16, 2, 2, 16)).astype(np.float32)
+    store.save("ctx", kb, vb, 60)
+    n_blocks, block_bytes = store.blocks_for("ctx")
+    assert n_blocks == 4 and block_bytes == kb[0].nbytes + vb[0].nbytes
+
+    from repro.core.backend import CommBackend
+    from repro.serve.engine import ServeEngine
+
+    class _Probe(ServeEngine):      # plan resolution without model weights
+        def __init__(self, comm, st):
+            self.comm, self.store = comm, st
+
+    assert _Probe(CommBackend("latte"), store)._planned_backend(["ctx"]) == "opt_b2b"
+    assert _Probe(CommBackend("reference"), store)._planned_backend(["ctx"]) == "pcpy"
 
 
 def test_generation_identical_across_backends(engine):

@@ -1,14 +1,15 @@
 """Event-simulator core tests: contended resources, torus routing,
-cross-device waits, the symmetric fast path, dispatch derivation, and the
-optimized command streams (DESIGN.md §7)."""
+cross-device waits, the symmetric fast path, dispatch derivation, the
+optimized command streams (DESIGN.md §7), and chunked transfers plus the
+hot-path overhaul (DESIGN.md §8)."""
 import pytest
 
 from repro.core.dma import (
-    allgather_schedule, alltoall_schedule, batch_commands, commands as cmd,
-    derive_dispatch, fuse_signals, mi300x_platform, optimize, simulate,
-    split_queues, tpu_v5e_pod, variant_latency,
+    allgather_schedule, alltoall_schedule, batch_commands, chunk_schedule,
+    commands as cmd, derive_dispatch, fuse_signals, mi300x_platform, optimize,
+    simulate, split_queues, tpu_v5e_pod, variant_latency,
 )
-from repro.core.dma.claims import optimized_stream_claims
+from repro.core.dma.claims import optimized_power_claims, optimized_stream_claims
 from repro.core.dma.commands import CmdKind, EngineQueue, Schedule
 from repro.core.dma.optimizations import OptimizationConfig
 
@@ -227,7 +228,10 @@ class TestOptimizedMultiQueue:
 
     def _split_b2b(self, size):
         sched = allgather_schedule(MI, size, "b2b")
-        return sched, split_queues(sched, 4, min_commands=2)
+        # Lowered gates: exercise the slot mechanics on stream-bound queues
+        # that the default issue-bound gates would (rightly) leave alone.
+        return sched, split_queues(sched, 4, min_commands=2,
+                                   max_bytes=MI.calib.max_chunk_bytes)
 
     def test_split_preserves_traffic_and_engine_count(self):
         sched, split = self._split_b2b(8 * MB)
@@ -403,6 +407,146 @@ class TestOptimizedStreams:
         bases = [e.variant.replace("opt_", "").replace("prelaunch_", "")
                  for e in entries]
         assert bases == ["b2b", "bcst", "pcpy"]
+
+
+def _link_traffic(sched):
+    """(src, dst) -> total bytes over all data commands (chunk-invariant)."""
+    out = {}
+    for q in sched.queues:
+        for c in q.data_commands:
+            for dst in c.dsts:
+                out[(c.src, dst)] = out.get((c.src, dst), 0) + c.size
+            if c.kind is CmdKind.SWAP:
+                key = (c.dsts[0], c.src)
+                out[key] = out.get(key, 0) + c.size
+    return out
+
+
+class TestChunking:
+    """Chunked sDMA transfers (DESIGN.md §8.1) + the hot-path fast paths."""
+
+    GB = 1024 * MB
+
+    def test_traffic_conserved_under_chunking(self):
+        """Chunking never changes WHAT is transferred: per-(src, dst) byte
+        totals are identical to the monolithic schedule, every variant."""
+        for coll, variant in (("all_gather", "pcpy"), ("all_gather", "b2b"),
+                              ("all_gather", "bcst"), ("all_to_all", "swap")):
+            builder = allgather_schedule if coll == "all_gather" else alltoall_schedule
+            mono = builder(MI, 1 * self.GB, variant, max_chunk_bytes=0)
+            chunked = builder(MI, 1 * self.GB, variant)
+            assert sum(len(q.data_commands) for q in chunked.queues) > \
+                sum(len(q.data_commands) for q in mono.queues)
+            assert _link_traffic(chunked) == _link_traffic(mono), (coll, variant)
+
+    def test_chunked_link_busy_equals_monolithic(self):
+        """Same bytes -> same wire-busy seconds per directed link."""
+        mono = simulate(allgather_schedule(MI, 1 * self.GB, "pcpy",
+                                           max_chunk_bytes=0), MI)
+        chunked = simulate(allgather_schedule(MI, 1 * self.GB, "pcpy"), MI)
+        links = {k for k in mono.busy if k.startswith("link:")}
+        assert links == {k for k in chunked.busy if k.startswith("link:")}
+        for k in links:
+            assert chunked.busy[k] == pytest.approx(mono.busy[k], rel=1e-9), k
+
+    def test_completion_monotone_in_chunk_count(self):
+        """At fixed size, more chunks (smaller max_chunk_bytes) never get
+        faster: per-chunk issue/packet costs only add."""
+        size = 512 * MB
+        prev = 0.0
+        for chunk in (0, 64 * MB, 16 * MB, 4 * MB, 1 * MB, 256 * KB):
+            lat = variant_latency(MI, "all_gather", size, "pcpy", chunk)
+            assert lat >= prev, chunk
+            prev = lat
+
+    def test_fused_signal_rides_final_chunk_only(self):
+        """opt_ chunked streams fuse the completion onto the LAST chunk."""
+        sched = allgather_schedule(MI, 1 * self.GB, "opt_pcpy")
+        for q in sched.queues:
+            data = q.data_commands
+            assert len(data) == 32                  # 128MB shard / 4MB chunks
+            assert data[-1].fused_signal
+            assert not any(c.fused_signal or c.fused_tag for c in data[:-1])
+            assert q.n_signals == 1
+
+    @pytest.mark.parametrize("variant", ["pcpy", "opt_pcpy", "b2b", "opt_b2b",
+                                         "prelaunch_pcpy"])
+    def test_symmetric_fast_path_bit_identical_chunked(self, variant):
+        sched = allgather_schedule(MI, 1 * self.GB, variant)
+        assert sched.symmetric
+        full = simulate(sched, MI, symmetric=False)
+        fast = simulate(sched, MI, symmetric=True)
+        assert fast.latency == full.latency
+        assert fast.per_device == full.per_device
+        assert fast.host_events == full.host_events
+        assert fast.engine_atomics == full.engine_atomics
+
+    def test_chunk_run_fast_path_matches_per_chunk_loop(self):
+        """The closed-form run (§8.3: identical commands share one object)
+        must time exactly like the generic loop over distinct-but-equal
+        commands (which cannot coalesce and takes the per-chunk path)."""
+        n, size = 64, 4 * MB
+        shared = cmd.copy(0, 1, size)
+        run_q = EngineQueue(0, 0, (shared,) * n + (cmd.signal(),))
+        loose_q = EngineQueue(0, 0, tuple(cmd.copy(0, 1, size) for _ in range(n))
+                              + (cmd.signal(),))
+        fast = simulate(Schedule("run", (run_q,)), MI)
+        slow = simulate(Schedule("loose", (loose_q,)), MI)
+        # closed form multiplies where the loop accumulates -> ulp tolerance
+        assert fast.latency == pytest.approx(slow.latency, rel=1e-12)
+        for ph in ("control", "schedule", "copy", "sync"):
+            assert getattr(fast.per_device[0], ph) == \
+                pytest.approx(getattr(slow.per_device[0], ph), rel=1e-12, abs=1e-15)
+        assert fast.busy["link:0>1"] == pytest.approx(
+            slow.busy["link:0>1"], rel=1e-12)
+        assert len(fast.timelines["link:0>1"]) == 1   # coalesced run interval
+
+    def test_issue_bound_run_falls_back_exactly(self):
+        """Tiny chunks (wire < b2b_issue) gap on the engine; the fast path
+        must decline and the per-chunk loop must produce identical timing."""
+        n = 32
+        shared = cmd.copy(0, 1, 1024)       # 1KB: wire 16ns << b2b_issue
+        run_q = EngineQueue(0, 0, (shared,) * n + (cmd.signal(),))
+        loose_q = EngineQueue(0, 0, tuple(cmd.copy(0, 1, 1024) for _ in range(n))
+                              + (cmd.signal(),))
+        fast = simulate(Schedule("run", (run_q,)), MI)
+        slow = simulate(Schedule("loose", (loose_q,)), MI)
+        assert fast.latency == pytest.approx(slow.latency, rel=1e-12)
+
+    def test_chunk_schedule_noop_below_threshold(self):
+        sched = allgather_schedule(MI, 8 * MB, "pcpy", max_chunk_bytes=0)
+        assert chunk_schedule(sched, 4 * MB) is sched
+
+    def test_remainder_chunk(self):
+        (a, b) = cmd.chunk_command(cmd.copy(0, 1, 5 * MB), 4 * MB)
+        assert (a.size, b.size) == (4 * MB, 1 * MB)
+        assert cmd.chunk_command(cmd.copy(0, 1, 4 * MB), 4 * MB) == \
+            (cmd.copy(0, 1, 4 * MB),)
+
+    def test_optimized_power_claim_band(self):
+        """§8.4: the opt_ streams' 3-10% additional power saving holds."""
+        bad = [c for c in optimized_power_claims() if not c.ok]
+        assert not bad, [
+            f"{c.name}: {c.model_value} not in [{c.lo},{c.hi}]" for c in bad]
+
+    def test_host_events_and_atomics_counted(self):
+        base = simulate(allgather_schedule(MI, 64 * KB, "pcpy"), MI)
+        opt = simulate(allgather_schedule(MI, 64 * KB, "opt_pcpy"), MI)
+        # pcpy: 14 packet-creation events + 7 doorbells + 1 drain; 7 atomics.
+        assert base.host_events[0] == 22
+        assert base.engine_atomics[0] == 7
+        # opt: 7 fused commands fill ONE batch-8 creation event, + 1 full
+        # doorbell (rest ring batched) + 1 drain; every signal fused away.
+        assert opt.host_events[0] == 3
+        assert opt.engine_atomics[0] == 0
+
+    def test_dispatch_chunk_sweep_records_chunk(self):
+        sizes = [2 ** i for i in range(10, 33)]
+        entries = derive_dispatch(MI, "all_gather", sizes,
+                                  chunk_sizes=(None, 1 * MB))
+        assert all(e.chunk in (None, 1 * MB) for e in entries)
+        # the calibrated default wins when finer chunks only add overhead
+        assert entries[0].chunk is None
 
 
 class TestDerivedDispatch:
