@@ -83,6 +83,45 @@ def optimized_report(cc: "ClaimChecker", topo, collective: str,
         cc.check(c.description, c.model_value, c.paper_value, c.lo, c.hi)
 
 
+def pipelined_report(cc: "ClaimChecker", topo, collective: str,
+                     lat: dict, rccl: dict, verbose: bool) -> None:
+    """Shared ``--pipelined`` tail for fig13/fig14 (DESIGN.md §9): the
+    per-chunk-signaled ring curves on the figure's MI300X topology, the
+    chunk-depth sensitivity of ``pipe_b2b`` against its final-chunk-only
+    control arm, and the §9 claim bands (pinned on the TPU torus, where the
+    ring family is the dispatch winner — see ``claims.pipelined_stream_claims``)."""
+    from repro.core.dma import simulate
+    from repro.core.dma.claims import (PIPE_DEPTH_SWEEP, pipe_vs_final_chunk_ratio,
+                                       pipelined_stream_claims)
+    from repro.core.dma.collectives import allgather_schedule, alltoall_schedule
+
+    builder = allgather_schedule if collective == "all_gather" else alltoall_schedule
+    pipe_vs = ("pipe_b2b", "pipe_bidir_ring", "opt_pipe_bidir_ring",
+               "prelaunch_pipe_bidir_ring") if collective == "all_gather" \
+        else ("pipe_b2b", "opt_pipe_b2b")
+    if verbose:
+        print("\npipelined ring streams (speedup vs RCCL; ring = chained "
+              "final-chunk-signaling baseline):")
+        print(f"{'size':>5} {'ring':>10} " + "".join(f"{v:>26}" for v in pipe_vs))
+        for s in ALL_SIZES:
+            ring = simulate(builder(topo, s, "ring"), topo).latency
+            row = [f"{fmt_size(s):>5} {rccl[s]/ring:10.2f}"]
+            for v in pipe_vs:
+                row.append(f"{rccl[s]/simulate(builder(topo, s, v), topo).latency:26.2f}")
+            print("".join(row))
+        print("\nper-chunk vs final-chunk-only signaling of pipe_b2b "
+              "(ratio > 1 = per-chunk wins; saturates at the wire floor, "
+              "DESIGN.md §9.1):")
+        print(f"{'size':>5} " + "".join(f"{'depth ' + str(d):>9}" for d in PIPE_DEPTH_SWEEP))
+        for s in (1 * MB, 4 * MB, 32 * MB):
+            row = [f"{fmt_size(s):>5} "]
+            for d in PIPE_DEPTH_SWEEP:
+                row.append(f"{pipe_vs_final_chunk_ratio(topo, s, d, collective=collective):9.3f}")
+            print("".join(row))
+    for c in pipelined_stream_claims(collectives=(collective,)):
+        cc.check(c.description, c.model_value, c.paper_value, c.lo, c.hi)
+
+
 class ClaimChecker:
     def __init__(self, name: str):
         self.name = name

@@ -6,6 +6,10 @@ across 1KB-4GB, and the per-range winning implementation.
 emits the baseline-vs-optimized curves, and checks the paper's
 optimized-collective claim bands (~30% slower than RCCL at small sizes,
 ~7% gain at large sizes).
+
+``--pipelined`` adds the per-chunk-signaled pipelined ring curves
+(DESIGN.md §9), the chunk-depth sensitivity against final-chunk-only
+signaling, and the §9 claim bands.
 """
 from __future__ import annotations
 
@@ -13,13 +17,13 @@ from repro.core.dma import (allgather_schedule, derive_dispatch, mi300x_platform
                             paper_dispatch, rccl_ag_calibration, simulate)
 from repro.core.dma.rccl_model import rccl_collective_latency
 from .common import (ALL_SIZES, MB, SMALL_SIZES, ClaimChecker, fmt_size,
-                     geomean, optimized_report)
+                     geomean, optimized_report, pipelined_report)
 
 VARIANTS = ("pcpy", "bcst", "b2b", "prelaunch_pcpy", "prelaunch_bcst", "prelaunch_b2b")
 OPT_VARIANTS = tuple(f"opt_{v}" for v in VARIANTS)
 
 
-def run(verbose: bool = True, optimized: bool = False):
+def run(verbose: bool = True, optimized: bool = False, pipelined: bool = False):
     topo = mi300x_platform()
     rc = rccl_ag_calibration()
     variants = VARIANTS + OPT_VARIANTS if optimized else VARIANTS
@@ -76,6 +80,8 @@ def run(verbose: bool = True, optimized: bool = False):
     cc.check("derived dispatch matches Table 2 on probe sizes", agree, 3, 2, 3)
     if optimized:
         optimized_report(cc, topo, "all_gather", lat, rccl, verbose)
+    if pipelined:
+        pipelined_report(cc, topo, "all_gather", lat, rccl, verbose)
     return cc, lat
 
 
@@ -86,8 +92,11 @@ def main(argv=None):
     p.add_argument("--optimized", action="store_true",
                    help="also sweep the opt_ command streams (DESIGN.md §7) "
                         "and emit baseline-vs-optimized curves")
+    p.add_argument("--pipelined", action="store_true",
+                   help="also sweep the per-chunk-signaled pipelined rings "
+                        "(DESIGN.md §9) and check the §9 claim bands")
     args = p.parse_args(argv)
-    cc, _ = run(optimized=args.optimized)
+    cc, _ = run(optimized=args.optimized, pipelined=args.pipelined)
     return 0 if cc.report() else 1
 
 

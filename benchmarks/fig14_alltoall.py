@@ -4,6 +4,10 @@
 (DESIGN.md §7) and emits the baseline-vs-optimized curves plus the paper's
 optimized-collective claim bands (~20% faster than RCCL at small sizes,
 ~7% gain at large sizes).
+
+``--pipelined`` adds the pipelined rotation-ring curves and the §9
+all-to-all parity band (rotation AA gains little from per-chunk signaling,
+DESIGN.md §9.3).
 """
 from __future__ import annotations
 
@@ -11,13 +15,13 @@ from repro.core.dma import (alltoall_schedule, derive_dispatch, mi300x_platform,
                             rccl_aa_calibration, simulate)
 from repro.core.dma.rccl_model import rccl_collective_latency
 from .common import (ALL_SIZES, MB, SMALL_SIZES, ClaimChecker, fmt_size,
-                     geomean, optimized_report)
+                     geomean, optimized_report, pipelined_report)
 
 VARIANTS = ("pcpy", "swap", "b2b", "prelaunch_pcpy", "prelaunch_swap", "prelaunch_b2b")
 OPT_VARIANTS = tuple(f"opt_{v}" for v in VARIANTS)
 
 
-def run(verbose: bool = True, optimized: bool = False):
+def run(verbose: bool = True, optimized: bool = False, pipelined: bool = False):
     topo = mi300x_platform()
     rc = rccl_aa_calibration()
     variants = VARIANTS + OPT_VARIANTS if optimized else VARIANTS
@@ -58,6 +62,8 @@ def run(verbose: bool = True, optimized: bool = False):
             print(f"  [{fmt_size(e.lo)}, {hi}) -> {e.variant}")
     if optimized:
         optimized_report(cc, topo, "all_to_all", lat, rccl, verbose)
+    if pipelined:
+        pipelined_report(cc, topo, "all_to_all", lat, rccl, verbose)
     return cc, lat
 
 
@@ -68,8 +74,11 @@ def main(argv=None):
     p.add_argument("--optimized", action="store_true",
                    help="also sweep the opt_ command streams (DESIGN.md §7) "
                         "and emit baseline-vs-optimized curves")
+    p.add_argument("--pipelined", action="store_true",
+                   help="also sweep the pipelined rotation rings "
+                        "(DESIGN.md §9) and check the §9 parity band")
     args = p.parse_args(argv)
-    cc, _ = run(optimized=args.optimized)
+    cc, _ = run(optimized=args.optimized, pipelined=args.pipelined)
     return 0 if cc.report() else 1
 
 

@@ -29,7 +29,11 @@ MB = 1024 * 1024
 # v3: chunked command streams (DESIGN.md §8) — Calibration.max_chunk_bytes
 # and the swept chunk granularities join the fingerprint, entries carry a
 # per-range ``chunk``; stale v2 tables must never serve chunked sweeps.
-_TABLE_CACHE_VERSION = 3
+# v4: pipelined ring collectives (DESIGN.md §9) — the sweep offers the
+# per-chunk-signaled ``pipe_`` family (allow_pipelined), so v3 tables that
+# never saw those candidates must miss and re-derive (regression-tested in
+# tests/test_dispatch_cache.py).
+_TABLE_CACHE_VERSION = 4
 # The size sweep behind every cached/bundled table; part of the cache key.
 _SWEEP_SIZES = [2 ** i for i in range(10, 31)]
 # Chunk granularities the table sweep offers the argmin (DESIGN.md §8.1):
@@ -104,18 +108,24 @@ def _store_table_cache(topo: Topology, sizes: list[int], tables) -> None:
         pass
 
 # Variant names (paper + torus ring renderings) -> JAX implementations here.
+# The pipe_ winners (DESIGN.md §9) map onto the matching JAX ring renderings:
+# XLA already software-pipelines the lowered ring loop, so the per-chunk
+# simulator variant and the JAX collective share one implementation.
 _AG_IMPL = {
     "pcpy": coll.reference_all_gather,
     "b2b": coll.ring_all_gather,
     "bcst": coll.bidir_ring_all_gather,
     "ring": coll.ring_all_gather,
     "bidir_ring": coll.bidir_ring_all_gather,
+    "pipe_b2b": coll.ring_all_gather,
+    "pipe_bidir_ring": coll.bidir_ring_all_gather,
 }
 _AA_IMPL = {
     "pcpy": coll.reference_all_to_all,
     "b2b": coll.pairwise_all_to_all,
     "swap": coll.pairwise_all_to_all,
     "ring": coll.pairwise_all_to_all,
+    "pipe_b2b": coll.pairwise_all_to_all,
 }
 
 
@@ -132,8 +142,10 @@ def tpu_dispatch_tables(n_devices: int = 16):
     cached = _load_table_cache(topo, sizes)
     if cached is not None:
         return cached
-    ag = tuple(derive_dispatch(topo, "all_gather", sizes, chunk_sizes=_SWEEP_CHUNKS))
-    aa = tuple(derive_dispatch(topo, "all_to_all", sizes, chunk_sizes=_SWEEP_CHUNKS))
+    ag = tuple(derive_dispatch(topo, "all_gather", sizes, allow_pipelined=True,
+                               chunk_sizes=_SWEEP_CHUNKS))
+    aa = tuple(derive_dispatch(topo, "all_to_all", sizes, allow_pipelined=True,
+                               chunk_sizes=_SWEEP_CHUNKS))
     _store_table_cache(topo, sizes, (ag, aa))
     return ag, aa
 
@@ -199,8 +211,10 @@ def regenerate_bundled_tables(device_counts=(16,)) -> str:
     for n in device_counts:
         topo = tpu_v5e_pod(n)
         sizes = _SWEEP_SIZES
-        ag = tuple(derive_dispatch(topo, "all_gather", sizes, chunk_sizes=_SWEEP_CHUNKS))
-        aa = tuple(derive_dispatch(topo, "all_to_all", sizes, chunk_sizes=_SWEEP_CHUNKS))
+        ag = tuple(derive_dispatch(topo, "all_gather", sizes, allow_pipelined=True,
+                                   chunk_sizes=_SWEEP_CHUNKS))
+        aa = tuple(derive_dispatch(topo, "all_to_all", sizes, allow_pipelined=True,
+                                   chunk_sizes=_SWEEP_CHUNKS))
         _store_table_cache(topo, sizes, (ag, aa))
         out[_table_key(topo, sizes)] = _serialize_tables((ag, aa))
     with open(_BUNDLED_TABLES, "w") as f:

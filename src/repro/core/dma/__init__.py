@@ -9,8 +9,17 @@ from .commands import (
     Schedule,
     chunk_command,
     chunk_schedule,
+    chunk_sizes,
+    chunk_tag,
+    chunked_copies,
+    link_traffic,
 )
-from .collectives import allgather_schedule, alltoall_schedule, kv_fetch_schedule
+from .collectives import (
+    PIPE_DEPTH,
+    allgather_schedule,
+    alltoall_schedule,
+    kv_fetch_schedule,
+)
 from .dispatch import (
     PAPER_AA_DISPATCH,
     PAPER_AG_DISPATCH,
@@ -20,6 +29,7 @@ from .dispatch import (
     optimized_variants,
     paper_dispatch,
     pick_variant,
+    pipelined_variants,
     variant_latency,
 )
 from .engine import PhaseBreakdown, SimResult, simulate, single_copy_breakdown
@@ -46,11 +56,12 @@ from .topology import (
 
 __all__ = [
     "commands", "CmdKind", "Command", "EngineQueue", "Schedule",
-    "chunk_command", "chunk_schedule",
-    "allgather_schedule", "alltoall_schedule", "kv_fetch_schedule",
+    "chunk_command", "chunk_schedule", "chunk_sizes", "chunk_tag",
+    "chunked_copies", "link_traffic",
+    "PIPE_DEPTH", "allgather_schedule", "alltoall_schedule", "kv_fetch_schedule",
     "PAPER_AA_DISPATCH", "PAPER_AG_DISPATCH", "best_variant_for",
     "candidate_variants", "derive_dispatch", "optimized_variants",
-    "paper_dispatch", "pick_variant", "variant_latency",
+    "paper_dispatch", "pick_variant", "pipelined_variants", "variant_latency",
     "PhaseBreakdown", "SimResult", "simulate", "single_copy_breakdown",
     "OptimizationConfig", "batch_commands", "fuse_signals", "optimize",
     "parse_optimized", "split_queues",

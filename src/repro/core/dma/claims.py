@@ -9,8 +9,10 @@ import math
 from . import collectives as C
 from .dispatch import (
     best_variant_for,
+    candidate_variants,
     optimized_variants,
     paper_dispatch,
+    pipelined_variants,
     variant_latency,
 )
 from .engine import simulate, single_copy_breakdown
@@ -21,6 +23,7 @@ from .topology import (
     mi300x_platform,
     rccl_aa_calibration,
     rccl_ag_calibration,
+    tpu_v5e_pod,
 )
 
 KB = 1024
@@ -142,6 +145,97 @@ def evaluate_claims(topo: Topology | None = None) -> list[Claim]:
     ]
     claims += optimized_stream_claims(topo)
     claims += optimized_power_claims(topo)
+    claims += pipelined_stream_claims()
+    return claims
+
+
+#: Mid-size band of the pipelined-ring claims (DESIGN.md §9): large enough
+#: that the rings' per-step stalls are shard-time-scale (pipelining has
+#: something to overlap), small enough that the wire floor has not yet
+#: crushed every stream onto the same bandwidth-bound latency.
+PIPE_MID_SIZES = [1 * MB, 2 * MB, 4 * MB, 8 * MB, 16 * MB, 32 * MB]
+
+#: Chunk-count sweep of the per-chunk-signaling claim: pipeline depths up to
+#: the sweep ceiling ``collectives.PIPE_DEPTH`` (= 4), plus one deeper point
+#: that must still beat final-chunk-only signaling even though per-chunk
+#: packet/issue costs have passed the optimum (DESIGN.md §9.1).
+PIPE_DEPTH_SWEEP = (1, 2, 4, 8)
+
+
+def pipe_vs_final_chunk_ratio(topo: Topology, size: int, depth: int,
+                              variant: str = "pipe_b2b",
+                              collective: str = "all_gather") -> float:
+    """Latency ratio of final-chunk-only over per-chunk signaling for one
+    pipelined schedule shape (DESIGN.md §9.1).  Both arms build the *same*
+    queues/chunks; only the wait/signal granularity differs — >1 means
+    per-chunk signaling wins.  Depth 1 is structurally ≈1 (one chunk, one
+    signal either way)."""
+    builder = (C.allgather_schedule if collective == "all_gather"
+               else C.alltoall_schedule)
+    per_chunk = simulate(builder(topo, size, variant, pipe_depth=depth), topo)
+    final_only = simulate(builder(topo, size, variant, pipe_depth=depth,
+                                  per_chunk_signaling=False), topo)
+    return final_only.latency / per_chunk.latency
+
+
+def pipelined_stream_claims(
+    topo: Topology | None = None,
+    collectives: tuple[str, ...] = ("all_gather", "all_to_all"),
+) -> list[Claim]:
+    """Claim bands for the pipelined ring collectives (DESIGN.md §9).
+
+    Pinned on the TPU v5e torus (16 devices) by default — the neighbor-link
+    topology where ring renderings are the dispatch winners, so pipelining
+    them moves the end-to-end policy (on the fully-connected MI300X the
+    direct variants own the bandwidth-bound range and the ring family is
+    only reachable by explicit request).  Three bands:
+
+    * ``pipe_chunk_signaling_gain`` — per-chunk vs final-chunk-only
+      signaling of the same ``pipe_b2b`` schedule at the sweep-ceiling
+      depth (4 chunks/shard), 1MB: the consumer starts forwarding on the
+      first arrived chunk instead of the whole shard (the §9 acceptance
+      claim; monotonicity across ``PIPE_DEPTH_SWEEP`` is asserted in
+      ``tests/test_sim.py``).
+    * ``pipe_midsize_gain`` — best ``pipe_`` stream vs the best
+      non-pipelined stream over the *full* candidate set (baseline,
+      ``prelaunch_``, ``opt_``) across the mid-size band: pipelining beats
+      both the baseline and the §7-optimized streams there (the winner is
+      ``opt_prelaunch_pipe_bidir_ring`` — per-chunk signaling composes
+      with batching, fusion and prelaunch).
+    * ``pipe_aa_parity`` — rotation all-to-all gains almost nothing from
+      per-chunk signaling (§9.3: the forwarded payload is the *tail* of the
+      previous round's arrivals, so chunk dependencies degenerate toward
+      final-chunk waits); the band documents parity rather than a win.
+    """
+    topo = topo or tpu_v5e_pod(16)
+
+    claims: list[Claim] = []
+    if "all_gather" in collectives:
+        nonpipe = candidate_variants(topo, "all_gather", allow_optimized=True)
+        pipe = pipelined_variants(topo, "all_gather")
+        midsize = geomean(
+            min(variant_latency(topo, "all_gather", s, v) for v in nonpipe)
+            / min(variant_latency(topo, "all_gather", s, v) for v in pipe)
+            for s in PIPE_MID_SIZES)
+        chunk_gain = pipe_vs_final_chunk_ratio(topo, 1 * MB, depth=4)
+        claims += [
+            Claim("pipe_chunk_signaling_gain", 1.4, chunk_gain, 1.15, 1.7,
+                  "pipe_b2b AG per-chunk vs final-chunk-only signaling, depth 4 "
+                  "@1MB, TPU torus (arXiv:2512.10236 direction)"),
+            Claim("pipe_midsize_gain", 1.08, midsize, 1.03, 1.25,
+                  "best pipe_ stream over best baseline/opt_ stream, AG 1-32MB "
+                  "geomean, TPU torus (DESIGN.md §9)"),
+        ]
+    if "all_to_all" in collectives:
+        aa_parity = geomean(
+            variant_latency(topo, "all_to_all", s, "ring")
+            / variant_latency(topo, "all_to_all", s, "pipe_b2b")
+            for s in PIPE_MID_SIZES)
+        claims += [
+            Claim("pipe_aa_parity", 1.01, aa_parity, 0.97, 1.08,
+                  "rotation AA ring over pipe_b2b, 1-32MB geomean — per-chunk "
+                  "signaling is ~parity for rotation all-to-all (§9.3)"),
+        ]
     return claims
 
 

@@ -34,18 +34,38 @@ bidir-ring / rotation-AA builders benefit chiefly from fused signaling (each
 chained step drops its standalone semaphore command) and batching; the
 one-shot builders additionally pick up multi-queue dispatch.
 
+Pipelined ring collectives (DESIGN.md §9): the ``pipe_b2b`` /
+``pipe_bidir_ring`` variants re-render the chained rings with *per-chunk
+semaphore signaling* — every shard is split into ``pipe_depth`` chunk
+commands (bounded by the sDMA packet ceiling), each chunk raises its own
+fused chunk-indexed tag, each ring step runs on its own engine queue, and
+step *k+1* waits per-chunk: it starts forwarding chunk *i* the moment chunk
+*i* of step *k* landed, instead of waiting for the whole shard.  Successive
+ring steps overlap on distinct engines while the per-link wire floor is
+kept saturated; ``per_chunk_signaling=False`` builds the same queue shape
+with final-chunk-only waits (the control arm of the §9 claims).
+
 Size convention: ``size`` is the collective's *total message size* as in the
 paper's figures (1KB–4GB).  Each device's per-peer shard is ``size / n``.
 """
 from __future__ import annotations
 
 from . import commands as cmd
-from .commands import EngineQueue, Schedule, chunk_schedule
+from .commands import (CmdKind, EngineQueue, Schedule, chunk_schedule,
+                       chunk_sizes, chunk_tag, chunked_copies)
 from .optimizations import OptimizationConfig, optimize, parse_optimized
 from .topology import Topology
 
-AG_VARIANTS = ("pcpy", "bcst", "b2b", "ring", "bidir_ring")
-AA_VARIANTS = ("pcpy", "swap", "b2b", "ring")
+AG_VARIANTS = ("pcpy", "bcst", "b2b", "ring", "bidir_ring",
+               "pipe_b2b", "pipe_bidir_ring")
+AA_VARIANTS = ("pcpy", "swap", "b2b", "ring", "pipe_b2b")
+
+#: Default pipeline depth of the ``pipe_`` variants (DESIGN.md §9): the
+#: minimum number of chunk commands a shard is split into.  Deeper splits
+#: keep shrinking the per-step fill latency but pay per-chunk packet/issue
+#: costs; depth 4 is where the chunk-count sweep stops improving on the
+#: modeled platforms (the "sweep ceiling" of the §9 claims).
+PIPE_DEPTH = 4
 
 
 def _maybe_chunk(sched: Schedule, topo: Topology,
@@ -123,8 +143,11 @@ def _ring_ag_queues(topo: Topology, shard: int) -> list[EngineQueue]:
 
 def _bidir_ring_ag_queues(topo: Topology, shard: int) -> list[EngineQueue]:
     """Bidirectional ring all-gather: ceil((n-1)/2) forward + floor((n-1)/2)
-    backward steps; the step-0 send reads the local shard ONCE for both
-    directions (a bcst command)."""
+    backward deliveries; the step-0 send reads the local shard ONCE for both
+    directions (a bcst command), covering forward AND backward distance 1,
+    so the backward chain adds ``n_bwd - 1`` further steps (distances
+    ``2..n_bwd``) — every device receives exactly ``n - 1`` distinct shards
+    (the ``n_bwd``-distance shard arrives from the forward side only)."""
     n = topo.n_devices
     n_fwd = (n - 1 + 1) // 2
     n_bwd = (n - 1) - n_fwd
@@ -136,7 +159,7 @@ def _bidir_ring_ag_queues(topo: Topology, shard: int) -> list[EngineQueue]:
         else:
             fwd.append(cmd.bcst(d, succ, pred, shard))
         fwd.append(cmd.signal(("agf", d, 0)))
-        if n_bwd > 0 and n > 2:
+        if n_bwd > 1 and n > 2:
             fwd.append(cmd.signal(("agb", d, 0)))
         for k in range(1, n_fwd):
             fwd.append(cmd.wait(("agf", pred, k - 1)))
@@ -145,9 +168,9 @@ def _bidir_ring_ag_queues(topo: Topology, shard: int) -> list[EngineQueue]:
         fwd.append(cmd.signal())
         queues.append(EngineQueue(d, 0, tuple(fwd)))
 
-        if n_bwd > 0 and n > 2:
+        if n_bwd > 1 and n > 2:
             bwd: list[cmd.Command] = []
-            for k in range(1, n_bwd + 1):
+            for k in range(1, n_bwd):
                 bwd.append(cmd.wait(("agb", succ, k - 1)))
                 bwd.append(cmd.copy(d, pred, shard))
                 bwd.append(cmd.signal(("agb", d, k)))
@@ -173,9 +196,165 @@ def _ring_aa_queues(topo: Topology, shard: int) -> list[EngineQueue]:
     return queues
 
 
+def _pipe_granularity(payload: int, depth: int, mcb: int) -> int:
+    """Chunk granularity of a pipelined transfer (DESIGN.md §9): split
+    ``payload`` into at least ``depth`` chunks, never exceeding the sDMA
+    packet ceiling ``mcb`` (``mcb <= 0`` = ceiling disabled)."""
+    g = max(1, -(-payload // depth))
+    return min(g, mcb) if mcb > 0 else g
+
+
+def _pipe_ring_ag_queues(topo: Topology, shard: int, granularity: int,
+                         per_chunk: bool) -> list[EngineQueue]:
+    """Pipelined unidirectional ring all-gather (``pipe_b2b``, DESIGN.md §9).
+
+    One engine queue per ring step: step ``k`` forwards the shard received
+    in step ``k-1`` as chunk commands, each raising a fused chunk-indexed
+    tag, and waits on its predecessor *per chunk* — chunk ``i`` of step
+    ``k`` issues as soon as chunk ``i`` of step ``k-1`` landed, so
+    successive ring steps overlap on distinct engines while every link
+    stays back-to-back at the ring's wire floor.  With
+    ``per_chunk=False`` each step waits only on the predecessor's final
+    chunk (the serialized control arm).  Only the final step notifies the
+    host: its completion transitively implies every earlier chained step.
+    """
+    n = topo.n_devices
+    c = len(chunk_sizes(shard, granularity))
+    last = c - 1
+    queues = []
+    for d, (pred, succ) in _ring_neighbors(topo).items():
+        for k in range(n - 1):
+            tag = ("pag", d, k) if k < n - 2 else None
+            copies = chunked_copies(CmdKind.COPY, d, (succ,), shard,
+                                    granularity, tag, per_chunk=per_chunk)
+            cs: list[cmd.Command] = []
+            for i, cc in enumerate(copies):
+                if k > 0 and (per_chunk or i == 0):
+                    w = i if per_chunk else last
+                    cs.append(cmd.wait(chunk_tag(("pag", pred, k - 1), w)))
+                cs.append(cc)
+            if k == n - 2:
+                cs.append(cmd.signal())
+            queues.append(EngineQueue(d, k % topo.n_engines, tuple(cs)))
+    return queues
+
+
+def _pipe_bidir_ag_queues(topo: Topology, shard: int, granularity: int,
+                          per_chunk: bool) -> list[EngineQueue]:
+    """Pipelined bidirectional ring all-gather (``pipe_bidir_ring``, §9).
+
+    The step-0 ``bcst`` feeds both directions reading the local shard once;
+    its per-chunk tags unblock the forward AND backward step-1 queues chunk
+    by chunk — in the chained bidir ring the backward engine idles until the
+    *whole* bcst finished, which is the largest stall per-chunk signaling
+    removes (a full shard's wire time at bandwidth-bound sizes).
+
+    When steps outnumber engines, each direction's chain wraps onto its own
+    engine subset (forward on the lower half, backward on the upper half).
+    Sharing an engine *within* a chain keeps wake times strictly staggered
+    (step ``k+E`` only unblocks after step ``k+E-1``), so grant order on the
+    shared engine is unambiguous; mixing the two chains on one engine would
+    tie their wake times exactly (the directions are mirror-symmetric) and
+    leave the interleaving to the event loop's submission-order tie-break,
+    which is not translation invariant — the schedule would stop being
+    device-symmetric in the full simulation.
+    """
+    n = topo.n_devices
+    n_fwd = (n - 1 + 1) // 2
+    n_bwd = (n - 1) - n_fwd
+    e_fwd = max(1, (topo.n_engines + 1) // 2)
+    e_bwd = max(1, topo.n_engines - e_fwd)
+    c = len(chunk_sizes(shard, granularity))
+    last = c - 1
+    queues = []
+    for d, (pred, succ) in _ring_neighbors(topo).items():
+        # step 0: one read feeds both directions (copy when n == 2).
+        kind = CmdKind.COPY if n == 2 else CmdKind.BCST
+        dsts = (succ,) if n == 2 else (succ, pred)
+        tag = ("pg0", d, 0) if n > 2 else None
+        cs = list(chunked_copies(kind, d, dsts, shard, granularity, tag,
+                                 per_chunk=per_chunk))
+        if n_fwd == 1:
+            cs.append(cmd.signal())
+        queues.append(EngineQueue(d, 0, tuple(cs)))
+        # The bcst covers distance 1 BOTH ways, so the backward chain adds
+        # n_bwd - 1 steps (distances 2..n_bwd) — n - 1 deliveries total,
+        # mirroring _bidir_ring_ag_queues.
+        for name_prev, name, peer, steps in (
+                ("pg0", "pagf", pred, range(1, n_fwd)),
+                ("pg0", "pagb", succ, range(1, n_bwd))):
+            n_last = steps.stop - 1
+            for k in steps:
+                prev = name_prev if k == 1 else name
+                tag = (name, d, k) if k < n_last else None
+                target = succ if name == "pagf" else pred
+                copies = chunked_copies(CmdKind.COPY, d, (target,), shard,
+                                        granularity, tag, per_chunk=per_chunk)
+                cs = []
+                for i, cc in enumerate(copies):
+                    if per_chunk or i == 0:
+                        w = i if per_chunk else last
+                        cs.append(cmd.wait(chunk_tag((prev, peer, k - 1), w)))
+                    cs.append(cc)
+                if k == n_last:
+                    cs.append(cmd.signal())
+                if name == "pagf":
+                    e = k % e_fwd
+                else:
+                    # min(): on a 1-engine device both chains share engine 0
+                    # (no phantom engine index past n_engines - 1).
+                    e = min(e_fwd + ((k - 1) % e_bwd), topo.n_engines - 1)
+                queues.append(EngineQueue(d, e, tuple(cs)))
+    return queues
+
+
+def _pipe_aa_queues(topo: Topology, shard: int, depth: int, mcb: int,
+                    per_chunk: bool) -> list[EngineQueue]:
+    """Pipelined rotation ring all-to-all (``pipe_b2b``, DESIGN.md §9).
+
+    Round ``r`` forwards the ``(n-1-r) * shard`` bytes still in transit as
+    ``depth`` chunk commands (bounded by the packet ceiling).  Chunk ``i``
+    of round ``r`` forwards bytes that arrived *after* the local shard of
+    round ``r-1``, so its per-chunk wait resolves to the predecessor chunk
+    covering offset ``(i+1)*g_r + shard`` — the dependency lands near the
+    END of the previous round's stream (the rotation's forwarded payload is
+    the tail of what arrived), which is why rotation all-to-all gains far
+    less from per-chunk signaling than the all-gather rings (§9.3).
+    """
+    n = topo.n_devices
+    queues = []
+    for d, (pred, succ) in _ring_neighbors(topo).items():
+        for r in range(n - 1):
+            payload = (n - 1 - r) * shard
+            g_r = _pipe_granularity(payload, depth, mcb)
+            tag = ("paa", d, r) if r < n - 2 else None
+            copies = chunked_copies(CmdKind.COPY, d, (succ,), payload, g_r,
+                                    tag, per_chunk=per_chunk)
+            cs: list[cmd.Command] = []
+            if r > 0:
+                prev_payload = (n - r) * shard
+                g_p = _pipe_granularity(prev_payload, depth, mcb)
+                c_prev = len(chunk_sizes(prev_payload, g_p))
+            for i, cc in enumerate(copies):
+                if r > 0 and (per_chunk or i == 0):
+                    if per_chunk:
+                        need = (i + 1) * g_r + shard
+                        dep = min(-(-need // g_p) - 1, c_prev - 1)
+                    else:
+                        dep = c_prev - 1
+                    cs.append(cmd.wait(chunk_tag(("paa", pred, r - 1), dep)))
+                cs.append(cc)
+            if r == n - 2:
+                cs.append(cmd.signal())
+            queues.append(EngineQueue(d, r % topo.n_engines, tuple(cs)))
+    return queues
+
+
 def allgather_schedule(topo: Topology, size: int, variant: str = "pcpy", *,
                        opt_config: OptimizationConfig | None = None,
-                       max_chunk_bytes: int | None = None) -> Schedule:
+                       max_chunk_bytes: int | None = None,
+                       pipe_depth: int = PIPE_DEPTH,
+                       per_chunk_signaling: bool = True) -> Schedule:
     """All-gather: every device sends its shard (size/n) to all n-1 peers.
 
     An ``opt_`` variant prefix applies the optimized command-stream
@@ -183,6 +362,12 @@ def allgather_schedule(topo: Topology, size: int, variant: str = "pcpy", *,
     customizes them.  Copies above ``max_chunk_bytes`` (default: the
     topology's calibrated sDMA packet ceiling, DESIGN.md §8.1) are split
     into pipelined chunk commands; pass ``0`` to disable chunking.
+
+    The ``pipe_`` variants (DESIGN.md §9) additionally take ``pipe_depth``
+    (minimum chunks per shard; an explicit ``max_chunk_bytes`` narrows the
+    chunk granularity further, which is how the dispatch chunk sweep drives
+    the pipeline depth) and ``per_chunk_signaling`` (``False`` builds the
+    final-chunk-only control arm of the §9 claims).
     """
     requested = variant
     variant, optimized = parse_optimized(variant)
@@ -193,7 +378,13 @@ def allgather_schedule(topo: Topology, size: int, variant: str = "pcpy", *,
     shard = max(1, size // n)
     queues: list[EngineQueue] = []
     symmetric = True
-    if base == "pcpy":
+    if base in ("pipe_b2b", "pipe_bidir_ring"):
+        mcb = topo.calib.max_chunk_bytes if max_chunk_bytes is None else max_chunk_bytes
+        g = _pipe_granularity(shard, pipe_depth, mcb)
+        builder = _pipe_ring_ag_queues if base == "pipe_b2b" else _pipe_bidir_ag_queues
+        queues = builder(topo, shard, g, per_chunk_signaling)
+        symmetric = _ring_closes_on_neighbors(topo)
+    elif base == "pcpy":
         for d in range(n):
             for e, p in enumerate(x for x in range(n) if x != d):
                 queues.append(EngineQueue(d, e, (cmd.copy(d, p, shard), cmd.signal())))
@@ -231,14 +422,18 @@ def allgather_schedule(topo: Topology, size: int, variant: str = "pcpy", *,
 
 def alltoall_schedule(topo: Topology, size: int, variant: str = "pcpy", *,
                       opt_config: OptimizationConfig | None = None,
-                      max_chunk_bytes: int | None = None) -> Schedule:
+                      max_chunk_bytes: int | None = None,
+                      pipe_depth: int = PIPE_DEPTH,
+                      per_chunk_signaling: bool = True) -> Schedule:
     """All-to-all: every device exchanges a size/n shard with every peer.
 
     With ``swap``, pair (i, j) is served by a single in-place swap command
     executed by one of the two devices (balanced round-robin assignment), so
     system-wide command count halves.  An ``opt_`` variant prefix applies the
     optimized command-stream transforms (DESIGN.md §7); ``max_chunk_bytes``
-    bounds the per-command payload as in :func:`allgather_schedule`.
+    bounds the per-command payload as in :func:`allgather_schedule`;
+    ``pipe_depth``/``per_chunk_signaling`` parameterize the ``pipe_b2b``
+    pipelined rotation ring (DESIGN.md §9).
     """
     requested = variant
     variant, optimized = parse_optimized(variant)
@@ -249,7 +444,11 @@ def alltoall_schedule(topo: Topology, size: int, variant: str = "pcpy", *,
     shard = max(1, size // n)
     queues: list[EngineQueue] = []
     symmetric = True
-    if base == "swap":
+    if base == "pipe_b2b":
+        mcb = topo.calib.max_chunk_bytes if max_chunk_bytes is None else max_chunk_bytes
+        queues = _pipe_aa_queues(topo, shard, pipe_depth, mcb, per_chunk_signaling)
+        symmetric = _ring_closes_on_neighbors(topo)
+    elif base == "swap":
         # Executor assignment alternates per pair -> devices run different
         # command counts, so this schedule is never symmetric.
         symmetric = False

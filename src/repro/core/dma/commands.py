@@ -30,6 +30,17 @@ copies into pipelined chunk commands — :func:`chunk_command` /
 single :class:`Command` instance (the simulator detects such runs by object
 identity and executes them closed-form); a fused signal rides only the
 *final* chunk.
+
+Per-chunk signaling (DESIGN.md §9): a tag may carry a fourth element — the
+*chunk index* — so each chunk of a split transfer raises its own semaphore
+(:func:`chunk_tag` / :func:`chunked_copies`) and a consumer can ``wait`` on
+chunk *i* instead of the whole transfer.  This is what the pipelined ring
+builders in :mod:`repro.core.dma.collectives` use to start forwarding a
+shard's first arrived chunk while the rest is still in flight (the
+finer-grain overlap direction of arXiv:2512.10236).  Per-chunk tags are
+always *fused* (they ride each chunk's final write packet): a standalone
+``signal`` per chunk would double the command count and serialize the
+engine front end on ``sync_engine`` round-trips.
 """
 from __future__ import annotations
 
@@ -37,9 +48,10 @@ import dataclasses
 import enum
 from typing import Sequence
 
-# A signal/wait tag: (name, producer device, step). Waits name the exact
-# producer; the symmetric fast path rewrites the producer to the
-# representative device (DESIGN.md §6).
+# A signal/wait tag: (name, producer device, step[, chunk]). Waits name the
+# exact producer; the symmetric fast path rewrites the producer to the
+# representative device (DESIGN.md §6).  The optional fourth element is the
+# chunk index of a per-chunk-signaled transfer (DESIGN.md §9).
 Tag = tuple
 
 
@@ -185,6 +197,63 @@ def chunk_command(c: Command, max_bytes: int) -> tuple[Command, ...]:
     return tuple(chunks)
 
 
+def chunk_tag(tag: Tag, chunk: int) -> Tag:
+    """The chunk-granularity tag of chunk ``chunk`` of transfer ``tag``
+    (DESIGN.md §9): the transfer tag with the chunk index appended."""
+    return tuple(tag) + (chunk,)
+
+
+def chunk_sizes(size: int, granularity: int) -> tuple[int, ...]:
+    """Byte sizes of the chunks a ``size``-byte transfer splits into:
+    full ``granularity`` chunks followed by one remainder chunk.
+    ``granularity <= 0`` (chunking disabled) yields the whole transfer."""
+    if granularity <= 0 or size <= granularity:
+        return (size,)
+    n_full, rem = divmod(size, granularity)
+    return (granularity,) * n_full + ((rem,) if rem else ())
+
+
+def chunked_copies(kind: CmdKind, src, dsts, size: int, granularity: int,
+                   tag: Tag | None = None, *,
+                   per_chunk: bool = True) -> tuple[Command, ...]:
+    """Chunk commands of one data transfer with chunk-granularity signaling
+    (DESIGN.md §9).
+
+    Splits a ``size``-byte transfer of ``kind`` into
+    :func:`chunk_sizes`-many commands.  With ``per_chunk=True`` chunk ``i``
+    carries ``fused_tag=chunk_tag(tag, i)`` — its semaphore rides the
+    chunk's final write packet, so a consumer waiting on
+    ``chunk_tag(tag, i)`` starts as soon as *that chunk* landed.  With
+    ``per_chunk=False`` only the final chunk raises its (chunk-indexed)
+    tag — the final-chunk-only signaling of :func:`chunk_command`, kept as
+    the control arm of the pipelined-vs-serial claims.  ``tag=None`` emits
+    untagged chunks.
+
+    Per-chunk-tagged chunks are distinct ``Command`` instances (their tags
+    differ); the simulator recognizes such *equivalent-modulo-tag* runs and
+    still schedules them in closed form (DESIGN.md §9.2).  Untagged chunks
+    of one size share a single instance, exactly like
+    :func:`chunk_command`, so the final-chunk-only control arm keeps the
+    §8.3 identity-run fast path.
+    """
+    if kind not in DATA_KINDS:
+        raise ValueError("chunked_copies needs a data command kind")
+    sizes = chunk_sizes(size, granularity)
+    last = len(sizes) - 1
+    out = []
+    untagged: dict[int, Command] = {}
+    for i, sz in enumerate(sizes):
+        if tag is not None and (per_chunk or i == last):
+            out.append(Command(kind, src, tuple(dsts), sz,
+                               fused_tag=chunk_tag(tag, i)))
+            continue
+        c = untagged.get(sz)
+        if c is None:
+            c = untagged[sz] = Command(kind, src, tuple(dsts), sz)
+        out.append(c)
+    return tuple(out)
+
+
 def chunk_schedule(schedule: "Schedule", max_chunk_bytes: int) -> "Schedule":
     """Chunk every oversized data command of a schedule (DESIGN.md §8.1).
 
@@ -257,6 +326,26 @@ class EngineQueue:
         fused completion signals count — they still notify the host)."""
         return sum(1 for c in self.commands
                    if (c.kind is CmdKind.SIGNAL and c.tag is None) or c.fused_signal)
+
+
+def link_traffic(schedule: "Schedule") -> dict[tuple, int]:
+    """(src, dst) -> total payload bytes over all data commands.
+
+    The schedule-level traffic invariant: chunking (§8.1), per-chunk
+    signaling and pipeline depth (§9) only re-slice commands, so this map
+    is identical across granularities of one variant.  ``swap`` moves
+    ``size`` bytes in each direction, so it contributes to both ordered
+    pairs; ``bcst`` contributes ``size`` to each destination.
+    """
+    out: dict[tuple, int] = {}
+    for q in schedule.queues:
+        for c in q.data_commands:
+            for dst in c.dsts:
+                out[(c.src, dst)] = out.get((c.src, dst), 0) + c.size
+            if c.kind is CmdKind.SWAP:
+                key = (c.dsts[0], c.src)
+                out[key] = out.get(key, 0) + c.size
+    return out
 
 
 @dataclasses.dataclass(frozen=True)

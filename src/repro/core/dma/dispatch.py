@@ -17,6 +17,12 @@ additionally treat the chunk granularity as a policy dimension —
 ``derive_dispatch(..., chunk_sizes=...)`` runs the argmin over
 (variant, chunk) pairs and records the winning chunk size per range.
 
+Pipelined ring collectives (DESIGN.md §9): ``allow_pipelined=True`` adds the
+per-chunk-signaled ``pipe_`` family (``pipe_b2b``, ``pipe_bidir_ring`` and
+their ``prelaunch_``/``opt_`` compositions) to the argmin on neighbor-link
+topologies — the sweep behind ``benchmarks/fig13*/fig14* --pipelined`` and
+the v4 bundled TPU tables.
+
 Simulation results are memoized: :func:`variant_latency` caches every
 (topology, collective, size, variant, chunk) point and
 :func:`derive_dispatch` caches whole argmin sweeps, so repeated claim
@@ -99,18 +105,28 @@ def candidate_variants(
     *,
     allow_prelaunch: bool = True,
     allow_optimized: bool = False,
+    allow_pipelined: bool = False,
 ) -> list[str]:
     """Variants an argmin sweep should consider on this topology.
 
     ``allow_optimized`` additionally offers every candidate with the
     optimized command-stream transforms applied (``opt_`` prefix,
-    DESIGN.md §7).
+    DESIGN.md §7).  ``allow_pipelined`` adds the per-chunk-signaled
+    pipelined rings (``pipe_`` family, DESIGN.md §9) on neighbor-link
+    topologies — like the chained rings they only make sense where the
+    torus embedding is the native route, so fully-connected fabrics skip
+    them.  Prefixes compose: with all flags set the sweep also offers
+    ``prelaunch_pipe_*`` and ``opt_[prelaunch_]pipe_*``.
     """
     variants = ["pcpy", "b2b", "bcst" if collective == "all_gather" else "swap"]
     if not topo.fully_connected:
         variants.append("ring")
         if collective == "all_gather":
             variants.append("bidir_ring")
+        if allow_pipelined:
+            variants.append("pipe_b2b")
+            if collective == "all_gather":
+                variants.append("pipe_bidir_ring")
     if allow_prelaunch:
         variants += [f"prelaunch_{v}" for v in list(variants)]
     if allow_optimized:
@@ -125,6 +141,15 @@ def optimized_variants(topo: Topology, collective: str) -> list[str]:
             if v.startswith("opt_")]
 
 
+def pipelined_variants(topo: Topology, collective: str) -> list[str]:
+    """The ``pipe_`` candidate set alone (DESIGN.md §9) — every pipelined
+    ring rendering including its ``prelaunch_``/``opt_`` compositions; what
+    the pipelined claim bands and ``--pipelined`` benchmark curves sweep."""
+    return [v for v in candidate_variants(topo, collective, allow_optimized=True,
+                                          allow_pipelined=True)
+            if "pipe_" in v]
+
+
 @functools.lru_cache(maxsize=256)
 def _derive_dispatch_cached(
     topo: Topology,
@@ -133,9 +158,11 @@ def _derive_dispatch_cached(
     allow_prelaunch: bool,
     allow_optimized: bool,
     chunk_sizes: tuple[int | None, ...],
+    allow_pipelined: bool = False,
 ) -> tuple[DispatchEntry, ...]:
     variants = candidate_variants(topo, collective, allow_prelaunch=allow_prelaunch,
-                                  allow_optimized=allow_optimized)
+                                  allow_optimized=allow_optimized,
+                                  allow_pipelined=allow_pipelined)
 
     winners: list[tuple[int, str, int | None]] = []
     for size in sizes:
@@ -171,6 +198,7 @@ def derive_dispatch(
     *,
     allow_prelaunch: bool = True,
     allow_optimized: bool = False,
+    allow_pipelined: bool = False,
     chunk_sizes=None,
 ) -> list[DispatchEntry]:
     """Re-derive the best variant per size from the timing model (argmin).
@@ -179,16 +207,20 @@ def derive_dispatch(
     approximately reproduce Tables 2/3 on the MI300X topology (validated in
     tests/benchmarks) and gives the policy for the TPU topology.  With
     ``allow_optimized`` the sweep also offers the ``opt_`` command streams
-    (DESIGN.md §7).  ``chunk_sizes`` adds the sDMA chunk granularity as a
-    policy dimension (DESIGN.md §8.1): the argmin runs over (variant, chunk)
-    pairs and each entry records its winning ``chunk`` (``None`` = the
-    topology's calibrated default).  Sweeps are memoized per (topology,
-    collective, sizes, allow_prelaunch, allow_optimized, chunk_sizes).
+    (DESIGN.md §7); ``allow_pipelined`` adds the per-chunk-signaled
+    pipelined rings (DESIGN.md §9) on neighbor-link topologies.
+    ``chunk_sizes`` adds the sDMA chunk granularity as a policy dimension
+    (DESIGN.md §8.1): the argmin runs over (variant, chunk) pairs and each
+    entry records its winning ``chunk`` (``None`` = the topology's
+    calibrated default; for ``pipe_`` variants the chunk granularity also
+    bounds the pipeline depth).  Sweeps are memoized per (topology,
+    collective, sizes, allow_prelaunch, allow_optimized, allow_pipelined,
+    chunk_sizes).
     """
     chunks = (None,) if chunk_sizes is None else tuple(chunk_sizes)
     return list(_derive_dispatch_cached(topo, collective, tuple(sizes),
                                         allow_prelaunch, allow_optimized,
-                                        chunks))
+                                        chunks, allow_pipelined))
 
 
 def best_variant_for(topo: Topology, collective: str, size: int,

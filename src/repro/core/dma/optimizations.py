@@ -26,6 +26,19 @@ chunk oversized copies (DESIGN.md §8.1) *before* these transforms run, so
 batching amortizes per-chunk packet creation and fusion lands on the final
 chunk — this is where the paper's large-size ~7% gain comes from.
 
+Per-chunk signaling interaction (DESIGN.md §9): fusion operates at chunk
+granularity.  A stream that signals after *every* chunk (``copy, signal(t0),
+copy, signal(t1), ...``) fuses each semaphore onto its own chunk — exactly
+the per-chunk-tagged commands the pipelined ring builders emit directly
+(:func:`repro.core.dma.commands.chunked_copies`), which is asserted
+bit-identical in ``tests/test_sim.py``.  On an already per-chunk-fused
+``pipe_`` schedule the transforms compose conservatively: queues carrying
+fused chunk tags or waits are never split across SDMA slots (the chunk
+order *is* the dependency order), fusion only absorbs the trailing host
+completion, and batching amortizes the per-chunk packet creation — the
+``opt_pipe_*`` variants owe most of their mid-size win to §7.1 batching of
+the per-chunk/per-wait control stream.
+
 Transforms never change *what* is transferred: byte counts, sources and
 destinations are preserved exactly (asserted in ``tests/test_sim.py``), only
 the scheduling/synchronization envelope changes.
@@ -227,6 +240,14 @@ def fuse_signals(schedule: Schedule) -> Schedule:
     semaphore at write completion — ring steps chain without an extra engine
     round.  Fused *untagged* (host-observed) signals still cost the host one
     ``sync_obs`` each; only the engine side gets cheaper.
+
+    Fusion is chunk-granular (DESIGN.md §9): in a chunked stream each
+    signal fuses onto the chunk command directly before it, so a
+    per-chunk-signaled stream (``copy, signal(tag+chunk), ...``) fuses into
+    exactly the per-chunk-tagged commands the pipelined ring builders emit.
+    A data command that already carries a fused tag keeps it — a following
+    *tagged* signal then stays standalone; a following untagged completion
+    still fuses (the two ride different fields of the final write packet).
 
     Signals that do not directly follow a data command (e.g. the standalone
     completion signal of a wait-only queue) are kept as-is.  The transform is

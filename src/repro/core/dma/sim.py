@@ -70,6 +70,17 @@ arrive split into bounded-size chunk commands
     updates instead of one event per chunk (§8.3).  Runs whose issue rate or
     engine bandwidth would leave wire gaps fall back to the per-chunk loop.
 
+Per-chunk signaling (DESIGN.md §9): pipelined schedules tag each chunk of a
+transfer with its own semaphore (``fused_tag`` carrying a chunk index,
+:func:`repro.core.dma.commands.chunked_copies`) and ``wait`` at chunk
+granularity, so a consumer starts on the first *arrived* chunk instead of
+the whole transfer.  The tag -> waiters map handles chunk tags like any
+other tag — a queue parked on chunk *i* wakes exactly when chunk *i*'s
+fused semaphore is raised — and a run of equivalent-modulo-tag chunk
+commands still schedules in closed form (§9.2): the run commits with O(1)
+timeline updates while each chunk's tag is raised at its closed-form
+completion time.
+
 Symmetric fast path (DESIGN.md §6): schedules whose builder marked them
 ``symmetric`` simulate ONE representative device — waits on a neighbor's
 tagged signal resolve, by translation invariance, to the representative's own
@@ -329,7 +340,8 @@ class _Sim:
         return end
 
     # ------------------------------------------------- chunk runs (§8.3) ----
-    def _chunk_run(self, st: _QueueState, cmd, m: int, ts: float) -> bool:
+    def _chunk_run(self, st: _QueueState, cmd, m: int, ts: float,
+                   tagged: tuple | None = None) -> bool:
         """Closed-form schedule of ``m`` identical chunk commands.
 
         The per-chunk recurrence (issue clock advances ``b2b_issue``, the
@@ -340,8 +352,16 @@ class _Sim:
         state touched) when the run is issue-bound, engine-bound relative to
         a wire, multi-hop, or carries fused flags — the caller then executes
         it per-chunk, which is always correct.
+
+        ``tagged`` extends the closed form to *per-chunk-signaled* runs
+        (DESIGN.md §9.2): ``m`` commands equivalent modulo their
+        ``fused_tag`` (chunk-indexed semaphores, ``commands.chunked_copies``).
+        The timeline commits are identical to the untagged run — a fused tag
+        never gates the engine front end — and each chunk's semaphore is
+        raised at its closed-form completion time, waking chunk-granularity
+        waiters exactly as the per-chunk loop would.
         """
-        if cmd.fused_tag is not None or cmd.fused_signal:
+        if tagged is None and (cmd.fused_tag is not None or cmd.fused_signal):
             return False
         size = cmd.size
         wires: list[tuple[_Timeline, float]] = []
@@ -378,6 +398,22 @@ class _Sim:
         engine.occupy(s1, sm + ts)
         for tl, a, z in commits:
             tl.occupy(a, z)
+        if tagged is not None:
+            # Raise each chunk's semaphore at its completion time (§9.2):
+            # engine-stream end and every wire's landing end are affine in
+            # the chunk index under the back-to-back conditions above.
+            w1s = [(w1, tw) for (tl, tw), (_, w1, _) in zip(wires, commits)]
+            fs = self.calib.fused_sync
+            tags = self.tags
+            for i, tc in enumerate(tagged):
+                e_i = s1 + (i + 1) * ts
+                for w1, tw in w1s:
+                    we = w1 + (i + 1) * tw
+                    if we > e_i:
+                        e_i = we
+                rt = self.resolve(tc.fused_tag)
+                tags[rt] = e_i + fs
+                self.raised.append(rt)
         st.issue = tail
         if end > st.last_end:
             st.last_end = end
@@ -406,6 +442,24 @@ class _Sim:
                 while j < n and cmds[j] is cmd:
                     j += 1
                 size = cmd.size
+                tagged = None
+                if j == idx + 1 and cmd.fused_tag is not None \
+                        and not cmd.fused_signal:
+                    # Per-chunk-signaled chunks (chunked_copies) are distinct
+                    # instances equivalent modulo their chunk tag: detect the
+                    # run by field equality and try the tagged closed form
+                    # (§9.2).
+                    while j < n:
+                        c2 = cmds[j]
+                        if (c2.kind is kind and c2.src == cmd.src
+                                and c2.dsts == cmd.dsts and c2.size == size
+                                and c2.fused_tag is not None
+                                and not c2.fused_signal):
+                            j += 1
+                        else:
+                            break
+                    if j > idx + 1:
+                        tagged = cmds[idx + 1:j]
                 stream_bytes = size if kind is CmdKind.COPY else 2 * size
                 ts = stream_bytes / c.engine_bw
                 engine = st.engine_tl
@@ -434,7 +488,7 @@ class _Sim:
                     self.fused_signals[q.device].append(end + c.fused_sync)
                 idx += 1
                 m = j - idx
-                if m > 0 and self._chunk_run(st, cmd, m, ts):
+                if m > 0 and self._chunk_run(st, cmd, m, ts, tagged):
                     idx = j
             elif kind is CmdKind.WAIT:
                 rt = self.resolve(cmd.tag)

@@ -1,0 +1,109 @@
+"""Dispatch-table cache fingerprinting (backend.py): stale tables must MISS.
+
+The on-disk/bundled dispatch tables are keyed by a fingerprint of the cache
+version, the full topology repr (calibration included) and the sweep inputs.
+The v4 bump (pipelined ``pipe_`` sweeps, DESIGN.md §9) invalidates every
+v3/v2 table — those sweeps never saw the pipelined candidates, so serving
+them silently would pin the backend to pre-§9 policies.  These tests pin the
+fingerprint-mismatch path: stale entries are ignored, current entries round
+trip, and any calibration change alone also misses.
+"""
+import hashlib
+import json
+
+from repro.core import backend
+from repro.core.dma.dispatch import DispatchEntry
+from repro.core.dma.topology import Calibration, tpu_v5e_pod
+
+
+def _key_for_version(topo, sizes, version: int) -> str:
+    """The cache key an OLDER backend version would have written."""
+    return hashlib.sha1(
+        f"v{version}|{topo!r}|{sizes!r}|{backend._SWEEP_CHUNKS!r}"
+        .encode()).hexdigest()[:16]
+
+
+def _isolate(tmp_path, monkeypatch, bundled: dict | None = None):
+    """Point the cache dir and the bundled package copy into tmp_path."""
+    monkeypatch.setattr(backend, "_TABLE_CACHE_DIR", str(tmp_path / "cache"))
+    bundled_path = tmp_path / "bundled.json"
+    if bundled is not None:
+        bundled_path.write_text(json.dumps(bundled))
+    monkeypatch.setattr(backend, "_BUNDLED_TABLES", str(bundled_path))
+
+
+_POISON = [[{"lo": 1024, "hi": None, "variant": "STALE", "chunk": None}]] * 2
+
+
+def test_cache_version_is_v4():
+    """The pipelined sweep (DESIGN.md §9) requires the v4 fingerprint."""
+    assert backend._TABLE_CACHE_VERSION == 4
+
+
+def test_stale_versioned_disk_tables_rejected(tmp_path, monkeypatch):
+    """v2/v3 disk entries (pre-pipelined sweeps) must never be served: their
+    file names carry the old fingerprint, so the v4 lookup misses."""
+    _isolate(tmp_path, monkeypatch)
+    topo = tpu_v5e_pod(16)
+    sizes = backend._SWEEP_SIZES
+    (tmp_path / "cache").mkdir()
+    for old in (2, 3):
+        stale = _key_for_version(topo, sizes, old)
+        assert stale != backend._table_key(topo, sizes)
+        path = tmp_path / "cache" / f"tables_{topo.name}_{stale}.json"
+        path.write_text(json.dumps(_POISON))
+    assert backend._load_table_cache(topo, sizes) is None
+
+
+def test_stale_versioned_bundled_tables_rejected(tmp_path, monkeypatch):
+    """Same for the bundled package copy: old-fingerprint keys miss."""
+    topo = tpu_v5e_pod(16)
+    sizes = backend._SWEEP_SIZES
+    _isolate(tmp_path, monkeypatch, bundled={
+        _key_for_version(topo, sizes, v): _POISON for v in (2, 3)})
+    assert backend._load_table_cache(topo, sizes) is None
+
+
+def test_current_fingerprint_round_trips(tmp_path, monkeypatch):
+    """The miss above is the fingerprint, not a broken store: tables written
+    under the CURRENT key are served back verbatim."""
+    _isolate(tmp_path, monkeypatch)
+    topo = tpu_v5e_pod(16)
+    sizes = backend._SWEEP_SIZES
+    tables = ((DispatchEntry(1024, None, "prelaunch_pipe_bidir_ring", None),),
+              (DispatchEntry(1024, None, "prelaunch_swap", 1024 * 1024),))
+    backend._store_table_cache(topo, sizes, tables)
+    assert backend._load_table_cache(topo, sizes) == tables
+
+
+def test_calibration_change_alone_misses(tmp_path, monkeypatch):
+    """topo!r embeds the Calibration: a recalibration misses without any
+    version bump."""
+    _isolate(tmp_path, monkeypatch)
+    topo = tpu_v5e_pod(16)
+    sizes = backend._SWEEP_SIZES
+    tables = ((DispatchEntry(1024, None, "ring", None),),
+              (DispatchEntry(1024, None, "swap", None),))
+    backend._store_table_cache(topo, sizes, tables)
+    recal = tpu_v5e_pod(16, calib=Calibration(control=1e-9))
+    assert recal.name == topo.name          # same file-name stem...
+    assert backend._load_table_cache(recal, sizes) is None  # ...different key
+
+
+def test_bundled_tables_carry_current_fingerprint_and_pipe_winners():
+    """The shipped _dispatch_tables.json was regenerated for v4: its key
+    matches the current fingerprint and the AG table contains a pipelined
+    winner (the sweep really offered the §9 candidates)."""
+    with open(backend._BUNDLED_TABLES) as f:
+        bundled = json.load(f)
+    topo = tpu_v5e_pod(16)
+    key = backend._table_key(topo, backend._SWEEP_SIZES)
+    assert key in bundled
+    ag, aa = backend._parse_tables(bundled[key])
+    assert any("pipe_" in e.variant for e in ag)
+    # every winner must strip to a known JAX implementation
+    strip = backend.CommBackend()._strip
+    for e in ag:
+        assert strip(e.variant) in backend._AG_IMPL, e.variant
+    for e in aa:
+        assert strip(e.variant) in backend._AA_IMPL, e.variant

@@ -1,4 +1,17 @@
-"""Hypothesis property tests on system invariants."""
+"""Hypothesis property tests on system invariants.
+
+The DMA strategies sample the FULL variant space: the six pre-PR-2 baseline
+variants, the neighbor-ring renderings, the ``opt_`` optimized command
+streams (DESIGN.md §7), chunk granularities (§8.1) and the per-chunk-signaled
+pipelined rings (§9).  Invariants: latency positivity, traffic conservation,
+per-link byte invariance under chunking/pipelining, monotone completion in
+chunk count for non-pipelined streams, and per-chunk beating final-chunk-only
+signaling for the pipelined rings.
+
+CI runs this file un-skipped (the fast job installs ``hypothesis`` and a
+guard step fails if collection comes back empty); locally the module skips
+when hypothesis is unavailable.
+"""
 import numpy as np
 import pytest
 
@@ -9,18 +22,47 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.dma import (allgather_schedule, alltoall_schedule, kv_fetch_schedule,
-                            mi300x_platform, simulate)
+                            link_traffic, mi300x_platform, simulate, tpu_v5e_pod,
+                            variant_latency)
+from repro.core.dma.claims import pipe_vs_final_chunk_ratio
 from repro.data.pipeline import DataConfig, synth_batch
 from repro.models.layers import apply_rotary, rope_angles
 from repro.serve.kvcache import blocks_to_kv, kv_to_blocks
 from repro.train.checkpoint import restore_checkpoint, save_checkpoint
 
+KB, MB = 1024, 1024 * 1024
 TOPO = mi300x_platform()
+TPU = tpu_v5e_pod(16)
 
 sizes = st.integers(min_value=1024, max_value=1 << 32)
-variants_ag = st.sampled_from(["pcpy", "bcst", "b2b", "prelaunch_pcpy",
-                               "prelaunch_bcst", "prelaunch_b2b"])
-variants_aa = st.sampled_from(["pcpy", "swap", "b2b", "prelaunch_swap"])
+# The full all-gather variant space: baseline, ring renderings, optimized
+# command streams (DESIGN.md §7) and the pipelined rings (§9).  The ring /
+# pipe variants are legal on MI300X by explicit request — the simulator
+# routes them over the fully-connected fabric.
+variants_ag = st.sampled_from([
+    "pcpy", "bcst", "b2b", "prelaunch_pcpy", "prelaunch_bcst", "prelaunch_b2b",
+    "ring", "bidir_ring",
+    "opt_pcpy", "opt_bcst", "opt_b2b", "opt_prelaunch_b2b",
+    "opt_ring", "opt_bidir_ring",
+    "pipe_b2b", "pipe_bidir_ring", "opt_pipe_b2b", "opt_pipe_bidir_ring",
+    "prelaunch_pipe_b2b", "opt_prelaunch_pipe_bidir_ring",
+])
+variants_aa = st.sampled_from([
+    "pcpy", "swap", "b2b", "prelaunch_swap", "ring",
+    "opt_pcpy", "opt_swap", "opt_b2b", "opt_ring",
+    "pipe_b2b", "opt_pipe_b2b",
+])
+# Direct (non-forwarding) all-to-all variants: each ordered pair is served by
+# exactly one command — the rotation rings forward, so they are checked via
+# per-link byte invariance instead.
+variants_aa_direct = st.sampled_from([
+    "pcpy", "swap", "b2b", "prelaunch_swap", "opt_pcpy", "opt_swap", "opt_b2b",
+])
+chunk_grains = st.sampled_from([0, 256 * KB, 1 * MB, 4 * MB])
+pipe_depths = st.sampled_from([1, 2, 4, 8])
+
+
+_link_traffic = link_traffic
 
 
 @settings(max_examples=40, deadline=None)
@@ -32,35 +74,98 @@ def test_allgather_positive_finite_latency(size, v):
         assert b.control >= 0 and b.schedule >= 0 and b.copy >= 0 and b.sync >= 0
 
 
-@settings(max_examples=40, deadline=None)
-@given(size=sizes, v=variants_aa)
-def test_alltoall_traffic_conserved(size, v):
-    """Every ordered (src, dst) pair is served exactly once, any variant."""
-    sched = alltoall_schedule(TOPO, size, v)
-    pairs = set()
-    for q in sched.queues:
-        for c in q.data_commands:
-            src = c.src
-            for dst in c.dsts:
-                if c.kind.value == "swap":
-                    assert (src, dst) not in pairs and (dst, src) not in pairs
-                    pairs.add((src, dst))
-                    pairs.add((dst, src))
-                else:
-                    assert (src, dst) not in pairs
-                    pairs.add((src, dst))
-    n = TOPO.n_devices
-    assert len(pairs) == n * (n - 1)
+@settings(max_examples=25, deadline=None)
+@given(size=st.integers(min_value=1024, max_value=1 << 28), v=variants_aa)
+def test_alltoall_positive_finite_latency(size, v):
+    r = simulate(alltoall_schedule(TOPO, size, v), TOPO)
+    assert 0 < r.latency < 10.0
 
 
 @settings(max_examples=30, deadline=None)
-@given(size=st.integers(min_value=1024, max_value=1 << 28), v=variants_ag)
+@given(size=st.integers(min_value=1024, max_value=1 << 28),
+       v=st.sampled_from(["pcpy", "bcst", "b2b", "ring", "bidir_ring",
+                          "pipe_b2b", "pipe_bidir_ring"]))
 def test_prelaunch_never_slower(size, v):
-    if v.startswith("prelaunch"):
-        return
+    """Arming queues ahead of time (§4.5) moves control/schedule off the
+    critical path — it may never pessimize, pipelined variants included."""
     base = simulate(allgather_schedule(TOPO, size, v), TOPO).latency
     pre = simulate(allgather_schedule(TOPO, size, f"prelaunch_{v}"), TOPO).latency
     assert pre <= base
+
+
+@settings(max_examples=30, deadline=None)
+@given(size=sizes, v=variants_ag)
+def test_allgather_delivers_n_minus_one_shards(size, v):
+    """Conservation: every device receives exactly n-1 shards, whatever the
+    variant/route/chunking (rings forward shard-sized payloads, so inbound
+    bytes per device are (n-1) * shard for every all-gather rendering)."""
+    sched = allgather_schedule(TOPO, size, v)
+    n = TOPO.n_devices
+    shard = max(1, size // n)
+    inbound = {d: 0 for d in range(n)}
+    for (_, dst), nbytes in _link_traffic(sched).items():
+        inbound[dst] += nbytes
+    assert inbound == {d: (n - 1) * shard for d in range(n)}
+
+
+@settings(max_examples=40, deadline=None)
+@given(size=sizes, v=variants_aa_direct)
+def test_alltoall_traffic_conserved(size, v):
+    """Every ordered (src, dst) pair receives exactly one shard, any direct
+    variant — stated in bytes so it holds under chunking (§8.1), which
+    splits a pair's shard across many commands."""
+    sched = alltoall_schedule(TOPO, size, v)
+    traffic = _link_traffic(sched)
+    n = TOPO.n_devices
+    shard = max(1, size // n)
+    assert set(traffic) == {(a, b) for a in range(n) for b in range(n) if a != b}
+    assert set(traffic.values()) == {shard}
+
+
+@settings(max_examples=30, deadline=None)
+@given(size=st.integers(min_value=1 * MB, max_value=1 << 31), v=variants_ag,
+       grain_a=chunk_grains, grain_b=chunk_grains)
+def test_per_link_bytes_invariant_under_chunking(size, v, grain_a, grain_b):
+    """Chunk granularity (and pipeline chunking, §9) never changes WHAT moves:
+    per-(src, dst) byte totals are identical at any max_chunk_bytes."""
+    a = _link_traffic(allgather_schedule(TOPO, size, v, max_chunk_bytes=grain_a))
+    b = _link_traffic(allgather_schedule(TOPO, size, v, max_chunk_bytes=grain_b))
+    assert a == b
+
+
+@settings(max_examples=20, deadline=None)
+@given(size=st.integers(min_value=1 * MB, max_value=1 << 30), v=variants_ag,
+       depth_a=pipe_depths, depth_b=pipe_depths)
+def test_per_link_bytes_invariant_under_pipe_depth(size, v, depth_a, depth_b):
+    a = _link_traffic(allgather_schedule(TOPO, size, v, pipe_depth=depth_a))
+    b = _link_traffic(allgather_schedule(TOPO, size, v, pipe_depth=depth_b))
+    assert a == b
+
+
+@settings(max_examples=15, deadline=None)
+@given(size=st.sampled_from([64 * MB, 256 * MB, 1 << 30, 1 << 31]),
+       v=st.sampled_from(["pcpy", "b2b", "bcst", "prelaunch_pcpy"]))
+def test_completion_monotone_in_chunk_count(size, v):
+    """Non-pipelined streams: finer chunks (more commands) never complete
+    sooner — per-chunk packet/issue costs only add.  (Pipelined streams are
+    exempt by design: chunk count trades fill latency against per-chunk
+    cost, DESIGN.md §9.1; opt_ streams are exempt because the §7.2 slot
+    gate flips eligibility across the chunk-size boundary.)"""
+    prev = 0.0
+    for grain in (0, 16 * MB, 4 * MB, 1 * MB, 256 * KB):
+        lat = variant_latency(TOPO, "all_gather", size, v, grain)
+        assert lat >= prev * (1 - 1e-9), grain
+        prev = lat
+
+
+@settings(max_examples=12, deadline=None)
+@given(size=st.sampled_from([512 * KB, 1 * MB, 2 * MB, 4 * MB, 8 * MB]),
+       depth=st.sampled_from([2, 4]))
+def test_pipe_beats_final_chunk_only_signaling(size, depth):
+    """§9 acceptance invariant on the TPU torus: at >= 2 chunks, per-chunk
+    signaling strictly beats final-chunk-only signaling of the same
+    pipelined schedule across the mid-size band."""
+    assert pipe_vs_final_chunk_ratio(TPU, size, depth) > 1.0
 
 
 @settings(max_examples=25, deadline=None)

@@ -1,15 +1,21 @@
 """Event-simulator core tests: contended resources, torus routing,
 cross-device waits, the symmetric fast path, dispatch derivation, the
-optimized command streams (DESIGN.md §7), and chunked transfers plus the
-hot-path overhaul (DESIGN.md §8)."""
+optimized command streams (DESIGN.md §7), chunked transfers plus the
+hot-path overhaul (DESIGN.md §8), and the per-chunk-signaled pipelined
+rings (DESIGN.md §9)."""
 import pytest
 
 from repro.core.dma import (
     allgather_schedule, alltoall_schedule, batch_commands, chunk_schedule,
     commands as cmd, derive_dispatch, fuse_signals, mi300x_platform, optimize,
-    simulate, split_queues, tpu_v5e_pod, variant_latency,
+    pipelined_variants, simulate, split_queues, tpu_v5e_pod, variant_latency,
 )
-from repro.core.dma.claims import optimized_power_claims, optimized_stream_claims
+from repro.core.dma.claims import (
+    optimized_power_claims,
+    optimized_stream_claims,
+    pipe_vs_final_chunk_ratio,
+    pipelined_stream_claims,
+)
 from repro.core.dma.commands import CmdKind, EngineQueue, Schedule
 from repro.core.dma.optimizations import OptimizationConfig
 
@@ -409,17 +415,9 @@ class TestOptimizedStreams:
         assert bases == ["b2b", "bcst", "pcpy"]
 
 
-def _link_traffic(sched):
-    """(src, dst) -> total bytes over all data commands (chunk-invariant)."""
-    out = {}
-    for q in sched.queues:
-        for c in q.data_commands:
-            for dst in c.dsts:
-                out[(c.src, dst)] = out.get((c.src, dst), 0) + c.size
-            if c.kind is CmdKind.SWAP:
-                key = (c.dsts[0], c.src)
-                out[key] = out.get(key, 0) + c.size
-    return out
+# Schedule-level traffic accounting now lives in the command layer
+# (chunk/pipe-invariant by construction); keep the short local name.
+_link_traffic = cmd.link_traffic
 
 
 class TestChunking:
@@ -547,6 +545,193 @@ class TestChunking:
         assert all(e.chunk in (None, 1 * MB) for e in entries)
         # the calibrated default wins when finer chunks only add overhead
         assert entries[0].chunk is None
+
+
+class TestPipelinedRings:
+    """Per-chunk signaling + pipelined ring collectives (DESIGN.md §9)."""
+
+    def test_pipe_beats_final_chunk_signaling_monotone(self):
+        """THE §9 acceptance claim: per-chunk signaling beats final-chunk-only
+        signaling of the same pipe_b2b schedule at >= 2 chunks, with the
+        improvement monotone in chunk count up to the sweep ceiling
+        (PIPE_DEPTH = 4) and still > 1 one doubling past it."""
+        for size in (512 * KB, 1 * MB):
+            f = {d: pipe_vs_final_chunk_ratio(TPU, size, d) for d in (1, 2, 4, 8)}
+            assert f[1] == pytest.approx(1.0, abs=1e-9), size   # structural
+            assert f[2] > 1.05, (size, f)                       # beats at 2 chunks
+            assert f[4] > f[2], (size, f)                       # monotone to ceiling
+            assert f[8] > 1.0, (size, f)                        # saturates, not flips
+
+    def test_pipe_beats_fco_midband(self):
+        """>= 2 chunks wins across the whole §9 mid-size band on the torus."""
+        for size in (2 * MB, 4 * MB, 8 * MB, 32 * MB):
+            assert pipe_vs_final_chunk_ratio(TPU, size, 2) > 1.0, size
+
+    def test_pipelined_claim_bands(self):
+        bad = [c for c in pipelined_stream_claims() if not c.ok]
+        assert not bad, [
+            f"{c.name}: {c.model_value} not in [{c.lo},{c.hi}]" for c in bad]
+
+    def test_pipe_traffic_matches_ring(self):
+        """Pipelining never changes WHAT moves: per-(src, dst) byte totals of
+        pipe_b2b equal the chained ring's, at every pipeline depth."""
+        ring = _link_traffic(allgather_schedule(TPU, 64 * MB, "ring"))
+        for depth in (1, 2, 4, 8):
+            pipe = _link_traffic(allgather_schedule(TPU, 64 * MB, "pipe_b2b",
+                                                    pipe_depth=depth))
+            assert pipe == ring, depth
+        aa_ring = _link_traffic(alltoall_schedule(TPU, 64 * MB, "ring"))
+        aa_pipe = _link_traffic(alltoall_schedule(TPU, 64 * MB, "pipe_b2b"))
+        assert aa_pipe == aa_ring
+
+    def test_pipe_bidir_traffic_matches_bidir_ring(self):
+        assert _link_traffic(allgather_schedule(TPU, 64 * MB, "pipe_bidir_ring")) \
+            == _link_traffic(allgather_schedule(TPU, 64 * MB, "bidir_ring"))
+
+    @pytest.mark.parametrize("variant", [
+        "pipe_b2b", "pipe_bidir_ring", "opt_pipe_b2b", "opt_pipe_bidir_ring",
+        "prelaunch_pipe_b2b", "opt_prelaunch_pipe_bidir_ring"])
+    @pytest.mark.parametrize("topo", [MI, TPU], ids=["mi300x", "tpu16"])
+    def test_pipe_symmetric_fast_path_bit_identical(self, topo, variant):
+        """Chain-local engine sharing keeps the pipelined rings
+        translation-invariant (see _pipe_bidir_ag_queues): the one-device
+        fast path must replicate the full simulation exactly."""
+        sched = allgather_schedule(topo, 8 * MB, variant)
+        assert sched.symmetric
+        full = simulate(sched, topo, symmetric=False)
+        fast = simulate(sched, topo, symmetric=True)
+        assert fast.latency == full.latency
+        assert fast.per_device == full.per_device
+
+    def test_pipe_asymmetric_ring_runs_full_sim(self):
+        """On an odd-row torus the snake ring's wraparound is multi-hop:
+        pipe schedules are not symmetric there, and the chunk-granularity
+        waits must still resolve (no deadlock) in the full event loop."""
+        topo = tpu_v5e_pod(15)           # 3x5 grid, odd rows
+        sched = allgather_schedule(topo, 4 * MB, "pipe_b2b")
+        assert not sched.symmetric
+        res = simulate(sched, topo)
+        assert 0 < res.latency < 1.0
+
+    def test_pipe_chunk_waits_serialize_consumer(self):
+        """A consumer waiting on chunk i of a per-chunk-tagged producer
+        starts mid-transfer; waiting on the final chunk starts after the
+        whole transfer.  Pins the §9 semantics at the command level."""
+        size, g = 8 * MB, 1 * MB
+        chunks = cmd.chunked_copies(CmdKind.COPY, 0, (1,), size, g, ("t", 0, 0))
+        assert len(chunks) == 8
+        base = (EngineQueue(0, 0, tuple(chunks) + (cmd.signal(),)),)
+        early = simulate(Schedule("e", base + (EngineQueue(
+            1, 0, (cmd.wait(cmd.chunk_tag(("t", 0, 0), 0)),
+                   cmd.copy(1, 2, size), cmd.signal())),)), MI)
+        late = simulate(Schedule("l", base + (EngineQueue(
+            1, 0, (cmd.wait(cmd.chunk_tag(("t", 0, 0), 7)),
+                   cmd.copy(1, 2, size), cmd.signal())),)), MI)
+        wire = g / (MI.link_bw * MI.calib.dma_link_efficiency)
+        assert late.latency - early.latency == pytest.approx(7 * wire, rel=0.01)
+
+    def test_tagged_chunk_run_closed_form_matches_loop(self):
+        """The §9.2 equivalent-modulo-tag closed form must time (and raise
+        every chunk tag) exactly like the per-chunk loop."""
+        from repro.core.dma import sim as sim_mod
+
+        sched = allgather_schedule(TPU, 32 * MB, "pipe_b2b", pipe_depth=8)
+        fast = simulate(sched, TPU)
+        orig = sim_mod._Sim._chunk_run
+        sim_mod._Sim._chunk_run = lambda *a, **k: False
+        try:
+            slow = simulate(sched, TPU)
+        finally:
+            sim_mod._Sim._chunk_run = orig
+        assert fast.latency == pytest.approx(slow.latency, rel=1e-12)
+        for d in fast.per_device:
+            for ph in ("control", "schedule", "copy", "sync"):
+                assert getattr(fast.per_device[d], ph) == pytest.approx(
+                    getattr(slow.per_device[d], ph), rel=1e-12, abs=1e-15)
+
+    def test_fuse_signals_is_per_chunk(self):
+        """§9 interaction with §7.3: a stream signaling after EVERY chunk
+        fuses each semaphore onto its own chunk — bit-identical to the
+        per-chunk-tagged commands chunked_copies emits directly."""
+        size, g = 8 * MB, 2 * MB
+        tag = ("t", 0, 0)
+        unfused = []
+        for i, c in enumerate(cmd.chunked_copies(CmdKind.COPY, 0, (1,), size, g)):
+            unfused += [c, cmd.signal(cmd.chunk_tag(tag, i))]
+        fused = fuse_signals(Schedule("s", (EngineQueue(0, 0, tuple(unfused)),)))
+        want = cmd.chunked_copies(CmdKind.COPY, 0, (1,), size, g, tag)
+        assert fused.queues[0].commands == want
+
+    def test_opt_pipe_composition(self):
+        """optimize() on a pipe schedule batches every queue, fuses the
+        trailing completion onto the last chunk, and never splits the
+        chunk-ordered queues across SDMA slots."""
+        base = allgather_schedule(TPU, 8 * MB, "pipe_b2b")
+        opt = allgather_schedule(TPU, 8 * MB, "opt_pipe_b2b")
+        assert {q.slot for q in opt.queues} == {0}
+        assert all(q.batch > 1 for q in opt.queues)
+        assert sum(q.n_signals for q in opt.queues) == \
+            sum(q.n_signals for q in base.queues)
+        finals = [q for q in opt.queues
+                  if any(c.fused_signal for c in q.commands)]
+        assert len(finals) == TPU.n_devices     # one fused completion/device
+        assert not any(c.kind is CmdKind.SIGNAL and c.tag is None
+                       for q in opt.queues for c in q.commands)
+
+    def test_pipe_depth_one_equals_final_chunk_only(self):
+        """Depth 1 has one chunk per shard: per-chunk and final-chunk-only
+        signaling build identical schedules."""
+        a = allgather_schedule(TPU, 1 * MB, "pipe_b2b", pipe_depth=1)
+        b = allgather_schedule(TPU, 1 * MB, "pipe_b2b", pipe_depth=1,
+                               per_chunk_signaling=False)
+        assert tuple(q.commands for q in a.queues) == \
+            tuple(q.commands for q in b.queues)
+
+    def test_pipelined_dispatch_candidates(self):
+        """pipe_ variants join the sweep only on neighbor-link topologies."""
+        tpu_vs = pipelined_variants(TPU, "all_gather")
+        assert "pipe_b2b" in tpu_vs and "opt_prelaunch_pipe_bidir_ring" in tpu_vs
+        assert pipelined_variants(MI, "all_gather") == []   # fully connected
+        entries = derive_dispatch(TPU, "all_gather",
+                                  [2 ** i for i in range(10, 31)],
+                                  allow_pipelined=True)
+        assert any("pipe_" in e.variant for e in entries)
+
+
+class TestHostTimelineIndependence:
+    """Pins the ROADMAP 'multi-device host contention' assumption AS IS:
+    today every device owns a private host-CPU timeline (``host:<dev>``), so
+    control phases of different devices fully overlap.  A single-process
+    multi-GPU launcher would in reality serialize them on one host CPU —
+    when that shared-host model lands, these are the assertions that must
+    flip (the smoke test makes the change observable, not accidental)."""
+
+    def _queues(self, n_dev: int):
+        return tuple(
+            EngineQueue(d, 0, tuple(cmd.copy(d, (d + 1) % n_dev, 64 * KB)
+                                    for _ in range(16)) + (cmd.signal(),))
+            for d in range(n_dev))
+
+    def test_control_phases_overlap_across_devices(self):
+        res = simulate(Schedule("hosts", self._queues(4)), MI)
+        # Each device's host timeline starts at t=0: no cross-device queuing.
+        for d in range(4):
+            assert res.timelines[f"host:{d}"][0][0] == 0.0
+        # All four devices see the same per-device control time (not 4x).
+        ctrl = {res.per_device[d].control for d in range(4)}
+        assert len(ctrl) == 1
+
+    def test_multi_device_latency_equals_single_device(self):
+        """With disjoint links, adding devices leaves per-device timing
+        untouched — host CPUs are modeled per-device, not shared."""
+        multi = simulate(Schedule("hosts", self._queues(4)), MI)
+        solo = simulate(Schedule("solo", self._queues(4)[:1]), MI)
+        assert multi.per_device[0] == solo.per_device[0]
+        assert multi.latency == pytest.approx(solo.latency, rel=1e-12)
+
+    def test_host_events_accumulate_per_device(self):
+        res = simulate(Schedule("hosts", self._queues(4)), MI)
+        assert len({res.host_events[d] for d in range(4)}) == 1
 
 
 class TestDerivedDispatch:
