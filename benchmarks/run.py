@@ -14,7 +14,7 @@ import time
 def main() -> None:
     from . import (calibration, fig01_ag_gap, fig07_copy_breakdown, fig13_allgather,
                    fig14_alltoall, fig15_power, fig16_ttft, fig17_throughput,
-                   tables_dispatch, tpu_collectives)
+                   fig_allreduce, tables_dispatch, tpu_collectives)
 
     benches = [
         ("calibration", calibration),
@@ -22,6 +22,7 @@ def main() -> None:
         ("fig07_copy_breakdown", fig07_copy_breakdown),
         ("fig13_allgather", fig13_allgather),
         ("fig14_alltoall", fig14_alltoall),
+        ("fig_allreduce", fig_allreduce),
         ("fig15_power", fig15_power),
         ("fig16_ttft", fig16_ttft),
         ("fig17_throughput", fig17_throughput),

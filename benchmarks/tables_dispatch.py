@@ -36,15 +36,19 @@ def run(verbose: bool = True):
                 agree += 1
         frac = agree / len(probes)
         cc.check(f"{coll}: derived dispatch agrees with paper table", frac, 1.0, 0.6, 1.0)
-    ag, aa = tpu_dispatch_tables(16)
+    ag, aa, rs, ar = tpu_dispatch_tables(16)
     if verbose:
         print("== TPU v5e re-derived thresholds (used by CommBackend('latte')) ==")
-        for name, t in (("all_gather", ag), ("all_to_all", aa)):
+        for name, t in (("all_gather", ag), ("all_to_all", aa),
+                        ("reduce_scatter", rs), ("all_reduce", ar)):
             for e in t:
                 print(f"  {name}: [{fmt_size(e.lo)}, {fmt_size(e.hi) if e.hi else 'inf'}) "
                       f"-> {e.variant}")
     cc.check("TPU tables keep b2b for the smallest sizes",
              float(ag[0].variant.endswith("b2b") and aa[0].variant.endswith("b2b")), 1, 1, 1)
+    cc.check("TPU reduce tables carry a pipelined winner (DESIGN.md §10)",
+             float(any("pipe_" in e.variant for e in rs)
+                   and any("pipe_" in e.variant for e in ar)), 1, 1, 1)
     return cc, None
 
 

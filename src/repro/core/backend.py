@@ -33,7 +33,12 @@ MB = 1024 * 1024
 # per-chunk-signaled ``pipe_`` family (allow_pipelined), so v3 tables that
 # never saw those candidates must miss and re-derive (regression-tested in
 # tests/test_dispatch_cache.py).
-_TABLE_CACHE_VERSION = 4
+# v5: reduce collectives (DESIGN.md §10) — bundled tables grow reduce_scatter
+# and all_reduce sweeps (allow_reduce) and the reduce calibration
+# (Calibration.reduce_setup / reduce_bytes_per_s, embedded via topo!r) joins
+# the fingerprint; v4 tables carry neither, so they must miss and re-derive
+# (regression-tested in tests/test_dispatch_cache.py).
+_TABLE_CACHE_VERSION = 5
 # The size sweep behind every cached/bundled table; part of the cache key.
 _SWEEP_SIZES = [2 ** i for i in range(10, 31)]
 # Chunk granularities the table sweep offers the argmin (DESIGN.md §8.1):
@@ -127,16 +132,34 @@ _AA_IMPL = {
     "ring": coll.pairwise_all_to_all,
     "pipe_b2b": coll.pairwise_all_to_all,
 }
+# Reduce winners (DESIGN.md §10): every ring reduce variant — including the
+# bidir and per-chunk-pipelined renderings — lowers to the ppermute ring
+# reduce-scatter (XLA fuses the per-step accumulate into the loop); the
+# all-reduce composition lowers to its RS + ring-AG decomposition.
+_RS_IMPL = {
+    "ring_rs": coll.ring_reduce_scatter,
+    "bidir_ring_rs": coll.ring_reduce_scatter,
+    "pipe_ring_rs": coll.ring_reduce_scatter,
+    "pipe_bidir_ring_rs": coll.ring_reduce_scatter,
+}
+_AR_IMPL = {
+    "ring_rs": coll.ring_all_reduce,
+    "bidir_ring_rs": coll.ring_all_reduce,
+    "pipe_ring_rs": coll.ring_all_reduce,
+    "pipe_bidir_ring_rs": coll.ring_all_reduce,
+}
 
 
 @functools.lru_cache(maxsize=8)
 def tpu_dispatch_tables(n_devices: int = 16):
     """Re-derive Tables 2/3 for the TPU torus from the timing model
-    (DESIGN.md §4): the event simulator routes every variant over real ICI
-    neighbor links, so the argmin picks between direct multi-hop one-shot
-    schedules and the ring/bidir-ring renderings with true per-step
-    dependencies.  The sweep is memoized in-process (dispatch.derive_dispatch)
-    and on disk (~1.5s per fresh process otherwise)."""
+    (DESIGN.md §4), plus the reduce_scatter/all_reduce tables (§10): the
+    event simulator routes every variant over real ICI neighbor links, so
+    the argmin picks between direct multi-hop one-shot schedules and the
+    ring/bidir-ring renderings with true per-step dependencies.  Returns
+    ``(ag, aa, rs, ar)`` entry tuples.  The sweep is memoized in-process
+    (dispatch.derive_dispatch) and on disk (seconds per fresh process
+    otherwise)."""
     topo = tpu_v5e_pod(n_devices)
     sizes = _SWEEP_SIZES
     cached = _load_table_cache(topo, sizes)
@@ -146,8 +169,14 @@ def tpu_dispatch_tables(n_devices: int = 16):
                                chunk_sizes=_SWEEP_CHUNKS))
     aa = tuple(derive_dispatch(topo, "all_to_all", sizes, allow_pipelined=True,
                                chunk_sizes=_SWEEP_CHUNKS))
-    _store_table_cache(topo, sizes, (ag, aa))
-    return ag, aa
+    rs = tuple(derive_dispatch(topo, "reduce_scatter", sizes,
+                               allow_pipelined=True, allow_reduce=True,
+                               chunk_sizes=_SWEEP_CHUNKS))
+    ar = tuple(derive_dispatch(topo, "all_reduce", sizes,
+                               allow_pipelined=True, allow_reduce=True,
+                               chunk_sizes=_SWEEP_CHUNKS))
+    _store_table_cache(topo, sizes, (ag, aa, rs, ar))
+    return ag, aa, rs, ar
 
 
 def _pick(entries, size: int) -> str:
@@ -171,7 +200,7 @@ class CommBackend:
         if self.kind == "reference":
             return coll.reference_all_gather(x, axis_name)
         size = x.size * x.dtype.itemsize * self.axis_devices
-        ag, _ = tpu_dispatch_tables(self.axis_devices)
+        ag = tpu_dispatch_tables(self.axis_devices)[0]
         variant = self._strip(_pick(ag, size))
         return _AG_IMPL.get(variant, coll.reference_all_gather)(x, axis_name)
 
@@ -180,9 +209,29 @@ class CommBackend:
         if self.kind == "reference":
             return coll.reference_all_to_all(x, axis_name)
         size = x.size * x.dtype.itemsize
-        _, aa = tpu_dispatch_tables(self.axis_devices)
+        aa = tpu_dispatch_tables(self.axis_devices)[1]
         variant = self._strip(_pick(aa, size))
         return _AA_IMPL.get(variant, coll.reference_all_to_all)(x, axis_name)
+
+    def reduce_scatter(self, x, axis_name: str):
+        """Called inside shard_map with x: [n, ...] addend chunks; returns
+        this device's reduced chunk (DESIGN.md §10)."""
+        if self.kind == "reference":
+            return coll.reference_reduce_scatter(x, axis_name)
+        size = x.size * x.dtype.itemsize
+        rs = tpu_dispatch_tables(self.axis_devices)[2]
+        variant = self._strip(_pick(rs, size))
+        return _RS_IMPL.get(variant, coll.reference_reduce_scatter)(x, axis_name)
+
+    def all_reduce(self, x, axis_name: str):
+        """Called inside shard_map with x: [n, ...] chunks; returns the
+        elementwise sum across devices (DESIGN.md §10)."""
+        if self.kind == "reference":
+            return coll.reference_all_reduce(x, axis_name)
+        size = x.size * x.dtype.itemsize
+        ar = tpu_dispatch_tables(self.axis_devices)[3]
+        variant = self._strip(_pick(ar, size))
+        return _AR_IMPL.get(variant, coll.reference_all_reduce)(x, axis_name)
 
     def kv_fetch_plan(self, n_blocks: int, block_bytes: int) -> dict:
         """How the serving engine should fetch dispersed KV blocks (§5.3).
@@ -215,8 +264,15 @@ def regenerate_bundled_tables(device_counts=(16,)) -> str:
                                    chunk_sizes=_SWEEP_CHUNKS))
         aa = tuple(derive_dispatch(topo, "all_to_all", sizes, allow_pipelined=True,
                                    chunk_sizes=_SWEEP_CHUNKS))
-        _store_table_cache(topo, sizes, (ag, aa))
-        out[_table_key(topo, sizes)] = _serialize_tables((ag, aa))
+        rs = tuple(derive_dispatch(topo, "reduce_scatter", sizes,
+                                   allow_pipelined=True, allow_reduce=True,
+                                   chunk_sizes=_SWEEP_CHUNKS))
+        ar = tuple(derive_dispatch(topo, "all_reduce", sizes,
+                                   allow_pipelined=True, allow_reduce=True,
+                                   chunk_sizes=_SWEEP_CHUNKS))
+        tables = (ag, aa, rs, ar)
+        _store_table_cache(topo, sizes, tables)
+        out[_table_key(topo, sizes)] = _serialize_tables(tables)
     with open(_BUNDLED_TABLES, "w") as f:
         json.dump(out, f, indent=1)
     return _BUNDLED_TABLES

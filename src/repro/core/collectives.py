@@ -92,3 +92,39 @@ def reference_all_gather(x: jax.Array, axis_name: str) -> jax.Array:
 
 def reference_all_to_all(x: jax.Array, axis_name: str) -> jax.Array:
     return jax.lax.all_to_all(x, axis_name, split_axis=0, concat_axis=0, tiled=False)
+
+
+def ring_reduce_scatter(x: jax.Array, axis_name: str) -> jax.Array:
+    """Ring reduce-scatter (DESIGN.md §10).  x: [n, ...] per-device addend
+    chunks -> this device's fully reduced chunk (``sum_e x_e[idx]``).
+
+    The partial destined for device *o* starts at its successor ``o+1``,
+    travels the ring forward for n-1 hops, and each visited device folds
+    in its own contribution — at step *r* device *i* is holding (and
+    sending) the partial destined for ``(i - r - 1) % n``.  This is the
+    ppermute rendering of the ``ring_rs`` DMA schedule.
+    """
+    n = axis_size(axis_name)
+    idx = jax.lax.axis_index(axis_name)
+    perm = [(i, (i + 1) % n) for i in range(n)]
+    acc = jnp.take(x, jnp.mod(idx - 1, n), axis=0)
+    for r in range(n - 1):
+        recv = jax.lax.ppermute(acc, axis_name, perm)
+        acc = recv + jnp.take(x, jnp.mod(idx - r - 2, n), axis=0)
+    return acc
+
+
+def reference_reduce_scatter(x: jax.Array, axis_name: str) -> jax.Array:
+    """XLA analogue: full psum, then keep this device's chunk."""
+    return jnp.take(jax.lax.psum(x, axis_name),
+                    jax.lax.axis_index(axis_name), axis=0)
+
+
+def ring_all_reduce(x: jax.Array, axis_name: str) -> jax.Array:
+    """All-reduce as ring reduce-scatter + ring all-gather (DESIGN.md §10).
+    x: [n, ...] chunks -> [n, ...] with out[j] = ``sum_e x_e[j]``."""
+    return ring_all_gather(ring_reduce_scatter(x, axis_name), axis_name)
+
+
+def reference_all_reduce(x: jax.Array, axis_name: str) -> jax.Array:
+    return jax.lax.psum(x, axis_name)

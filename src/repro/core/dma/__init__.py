@@ -12,15 +12,21 @@ from .commands import (
     chunk_sizes,
     chunk_tag,
     chunked_copies,
+    chunked_reduces,
     link_traffic,
+    reduce_work,
 )
 from .collectives import (
     PIPE_DEPTH,
+    RS_VARIANTS,
     allgather_schedule,
+    allreduce_schedule,
     alltoall_schedule,
     kv_fetch_schedule,
+    reduce_scatter_schedule,
 )
 from .dispatch import (
+    COLLECTIVE_BUILDERS,
     PAPER_AA_DISPATCH,
     PAPER_AG_DISPATCH,
     best_variant_for,
@@ -30,6 +36,7 @@ from .dispatch import (
     paper_dispatch,
     pick_variant,
     pipelined_variants,
+    reduce_variants,
     variant_latency,
 )
 from .engine import PhaseBreakdown, SimResult, simulate, single_copy_breakdown
@@ -57,11 +64,14 @@ from .topology import (
 __all__ = [
     "commands", "CmdKind", "Command", "EngineQueue", "Schedule",
     "chunk_command", "chunk_schedule", "chunk_sizes", "chunk_tag",
-    "chunked_copies", "link_traffic",
-    "PIPE_DEPTH", "allgather_schedule", "alltoall_schedule", "kv_fetch_schedule",
-    "PAPER_AA_DISPATCH", "PAPER_AG_DISPATCH", "best_variant_for",
+    "chunked_copies", "chunked_reduces", "link_traffic", "reduce_work",
+    "PIPE_DEPTH", "RS_VARIANTS", "allgather_schedule", "allreduce_schedule",
+    "alltoall_schedule", "kv_fetch_schedule", "reduce_scatter_schedule",
+    "COLLECTIVE_BUILDERS", "PAPER_AA_DISPATCH", "PAPER_AG_DISPATCH",
+    "best_variant_for",
     "candidate_variants", "derive_dispatch", "optimized_variants",
-    "paper_dispatch", "pick_variant", "pipelined_variants", "variant_latency",
+    "paper_dispatch", "pick_variant", "pipelined_variants",
+    "reduce_variants", "variant_latency",
     "PhaseBreakdown", "SimResult", "simulate", "single_copy_breakdown",
     "OptimizationConfig", "batch_commands", "fuse_signals", "optimize",
     "parse_optimized", "split_queues",

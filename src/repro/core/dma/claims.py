@@ -146,6 +146,7 @@ def evaluate_claims(topo: Topology | None = None) -> list[Claim]:
     claims += optimized_stream_claims(topo)
     claims += optimized_power_claims(topo)
     claims += pipelined_stream_claims()
+    claims += reduce_stream_claims()
     return claims
 
 
@@ -237,6 +238,74 @@ def pipelined_stream_claims(
                   "signaling is ~parity for rotation all-to-all (§9.3)"),
         ]
     return claims
+
+
+def rs_pipe_vs_final_chunk_ratio(topo: Topology, size: int, depth: int,
+                                 variant: str = "pipe_bidir_ring_rs") -> float:
+    """Latency ratio of final-chunk-only over per-chunk signaling for one
+    pipelined reduce-scatter shape (DESIGN.md §10).  Both arms build the
+    SAME queues, chunks and reductions — only the wait/signal granularity
+    differs — so >1 means reducing each chunk as it lands wins.  Depth 1
+    is structurally ≈1."""
+    per_chunk = simulate(
+        C.reduce_scatter_schedule(topo, size, variant, pipe_depth=depth), topo)
+    final_only = simulate(
+        C.reduce_scatter_schedule(topo, size, variant, pipe_depth=depth,
+                                  per_chunk_signaling=False), topo)
+    return final_only.latency / per_chunk.latency
+
+
+def allreduce_decomposition_ratio(topo: Topology, size: int,
+                                  variant: str = "pipe_bidir_ring_rs") -> float:
+    """Sequential RS-then-AG latency over the composed all-reduce
+    (DESIGN.md §10): the gather phase of the composed schedule is armed
+    ahead of time and chained chunk-by-chunk off the terminal reductions,
+    so the ratio is >= 1 — the decomposition never pays for the fusion."""
+    ag_variant = C.AR_AG_VARIANT[variant]
+    ar = simulate(C.allreduce_schedule(topo, size, variant), topo)
+    rs = simulate(C.reduce_scatter_schedule(topo, size, variant), topo)
+    ag = simulate(C.allgather_schedule(topo, size, ag_variant), topo)
+    return (rs.latency + ag.latency) / ar.latency
+
+
+def reduce_stream_claims(
+    mi300x: Topology | None = None,
+    tpu: Topology | None = None,
+) -> list[Claim]:
+    """Claim bands for the reduce collectives (DESIGN.md §10).
+
+    * ``rs_pipe_chunk_signaling_gain`` — per-chunk vs final-chunk-only
+      signaling of the same ``pipe_bidir_ring_rs`` schedule at the
+      sweep-ceiling depth (4 chunks/shard), 1MB on the TPU torus: the
+      consumer reduces (and forwards) chunk *i* the moment it lands
+      instead of waiting for the whole partial — the §10 acceptance claim
+      (>1 at >= 2 chunks is property-tested across the mid band).
+    * ``allreduce_decomposition`` / ``allreduce_decomposition_mi300x`` —
+      sequential RS-then-AG over the composed all-reduce, geomean across
+      the mid-size band on BOTH modeled platforms: composing the phases
+      (armed gather chained per-chunk off the terminal reductions) is
+      never slower than running them back to back, with the gain coming
+      from the gather phase's host work and fill leaving the critical
+      path.
+    """
+    mi300x = mi300x or mi300x_platform()
+    tpu = tpu or tpu_v5e_pod(16)
+    chunk_gain = rs_pipe_vs_final_chunk_ratio(tpu, 1 * MB, depth=4)
+    decomp_tpu = geomean(allreduce_decomposition_ratio(tpu, s)
+                         for s in PIPE_MID_SIZES)
+    decomp_mi = geomean(allreduce_decomposition_ratio(mi300x, s)
+                        for s in PIPE_MID_SIZES)
+    return [
+        Claim("rs_pipe_chunk_signaling_gain", 1.45, chunk_gain, 1.15, 1.75,
+              "pipe_bidir_ring_rs per-chunk vs final-chunk-only signaling, "
+              "depth 4 @1MB, TPU torus (DESIGN.md §10, arXiv:2512.10236)"),
+        Claim("allreduce_decomposition", 1.10, decomp_tpu, 1.0, 1.35,
+              "sequential RS+AG over composed all-reduce, "
+              "pipe_bidir_ring_rs 1-32MB geomean, TPU torus (§10)"),
+        Claim("allreduce_decomposition_mi300x", 1.25, decomp_mi, 1.0, 1.55,
+              "sequential RS+AG over composed all-reduce, "
+              "pipe_bidir_ring_rs 1-32MB geomean, MI300X (§10)"),
+    ]
 
 
 def optimized_power_claims(topo: Topology | None = None) -> list[Claim]:

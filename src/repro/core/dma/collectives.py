@@ -45,20 +45,36 @@ ring steps overlap on distinct engines while the per-link wire floor is
 kept saturated; ``per_chunk_signaling=False`` builds the same queue shape
 with final-chunk-only waits (the control arm of the §9 claims).
 
+Reduce collectives (DESIGN.md §10): :func:`reduce_scatter_schedule` renders
+the ring family with a consumer-side reduction per arrived shard —
+``ring_rs`` / ``bidir_ring_rs`` reduce at transfer granularity, the
+``pipe_ring_rs`` / ``pipe_bidir_ring_rs`` variants reduce each chunk the
+moment it lands and forward the reduced partial while later chunks are
+still in flight (the compute/communication overlap model of
+arXiv:2512.10236).  :func:`allreduce_schedule` composes a reduce-scatter
+with the matching (pipelined) all-gather: each device's terminal reductions
+raise result tags that gate the all-gather's source queue chunk by chunk,
+so the gather phase starts on the first *reduced* chunk instead of the
+whole reduced shard.
+
 Size convention: ``size`` is the collective's *total message size* as in the
 paper's figures (1KB–4GB).  Each device's per-peer shard is ``size / n``.
 """
 from __future__ import annotations
 
+import dataclasses
+
 from . import commands as cmd
-from .commands import (CmdKind, EngineQueue, Schedule, chunk_schedule,
-                       chunk_sizes, chunk_tag, chunked_copies)
+from .commands import (CmdKind, DATA_KINDS, EngineQueue, Schedule,
+                       chunk_schedule, chunk_sizes, chunk_tag, chunked_copies,
+                       chunked_reduces)
 from .optimizations import OptimizationConfig, optimize, parse_optimized
 from .topology import Topology
 
 AG_VARIANTS = ("pcpy", "bcst", "b2b", "ring", "bidir_ring",
                "pipe_b2b", "pipe_bidir_ring")
 AA_VARIANTS = ("pcpy", "swap", "b2b", "ring", "pipe_b2b")
+RS_VARIANTS = ("ring_rs", "bidir_ring_rs", "pipe_ring_rs", "pipe_bidir_ring_rs")
 
 #: Default pipeline depth of the ``pipe_`` variants (DESIGN.md §9): the
 #: minimum number of chunk commands a shard is split into.  Deeper splits
@@ -108,6 +124,16 @@ def _maybe_optimize(sched: Schedule, optimized: bool,
     return optimize(sched, config) if optimized else sched
 
 
+def _bidir_split(n: int) -> tuple[int, int]:
+    """(forward, backward) step split of the ``n - 1`` ring deliveries
+    shared by EVERY bidirectional builder (all-gather and reduce-scatter)
+    and by the all-reduce result-tag gating — these must stay in lockstep,
+    or the gather phase waits on a terminal-reduction tag the reduce phase
+    never raises (``ceil``/``floor`` of ``(n-1)/2``)."""
+    n_fwd = (n - 1 + 1) // 2
+    return n_fwd, (n - 1) - n_fwd
+
+
 def _ring_neighbors(topo: Topology) -> dict[int, tuple[int, int]]:
     """device -> (predecessor, successor) along the topology's ring embedding."""
     order = topo.ring_order()
@@ -149,8 +175,7 @@ def _bidir_ring_ag_queues(topo: Topology, shard: int) -> list[EngineQueue]:
     ``2..n_bwd``) — every device receives exactly ``n - 1`` distinct shards
     (the ``n_bwd``-distance shard arrives from the forward side only)."""
     n = topo.n_devices
-    n_fwd = (n - 1 + 1) // 2
-    n_bwd = (n - 1) - n_fwd
+    n_fwd, n_bwd = _bidir_split(n)
     queues = []
     for d, (pred, succ) in _ring_neighbors(topo).items():
         fwd: list[cmd.Command] = []
@@ -260,8 +285,7 @@ def _pipe_bidir_ag_queues(topo: Topology, shard: int, granularity: int,
     device-symmetric in the full simulation.
     """
     n = topo.n_devices
-    n_fwd = (n - 1 + 1) // 2
-    n_bwd = (n - 1) - n_fwd
+    n_fwd, n_bwd = _bidir_split(n)
     e_fwd = max(1, (topo.n_engines + 1) // 2)
     e_bwd = max(1, topo.n_engines - e_fwd)
     c = len(chunk_sizes(shard, granularity))
@@ -348,6 +372,325 @@ def _pipe_aa_queues(topo: Topology, shard: int, depth: int, mcb: int,
                 cs.append(cmd.signal())
             queues.append(EngineQueue(d, r % topo.n_engines, tuple(cs)))
     return queues
+
+
+def _ring_rs_queues(topo: Topology, shard: int, *,
+                    ar: bool = False) -> list[EngineQueue]:
+    """Unidirectional ring reduce-scatter (DESIGN.md §10): n-1 chained
+    send steps per device, each (after step 0) preceded by the reduction of
+    the predecessor's arrived partial, plus the terminal reduction that
+    folds the last arrival into the device's result shard.  Tags are
+    transfer-granular; chunking splits the copies AND the reductions at the
+    same grain (``chunk_schedule``).  With ``ar=True`` the terminal
+    reduction raises ``("arf", d, 0)`` — the all-reduce chaining hook.
+    """
+    n = topo.n_devices
+    queues = []
+    for d, (pred, succ) in _ring_neighbors(topo).items():
+        cs: list[cmd.Command] = []
+        for k in range(n - 1):
+            if k > 0:
+                cs.append(cmd.reduce_tag(("rs", pred, k - 1), shard))
+            cs.append(cmd.copy(d, succ, shard))
+            cs.append(cmd.signal(("rs", d, k)))
+        cs.append(cmd.reduce_tag(("rs", pred, n - 2), shard,
+                                 ("arf", d, 0) if ar else None))
+        cs.append(cmd.signal())
+        queues.append(EngineQueue(d, 0, tuple(cs)))
+    return queues
+
+
+def _bidir_ring_rs_queues(topo: Topology, shard: int, *,
+                          ar: bool = False) -> list[EngineQueue]:
+    """Bidirectional ring reduce-scatter (DESIGN.md §10): partials flow in
+    both directions — the forward chain accumulates the ``n_fwd``
+    predecessors' contributions, the backward chain the ``n_bwd``
+    successors' — and each device folds both terminal partials into its
+    result shard (its own contribution seeds the accumulator).  Every
+    device reduces exactly ``n - 1`` arrived shards, mirroring
+    ``_bidir_ring_ag_queues``'s ``n - 1`` deliveries.  Unlike the bidir
+    all-gather there is no step-0 ``bcst``: the two directions carry
+    *different* partials, so step 0 is one copy per direction.
+    """
+    n = topo.n_devices
+    n_fwd, n_bwd = _bidir_split(n)
+    queues = []
+    for d, (pred, succ) in _ring_neighbors(topo).items():
+        for name, peer, target, steps, raise_name, engine in (
+                ("rsf", pred, succ, n_fwd, "arf", 0),
+                ("rsb", succ, pred, n_bwd, "arb",
+                 min(1, topo.n_engines - 1))):
+            if steps == 0:
+                continue
+            cs: list[cmd.Command] = []
+            cs.append(cmd.copy(d, target, shard))
+            cs.append(cmd.signal((name, d, 0)))
+            for k in range(1, steps):
+                cs.append(cmd.reduce_tag((name, peer, k - 1), shard))
+                cs.append(cmd.copy(d, target, shard))
+                cs.append(cmd.signal((name, d, k)))
+            cs.append(cmd.reduce_tag((name, peer, steps - 1), shard,
+                                     (raise_name, d, 0) if ar else None))
+            cs.append(cmd.signal())
+            queues.append(EngineQueue(d, engine, tuple(cs)))
+    return queues
+
+
+def _pipe_ring_rs_queues(topo: Topology, shard: int, granularity: int,
+                         per_chunk: bool, *, ar: bool = False) -> list[EngineQueue]:
+    """Pipelined unidirectional ring reduce-scatter (``pipe_ring_rs``,
+    DESIGN.md §10).
+
+    One engine queue per ring step, like ``_pipe_ring_ag_queues``, but step
+    ``k >= 1`` *reduces* each arrived chunk before forwarding the reduced
+    partial: chunk ``i``'s reduction blocks on chunk ``i`` of the
+    predecessor's step ``k-1`` transfer, so the reduce+forward of chunk
+    ``i`` overlaps the wire time of chunk ``i+1`` — the finer-grain
+    compute/communication overlap of arXiv:2512.10236.  A terminal
+    reduce-only queue folds the last arrival into the result shard and
+    notifies the host.  Every send step carries per-chunk tags (its
+    consumer reduces every arrival), unlike the all-gather rings where the
+    last step's payload is unconsumed.  ``per_chunk=False`` blocks every
+    chunk reduction on the predecessor's final chunk (the control arm).
+    """
+    n = topo.n_devices
+    queues = []
+    for d, (pred, succ) in _ring_neighbors(topo).items():
+        for k in range(n - 1):
+            copies = chunked_copies(CmdKind.COPY, d, (succ,), shard,
+                                    granularity, ("prs", d, k),
+                                    per_chunk=per_chunk)
+            if k == 0:
+                cs = list(copies)
+            else:
+                reduces = chunked_reduces(("prs", pred, k - 1), shard,
+                                          granularity, per_chunk=per_chunk)
+                cs = []
+                for r, cc in zip(reduces, copies):
+                    cs.append(r)
+                    cs.append(cc)
+            queues.append(EngineQueue(d, k % topo.n_engines, tuple(cs)))
+        cs = list(chunked_reduces(("prs", pred, n - 2), shard, granularity,
+                                  per_chunk=per_chunk,
+                                  raise_tag=("arf", d, 0) if ar else None))
+        cs.append(cmd.signal())
+        queues.append(EngineQueue(d, (n - 1) % topo.n_engines, tuple(cs)))
+    return queues
+
+
+def _pipe_bidir_rs_queues(topo: Topology, shard: int, granularity: int,
+                          per_chunk: bool, *, ar: bool = False) -> list[EngineQueue]:
+    """Pipelined bidirectional ring reduce-scatter (``pipe_bidir_ring_rs``,
+    DESIGN.md §10): the two partial chains of ``_bidir_ring_rs_queues``
+    with per-chunk reductions and per-chunk tags.  As in
+    ``_pipe_bidir_ag_queues``, each direction's chain wraps onto its own
+    engine subset (chain-local sharing keeps wake times strictly staggered
+    and the schedule translation-invariant); the terminal reduce-only
+    queues extend their chain's engine rotation.
+    """
+    n = topo.n_devices
+    n_fwd, n_bwd = _bidir_split(n)
+    e_fwd = max(1, (topo.n_engines + 1) // 2)
+    e_bwd = max(1, topo.n_engines - e_fwd)
+    queues = []
+    for d, (pred, succ) in _ring_neighbors(topo).items():
+        for name, peer, target, steps, raise_name, fwd in (
+                ("prf", pred, succ, n_fwd, "arf", True),
+                ("prb", succ, pred, n_bwd, "arb", False)):
+            if steps == 0:
+                continue
+
+            def engine(k: int) -> int:
+                if fwd:
+                    return k % e_fwd
+                # min(): on a 1-engine device both chains share engine 0.
+                return min(e_fwd + (k % e_bwd), topo.n_engines - 1)
+
+            for k in range(steps):
+                copies = chunked_copies(CmdKind.COPY, d, (target,), shard,
+                                        granularity, (name, d, k),
+                                        per_chunk=per_chunk)
+                if k == 0:
+                    cs = list(copies)
+                else:
+                    reduces = chunked_reduces((name, peer, k - 1), shard,
+                                              granularity, per_chunk=per_chunk)
+                    cs = []
+                    for r, cc in zip(reduces, copies):
+                        cs.append(r)
+                        cs.append(cc)
+                queues.append(EngineQueue(d, engine(k), tuple(cs)))
+            cs = list(chunked_reduces((name, peer, steps - 1), shard,
+                                      granularity, per_chunk=per_chunk,
+                                      raise_tag=(raise_name, d, 0) if ar else None))
+            cs.append(cmd.signal())
+            queues.append(EngineQueue(d, engine(steps), tuple(cs)))
+    return queues
+
+
+def reduce_scatter_schedule(topo: Topology, size: int, variant: str = "ring_rs", *,
+                            opt_config: OptimizationConfig | None = None,
+                            max_chunk_bytes: int | None = None,
+                            pipe_depth: int = PIPE_DEPTH,
+                            per_chunk_signaling: bool = True) -> Schedule:
+    """Reduce-scatter: every device ends with its ``size / n`` result shard
+    reduced over all n contributions (DESIGN.md §10).
+
+    Variants are the ring family (``ring_rs``, ``bidir_ring_rs``) and its
+    per-chunk-pipelined renderings (``pipe_ring_rs``, ``pipe_bidir_ring_rs``);
+    the ``opt_`` / ``prelaunch_`` prefixes compose as for the other
+    collectives.  ``pipe_depth`` / ``per_chunk_signaling`` parameterize the
+    ``pipe_`` variants exactly as in :func:`allgather_schedule`; reductions
+    re-slice at the same chunk granularity as the copies feeding them, so
+    reduction work is conserved at ``(n-1) * shard_chunks`` chunk
+    reductions per device whatever the grain.
+    """
+    requested = variant
+    variant, optimized = parse_optimized(variant)
+    base, prelaunch = parse_variant(variant)
+    if base not in RS_VARIANTS:
+        raise ValueError(f"unknown reduce-scatter variant {requested!r}")
+    n = topo.n_devices
+    shard = max(1, size // n)
+    symmetric = _ring_closes_on_neighbors(topo)
+    if base in ("pipe_ring_rs", "pipe_bidir_ring_rs"):
+        mcb = topo.calib.max_chunk_bytes if max_chunk_bytes is None else max_chunk_bytes
+        g = _pipe_granularity(shard, pipe_depth, mcb)
+        builder = _pipe_ring_rs_queues if base == "pipe_ring_rs" else _pipe_bidir_rs_queues
+        queues = builder(topo, shard, g, per_chunk_signaling)
+    else:
+        builder = _ring_rs_queues if base == "ring_rs" else _bidir_ring_rs_queues
+        queues = builder(topo, shard)
+    name = f"rs_opt_{variant}" if optimized else f"rs_{variant}"
+    sched = Schedule(name=name, queues=_maybe_prelaunch(queues, prelaunch),
+                     symmetric=symmetric)
+    sched = _maybe_chunk(sched, topo, max_chunk_bytes)
+    return _maybe_optimize(sched, optimized, opt_config)
+
+
+def _ar_result_tags(base: str, n: int, device: int) -> list[tuple]:
+    """The tags a device's all-reduce result shard completion raises: one
+    per terminal reduction (both directions on the bidir variants)."""
+    n_bwd = _bidir_split(n)[1]
+    tags = [("arf", device, 0)]
+    if "bidir" in base and n_bwd:
+        tags.append(("arb", device, 0))
+    return tags
+
+
+def _ar_gate_ag_sources(queues: list[EngineQueue], base: str, n: int,
+                        chunks: int | None,
+                        per_chunk: bool = True) -> list[EngineQueue]:
+    """Gate each device's all-gather *source* queue (the one whose first
+    command is a data command — every other queue chains off it through
+    the ring tags) on the device's reduce-scatter result tags.
+
+    ``chunks=None`` (the non-pipelined variants) prepends one
+    transfer-granularity wait per result tag — the terminal reduction's
+    fused raise rides its final chunk.  On the pipelined variants the
+    result tags are chunk-indexed: with ``per_chunk=True`` the gather
+    waits on result chunk ``i`` directly before its ``i``-th data chunk,
+    so it starts on the first *reduced* chunk (DESIGN.md §10); with
+    ``per_chunk=False`` one wait on the final result chunk gates the whole
+    queue (the control arm).
+    """
+    out = []
+    for q in queues:
+        if not q.commands or q.commands[0].kind not in DATA_KINDS:
+            out.append(q)
+            continue
+        tags = _ar_result_tags(base, n, q.device)
+        cs: list[cmd.Command] = []
+        if chunks is None:
+            cs.extend(cmd.wait(t) for t in tags)
+            cs.extend(q.commands)
+        elif not per_chunk:
+            cs.extend(cmd.wait(chunk_tag(t, chunks - 1)) for t in tags)
+            cs.extend(q.commands)
+        else:
+            i = 0
+            for c in q.commands:
+                if c.kind in DATA_KINDS:
+                    cs.extend(cmd.wait(chunk_tag(t, i)) for t in tags)
+                    i += 1
+                cs.append(c)
+        out.append(dataclasses.replace(q, commands=tuple(cs)))
+    return out
+
+
+#: All-gather phase paired with each reduce-scatter variant by
+#: :func:`allreduce_schedule` (same ring embedding, same chunk grain).
+_AR_AG_BUILDERS = {
+    "ring_rs": _ring_ag_queues,
+    "bidir_ring_rs": _bidir_ring_ag_queues,
+    "pipe_ring_rs": _pipe_ring_ag_queues,
+    "pipe_bidir_ring_rs": _pipe_bidir_ag_queues,
+}
+
+#: The standalone all-gather *variant* each reduce-scatter variant pairs
+#: with — what the RS-then-AG sequential baseline of the §10 decomposition
+#: claims simulates (claims.py, tests/test_property.py).
+AR_AG_VARIANT = {
+    "ring_rs": "ring",
+    "bidir_ring_rs": "bidir_ring",
+    "pipe_ring_rs": "pipe_b2b",
+    "pipe_bidir_ring_rs": "pipe_bidir_ring",
+}
+
+
+def allreduce_schedule(topo: Topology, size: int, variant: str = "ring_rs", *,
+                       opt_config: OptimizationConfig | None = None,
+                       max_chunk_bytes: int | None = None,
+                       pipe_depth: int = PIPE_DEPTH,
+                       per_chunk_signaling: bool = True) -> Schedule:
+    """All-reduce as reduce-scatter + pipelined all-gather (DESIGN.md §10).
+
+    ``variant`` names the reduce-scatter flavor (:data:`RS_VARIANTS` plus
+    the usual prefixes); the matching all-gather rendering
+    (:data:`_AR_AG_BUILDERS`) gathers the reduced shards over the same ring
+    embedding at the same chunk granularity.  The two phases are chained
+    through the terminal reductions' result tags: on the ``pipe_`` variants
+    the gather's source queue waits *per chunk*, so the all-gather fill
+    overlaps the reduce-scatter tail instead of starting after it.
+
+    The gather phase's queues are always *armed ahead of time* (prelaunch,
+    §4.5): they cannot make progress before the reduce phase's result tags
+    anyway, so a real runtime enqueues their packets while the reduce
+    phase streams — leaving them live would serialize the gather phase's
+    full control cost on the host *before* the reduce phase's first
+    doorbell, delaying the wire start by more than the overlap gains on
+    host-heavy platforms.  A ``prelaunch_`` prefix additionally arms the
+    reduce phase.  This is why the composed schedule is never slower than
+    running the two collectives back to back (asserted in
+    ``tests/test_property.py``).
+    """
+    requested = variant
+    variant, optimized = parse_optimized(variant)
+    base, prelaunch = parse_variant(variant)
+    if base not in RS_VARIANTS:
+        raise ValueError(f"unknown all-reduce variant {requested!r}")
+    n = topo.n_devices
+    shard = max(1, size // n)
+    symmetric = _ring_closes_on_neighbors(topo)
+    ag_builder = _AR_AG_BUILDERS[base]
+    if base in ("pipe_ring_rs", "pipe_bidir_ring_rs"):
+        mcb = topo.calib.max_chunk_bytes if max_chunk_bytes is None else max_chunk_bytes
+        g = _pipe_granularity(shard, pipe_depth, mcb)
+        rs_builder = _pipe_ring_rs_queues if base == "pipe_ring_rs" else _pipe_bidir_rs_queues
+        rs_queues = rs_builder(topo, shard, g, per_chunk_signaling, ar=True)
+        ag_queues = _ar_gate_ag_sources(
+            ag_builder(topo, shard, g, per_chunk_signaling), base, n,
+            len(chunk_sizes(shard, g)), per_chunk_signaling)
+    else:
+        rs_builder = _ring_rs_queues if base == "ring_rs" else _bidir_ring_rs_queues
+        rs_queues = rs_builder(topo, shard, ar=True)
+        ag_queues = _ar_gate_ag_sources(ag_builder(topo, shard), base, n, None)
+    name = f"ar_opt_{variant}" if optimized else f"ar_{variant}"
+    queues = _maybe_prelaunch(rs_queues, prelaunch) \
+        + _maybe_prelaunch(ag_queues, True)
+    sched = Schedule(name=name, queues=queues, symmetric=symmetric)
+    sched = _maybe_chunk(sched, topo, max_chunk_bytes)
+    return _maybe_optimize(sched, optimized, opt_config)
 
 
 def allgather_schedule(topo: Topology, size: int, variant: str = "pcpy", *,

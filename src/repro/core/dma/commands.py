@@ -41,6 +41,19 @@ finer-grain overlap direction of arXiv:2512.10236).  Per-chunk tags are
 always *fused* (they ride each chunk's final write packet): a standalone
 ``signal`` per chunk would double the command count and serialize the
 engine front end on ``sync_engine`` round-trips.
+
+Per-chunk reduction (DESIGN.md §10): a ``reduce_tag`` command models the
+consumer side of a reduce-scatter step — it blocks like a ``wait`` on the
+named (chunk) tag, then charges the reduction of ``size`` arrived bytes
+(``Calibration.reduce_setup + size / reduce_bytes_per_s``) on the
+consumer's engine timeline before the queue may forward the reduced
+partial.  An optional ``fused_tag`` raises a semaphore at reduction
+completion, which is how the all-reduce builder chains its all-gather
+phase off the final reduce chunk by chunk.  :func:`chunk_command` /
+:func:`chunk_schedule` split oversized reductions exactly like oversized
+copies, and :func:`reduce_work` exposes the schedule-level conservation
+invariant (every device of an n-device reduce-scatter performs exactly
+``(n-1) * shard_chunks`` chunk reductions).
 """
 from __future__ import annotations
 
@@ -62,6 +75,7 @@ class CmdKind(enum.Enum):
     POLL = "poll"          # wait until *location* satisfies a condition (prelaunch)
     SIGNAL = "signal"      # atomic inc/dec of a 64b completion signal
     WAIT = "wait"          # block engine until a tagged signal was raised
+    REDUCE = "reduce_tag"  # wait on a tagged chunk, then reduce it locally (§10)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -71,8 +85,14 @@ class Command:
     ``src``/``dsts`` are device ids (or "host").  ``size`` is bytes moved per
     destination.  A ``swap`` moves ``size`` bytes in each direction between
     ``src`` and ``dsts[0]``.  ``poll``/``signal``/``wait`` carry no payload.
-    ``tag`` names the semaphore a ``signal`` raises / a ``wait`` blocks on;
-    a tagged signal is engine-scope (not host-observed).
+    ``tag`` names the semaphore a ``signal`` raises / a ``wait`` or
+    ``reduce_tag`` blocks on; a tagged signal is engine-scope (not
+    host-observed).
+
+    Per-chunk reduction (DESIGN.md §10): a ``reduce_tag`` command carries the
+    tag of the arrived chunk it consumes and ``size`` = the bytes it reduces
+    on the consumer's engine timeline; an optional ``fused_tag`` raises a
+    semaphore at reduction completion (the all-reduce chaining hook).
 
     Fused signaling (DESIGN.md §7.3): a *data* command may additionally carry
     ``fused_signal=True`` (a host-observed completion rides the final write
@@ -97,13 +117,15 @@ class Command:
             raise ValueError("bcst needs exactly two destinations")
         if self.kind is CmdKind.SWAP and len(self.dsts) != 1:
             raise ValueError("swap needs exactly one partner")
-        if self.kind is CmdKind.WAIT and self.tag is None:
-            raise ValueError("wait needs a tag to block on")
+        if self.kind in (CmdKind.WAIT, CmdKind.REDUCE) and self.tag is None:
+            raise ValueError(f"{self.kind.value} needs a tag to block on")
         if self.size < 0:
             raise ValueError("negative size")
-        if (self.fused_tag is not None or self.fused_signal) \
-                and self.kind not in DATA_KINDS:
+        if self.fused_signal and self.kind not in DATA_KINDS:
             raise ValueError("only data commands can carry a fused signal")
+        if self.fused_tag is not None \
+                and self.kind not in DATA_KINDS and self.kind is not CmdKind.REDUCE:
+            raise ValueError("only data/reduce commands can carry a fused tag")
 
     # ---- traffic accounting (used by the engine model & power model) ----
     @property
@@ -124,10 +146,13 @@ class Command:
         ``bcst`` reads the source ONCE for both destinations (paper §4.2) —
         this is where its memory-traffic/power saving comes from.  ``swap``
         reads locally and writes locally (in place), plus symmetric remote
-        traffic.
+        traffic.  A ``reduce_tag`` reads both operands (the arrived chunk
+        and the local accumulator) from local HBM (DESIGN.md §10).
         """
         if self.kind in (CmdKind.COPY, CmdKind.BCST, CmdKind.SWAP):
             return self.size
+        if self.kind is CmdKind.REDUCE:
+            return 2 * self.size
         return 0
 
     @property
@@ -167,30 +192,49 @@ def wait(tag: Tag) -> Command:
     return Command(CmdKind.WAIT, tag=tag)
 
 
+def reduce_tag(tag: Tag, size: int, raise_tag: Tag | None = None) -> Command:
+    """Per-chunk reduction (DESIGN.md §10): block on ``tag`` like a
+    ``wait``, then reduce the ``size`` arrived bytes into the local
+    accumulator on the consumer's engine timeline.  ``raise_tag`` raises a
+    semaphore at reduction completion (how the all-reduce builder releases
+    its all-gather phase chunk by chunk)."""
+    return Command(CmdKind.REDUCE, size=size, tag=tag, fused_tag=raise_tag)
+
+
 DATA_KINDS = (CmdKind.COPY, CmdKind.BCST, CmdKind.SWAP)
+
+#: Kinds that carry a per-command payload bounded by the sDMA packet ceiling
+#: (DESIGN.md §8.1/§10): data commands AND consumer-side reductions — a
+#: reduction is re-sliced at the same granularity as the copies feeding it,
+#: which is what keeps reduction-work conservation chunk-invariant.
+CHUNKABLE_KINDS = DATA_KINDS + (CmdKind.REDUCE,)
 
 
 def chunk_command(c: Command, max_bytes: int) -> tuple[Command, ...]:
-    """Split one data command into bounded-size chunk commands (DESIGN.md §8.1).
+    """Split one data/reduce command into bounded-size chunk commands
+    (DESIGN.md §8.1/§10).
 
-    A copy/bcst/swap of more than ``max_bytes`` becomes ``ceil(size /
+    A copy/bcst/swap/reduce of more than ``max_bytes`` becomes ``ceil(size /
     max_bytes)`` commands of the same kind/source/destinations: full-size
     chunks followed by one remainder chunk.  The full-size chunks all share
     ONE ``Command`` instance — the simulator recognizes such identical runs
     by object identity and schedules them in closed form.  Any fused signal
     of the original command rides only the final chunk (the semaphore /
-    completion may not be raised before the last byte landed).
+    completion may not be raised before the last byte landed / the last
+    chunk was reduced).  A split ``reduce_tag`` keeps its wait tag on every
+    chunk: transfer-granularity producers raise one tag for the whole
+    transfer, so each chunk reduction blocks on the same semaphore.
 
-    Non-data commands and commands already within ``max_bytes`` are returned
+    Other commands and commands already within ``max_bytes`` are returned
     unchanged; ``max_bytes <= 0`` disables chunking.
     """
-    if c.kind not in DATA_KINDS or max_bytes <= 0 or c.size <= max_bytes:
+    if c.kind not in CHUNKABLE_KINDS or max_bytes <= 0 or c.size <= max_bytes:
         return (c,)
     n_full, rem = divmod(c.size, max_bytes)
-    body = Command(c.kind, c.src, c.dsts, max_bytes)
+    body = Command(c.kind, c.src, c.dsts, max_bytes, tag=c.tag)
     chunks: list[Command] = [body] * n_full
     if rem:
-        chunks.append(Command(c.kind, c.src, c.dsts, rem))
+        chunks.append(Command(c.kind, c.src, c.dsts, rem, tag=c.tag))
     if c.fused_tag is not None or c.fused_signal:
         chunks[-1] = dataclasses.replace(
             chunks[-1], fused_tag=c.fused_tag, fused_signal=c.fused_signal)
@@ -254,8 +298,52 @@ def chunked_copies(kind: CmdKind, src, dsts, size: int, granularity: int,
     return tuple(out)
 
 
+def chunked_reduces(src_tag: Tag, size: int, granularity: int, *,
+                    per_chunk: bool = True,
+                    raise_tag: Tag | None = None) -> tuple[Command, ...]:
+    """Per-chunk reductions consuming one chunk-tagged transfer (DESIGN.md
+    §10).
+
+    Emits one ``reduce_tag`` command per :func:`chunk_sizes` chunk of a
+    ``size``-byte transfer.  With ``per_chunk=True`` chunk ``i``'s
+    reduction blocks on ``chunk_tag(src_tag, i)`` — it starts the moment
+    that chunk lands; with ``per_chunk=False`` every chunk reduction blocks
+    on the producer's *final* chunk tag (the serialized control arm of the
+    §10 claims).  Either arm performs the same reduction work — one
+    reduce command per chunk — so reduction-work conservation is
+    signaling-grain-invariant.  ``raise_tag`` tags each chunk's reduction
+    completion with ``chunk_tag(raise_tag, i)`` (all-reduce chaining).
+    """
+    sizes = chunk_sizes(size, granularity)
+    last = len(sizes) - 1
+    out = []
+    for i, sz in enumerate(sizes):
+        w = i if per_chunk else last
+        rt = chunk_tag(raise_tag, i) if raise_tag is not None else None
+        out.append(reduce_tag(chunk_tag(src_tag, w), sz, rt))
+    return tuple(out)
+
+
+def reduce_work(schedule: "Schedule") -> dict[int, tuple[int, int]]:
+    """device -> (chunk reductions, total reduced bytes).
+
+    The reduction-work conservation invariant (DESIGN.md §10): in an
+    n-device reduce-scatter every device reduces exactly ``n - 1`` shards
+    — ``(n - 1) * shard_chunks`` chunk reductions — whatever the variant,
+    chunk granularity, pipeline depth or signaling grain.
+    """
+    out: dict[int, tuple[int, int]] = {}
+    for q in schedule.queues:
+        for c in q.commands:
+            if c.kind is CmdKind.REDUCE:
+                n, b = out.get(q.device, (0, 0))
+                out[q.device] = (n + 1, b + c.size)
+    return out
+
+
 def chunk_schedule(schedule: "Schedule", max_chunk_bytes: int) -> "Schedule":
-    """Chunk every oversized data command of a schedule (DESIGN.md §8.1).
+    """Chunk every oversized data/reduce command of a schedule (DESIGN.md
+    §8.1/§10).
 
     Applied by the collective builders with the topology's calibrated
     ``max_chunk_bytes`` before the optimization transforms, so §7.1 batching
@@ -269,7 +357,8 @@ def chunk_schedule(schedule: "Schedule", max_chunk_bytes: int) -> "Schedule":
     queues = []
     changed = False
     for q in schedule.queues:
-        if all(c.size <= max_chunk_bytes for c in q.data_commands):
+        if all(c.size <= max_chunk_bytes for c in q.commands
+               if c.kind in CHUNKABLE_KINDS):
             queues.append(q)
             continue
         cs: list[Command] = []

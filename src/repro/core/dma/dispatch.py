@@ -23,6 +23,16 @@ their ``prelaunch_``/``opt_`` compositions) to the argmin on neighbor-link
 topologies — the sweep behind ``benchmarks/fig13*/fig14* --pipelined`` and
 the v4 bundled TPU tables.
 
+Reduce collectives (DESIGN.md §10): ``allow_reduce=True`` unlocks the
+``reduce_scatter`` / ``all_reduce`` collectives — the ring reduce family
+(``ring_rs``, ``bidir_ring_rs``; with ``allow_pipelined`` also the
+per-chunk ``pipe_ring_rs`` / ``pipe_bidir_ring_rs``) on every topology (the
+ring embedding is the only modeled reduce schedule shape, so unlike the
+``pipe_`` all-gather family it is offered on fully-connected fabrics too).
+The explicit opt-in keeps pre-§10 sweeps byte-identical and makes an
+accidental ``reduce_scatter`` request against an old call site fail loudly
+instead of silently sweeping an empty candidate set.
+
 Simulation results are memoized: :func:`variant_latency` caches every
 (topology, collective, size, variant, chunk) point and
 :func:`derive_dispatch` caches whole argmin sweeps, so repeated claim
@@ -35,9 +45,18 @@ import dataclasses
 import functools
 from typing import Callable
 
-from .collectives import allgather_schedule, alltoall_schedule
+from .collectives import (allgather_schedule, allreduce_schedule,
+                          alltoall_schedule, reduce_scatter_schedule)
 from .engine import simulate
 from .topology import Topology
+
+#: Schedule builder per collective name (the dispatch/claims vocabulary).
+COLLECTIVE_BUILDERS = {
+    "all_gather": allgather_schedule,
+    "all_to_all": alltoall_schedule,
+    "reduce_scatter": reduce_scatter_schedule,
+    "all_reduce": allreduce_schedule,
+}
 
 KB = 1024
 MB = 1024 * 1024
@@ -94,7 +113,7 @@ def variant_latency(topo: Topology, collective: str, size: int, variant: str,
 @functools.lru_cache(maxsize=65536)
 def _variant_latency_cached(topo: Topology, collective: str, size: int,
                             variant: str, chunk_bytes: int | None) -> float:
-    builder: Callable = allgather_schedule if collective == "all_gather" else alltoall_schedule
+    builder: Callable = COLLECTIVE_BUILDERS[collective]
     return simulate(builder(topo, size, variant, max_chunk_bytes=chunk_bytes),
                     topo).latency
 
@@ -106,6 +125,7 @@ def candidate_variants(
     allow_prelaunch: bool = True,
     allow_optimized: bool = False,
     allow_pipelined: bool = False,
+    allow_reduce: bool = False,
 ) -> list[str]:
     """Variants an argmin sweep should consider on this topology.
 
@@ -115,18 +135,31 @@ def candidate_variants(
     pipelined rings (``pipe_`` family, DESIGN.md §9) on neighbor-link
     topologies — like the chained rings they only make sense where the
     torus embedding is the native route, so fully-connected fabrics skip
-    them.  Prefixes compose: with all flags set the sweep also offers
+    them.  ``allow_reduce`` unlocks the ``reduce_scatter`` / ``all_reduce``
+    collectives (ring reduce family, DESIGN.md §10; offered on every
+    topology — the ring embedding is the only modeled reduce shape, and
+    ``allow_pipelined`` adds the per-chunk ``pipe_*_rs`` renderings).
+    Prefixes compose: with all flags set the sweep also offers
     ``prelaunch_pipe_*`` and ``opt_[prelaunch_]pipe_*``.
     """
-    variants = ["pcpy", "b2b", "bcst" if collective == "all_gather" else "swap"]
-    if not topo.fully_connected:
-        variants.append("ring")
-        if collective == "all_gather":
-            variants.append("bidir_ring")
+    if collective in ("reduce_scatter", "all_reduce"):
+        if not allow_reduce:
+            raise ValueError(
+                f"collective {collective!r} needs allow_reduce=True "
+                "(DESIGN.md §10)")
+        variants = ["ring_rs", "bidir_ring_rs"]
         if allow_pipelined:
-            variants.append("pipe_b2b")
+            variants += ["pipe_ring_rs", "pipe_bidir_ring_rs"]
+    else:
+        variants = ["pcpy", "b2b", "bcst" if collective == "all_gather" else "swap"]
+        if not topo.fully_connected:
+            variants.append("ring")
             if collective == "all_gather":
-                variants.append("pipe_bidir_ring")
+                variants.append("bidir_ring")
+            if allow_pipelined:
+                variants.append("pipe_b2b")
+                if collective == "all_gather":
+                    variants.append("pipe_bidir_ring")
     if allow_prelaunch:
         variants += [f"prelaunch_{v}" for v in list(variants)]
     if allow_optimized:
@@ -146,8 +179,17 @@ def pipelined_variants(topo: Topology, collective: str) -> list[str]:
     ring rendering including its ``prelaunch_``/``opt_`` compositions; what
     the pipelined claim bands and ``--pipelined`` benchmark curves sweep."""
     return [v for v in candidate_variants(topo, collective, allow_optimized=True,
-                                          allow_pipelined=True)
+                                          allow_pipelined=True,
+                                          allow_reduce=True)
             if "pipe_" in v]
+
+
+def reduce_variants(topo: Topology, collective: str = "reduce_scatter") -> list[str]:
+    """The full reduce candidate set (DESIGN.md §10): the ring reduce
+    family with every ``prelaunch_``/``opt_``/``pipe_`` composition — what
+    the §10 claim bands and ``benchmarks/fig_allreduce.py`` sweep."""
+    return candidate_variants(topo, collective, allow_optimized=True,
+                              allow_pipelined=True, allow_reduce=True)
 
 
 @functools.lru_cache(maxsize=256)
@@ -159,10 +201,12 @@ def _derive_dispatch_cached(
     allow_optimized: bool,
     chunk_sizes: tuple[int | None, ...],
     allow_pipelined: bool = False,
+    allow_reduce: bool = False,
 ) -> tuple[DispatchEntry, ...]:
     variants = candidate_variants(topo, collective, allow_prelaunch=allow_prelaunch,
                                   allow_optimized=allow_optimized,
-                                  allow_pipelined=allow_pipelined)
+                                  allow_pipelined=allow_pipelined,
+                                  allow_reduce=allow_reduce)
 
     winners: list[tuple[int, str, int | None]] = []
     for size in sizes:
@@ -199,6 +243,7 @@ def derive_dispatch(
     allow_prelaunch: bool = True,
     allow_optimized: bool = False,
     allow_pipelined: bool = False,
+    allow_reduce: bool = False,
     chunk_sizes=None,
 ) -> list[DispatchEntry]:
     """Re-derive the best variant per size from the timing model (argmin).
@@ -213,14 +258,15 @@ def derive_dispatch(
     (DESIGN.md §8.1): the argmin runs over (variant, chunk) pairs and each
     entry records its winning ``chunk`` (``None`` = the topology's
     calibrated default; for ``pipe_`` variants the chunk granularity also
-    bounds the pipeline depth).  Sweeps are memoized per (topology,
-    collective, sizes, allow_prelaunch, allow_optimized, allow_pipelined,
-    chunk_sizes).
+    bounds the pipeline depth).  ``allow_reduce`` unlocks the
+    ``reduce_scatter``/``all_reduce`` collectives (DESIGN.md §10).  Sweeps
+    are memoized per (topology, collective, sizes, allow_prelaunch,
+    allow_optimized, allow_pipelined, allow_reduce, chunk_sizes).
     """
     chunks = (None,) if chunk_sizes is None else tuple(chunk_sizes)
     return list(_derive_dispatch_cached(topo, collective, tuple(sizes),
                                         allow_prelaunch, allow_optimized,
-                                        chunks, allow_pipelined))
+                                        chunks, allow_pipelined, allow_reduce))
 
 
 def best_variant_for(topo: Topology, collective: str, size: int,

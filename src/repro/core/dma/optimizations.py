@@ -37,7 +37,12 @@ fused chunk tags or waits are never split across SDMA slots (the chunk
 order *is* the dependency order), fusion only absorbs the trailing host
 completion, and batching amortizes the per-chunk packet creation — the
 ``opt_pipe_*`` variants owe most of their mid-size win to §7.1 batching of
-the per-chunk/per-wait control stream.
+the per-chunk/per-wait control stream.  Reduce-scatter streams (DESIGN.md
+§10) follow the same rule: a queue interleaving ``reduce_tag`` commands
+with its forwarded copies is never slot-split (the reduction of chunk
+``i`` must precede the copy that forwards it), fusion leaves reductions
+alone (their raise tags are set by the builders), and batching amortizes
+the reduce/copy packet stream like any other.
 
 Transforms never change *what* is transferred: byte counts, sources and
 destinations are preserved exactly (asserted in ``tests/test_sim.py``), only
@@ -145,7 +150,11 @@ def _splittable(q: EngineQueue, min_commands: int, max_bytes: int) -> bool:
         return False
     seen_signal = False
     for c in q.commands:
-        if c.kind in (CmdKind.WAIT, CmdKind.POLL):
+        if c.kind in (CmdKind.WAIT, CmdKind.POLL, CmdKind.REDUCE):
+            # Reductions order-depend on their interleaved copies: the
+            # reduced partial must be forwarded by the NEXT data command,
+            # so a reduce stream never slot-splits across the chunk
+            # boundary (DESIGN.md §10).
             return False
         if c.kind is CmdKind.SIGNAL:
             if c.tag is not None:

@@ -81,6 +81,19 @@ commands still schedules in closed form (§9.2): the run commits with O(1)
 timeline updates while each chunk's tag is raised at its closed-form
 completion time.
 
+Per-chunk reduction (DESIGN.md §10): reduce-scatter schedules interleave
+``reduce_tag`` commands with their forwarded copies — a ``reduce_tag``
+blocks like a ``wait`` on the named chunk tag, then charges
+``Calibration.reduce_setup + size / reduce_bytes_per_s`` on the consumer's
+engine timeline (the engine reads the arrived chunk and the local
+accumulator and writes the partial back) before the queue may forward the
+reduced result.  Reduction time lands in the copy phase, exactly like
+wait-for-neighbor time; an optional ``fused_tag`` on the reduce raises a
+semaphore at reduction completion (all-reduce chaining).  The §9.2
+closed-form chunk run is unaffected — reductions sit on the *consumer*,
+so a producer's chunk run still commits closed-form and each chunk's
+semaphore wakes its parked reduction exactly as the per-chunk loop would.
+
 Symmetric fast path (DESIGN.md §6): schedules whose builder marked them
 ``symmetric`` simulate ONE representative device — waits on a neighbor's
 tagged signal resolve, by translation invariance, to the representative's own
@@ -190,6 +203,9 @@ class SimResult:
     busy: dict[str, float] = dataclasses.field(default_factory=dict)
     host_events: dict[int, int] = dataclasses.field(default_factory=dict)
     engine_atomics: dict[int, int] = dataclasses.field(default_factory=dict)
+    # Chunk reductions executed per device (DESIGN.md §10) — the event-loop
+    # side of the reduction-work conservation invariant.
+    reduce_chunks: dict[int, int] = dataclasses.field(default_factory=dict)
     representative: int | None = None    # set when the symmetric fast path ran
 
     @property
@@ -291,6 +307,7 @@ class _Sim:
         self.fused_signals: dict[int, list[float]] = defaultdict(list)
         self.host_events: dict[int, int] = defaultdict(int)
         self.engine_atomics: dict[int, int] = defaultdict(int)
+        self.reduce_chunks: dict[int, int] = defaultdict(int)
         # (src, dst) -> (timelines along the route, effective wire bandwidth);
         # resolving the route and the timeline dict once per endpoint pair
         # keeps the per-command cost flat under chunking.
@@ -501,6 +518,30 @@ class _Sim:
                 if arrival > st.issue:
                     st.issue = arrival
                 idx += 1
+            elif kind is CmdKind.REDUCE:
+                # Per-chunk reduction (DESIGN.md §10): block like a wait,
+                # then stream the accumulate through the consumer's engine.
+                rt = self.resolve(cmd.tag)
+                t = tags.get(rt)
+                if t is None:
+                    st.idx = idx
+                    st.blocked = rt
+                    return False
+                arrival = t + c.poll_trigger
+                start = st.issue if st.issue > arrival else arrival
+                dur = c.reduce_setup + cmd.size / c.reduce_bytes_per_s
+                _, end = st.engine_tl.acquire(start, dur)
+                st.issue = end
+                if end > st.last_end:
+                    st.last_end = end
+                if end > st.copy_end:
+                    st.copy_end = end
+                self.reduce_chunks[q.device] += 1
+                if cmd.fused_tag is not None:
+                    rt2 = self.resolve(cmd.fused_tag)
+                    tags[rt2] = end + c.fused_sync
+                    self.raised.append(rt2)
+                idx += 1
             elif kind is CmdKind.SIGNAL:
                 t = (st.issue if st.issue > st.last_end else st.last_end) + c.sync_engine
                 self.engine_atomics[q.device] += 1
@@ -672,10 +713,18 @@ def _device_hbm_bytes(queues: list[EngineQueue]) -> int:
 
     Incoming writes are attributed by the collective-level wrapper (the
     schedule is symmetric so local accounting suffices for relative power).
-    Every data kind reads ``size`` bytes locally (``Command.local_read_bytes``),
-    inlined here because chunking makes this walk O(chunks).
+    Every data kind reads ``size`` bytes locally and a reduction reads both
+    operands (``Command.local_read_bytes``), inlined here because chunking
+    makes this walk O(chunks).
     """
-    return sum(c.size for q in queues for c in q.commands if c.kind in DATA_KINDS)
+    total = 0
+    for q in queues:
+        for c in q.commands:
+            if c.kind in DATA_KINDS:
+                total += c.size
+            elif c.kind is CmdKind.REDUCE:
+                total += 2 * c.size
+    return total
 
 
 def simulate(schedule: Schedule, topo: Topology, *, symmetric: bool | None = None) -> SimResult:
@@ -703,6 +752,7 @@ def simulate(schedule: Schedule, topo: Topology, *, symmetric: bool | None = Non
         hbm = {d: _device_hbm_bytes(rep_queues) for d in devices}
         events = {d: sim.host_events.get(rep, 0) for d in devices}
         atomics = {d: sim.engine_atomics.get(rep, 0) for d in devices}
+        reduces = {d: sim.reduce_chunks.get(rep, 0) for d in devices}
     else:
         sim = _Sim(topo, None)
         per_device = _run(sim, {d: schedule.queues_for(d) for d in devices})
@@ -710,6 +760,7 @@ def simulate(schedule: Schedule, topo: Topology, *, symmetric: bool | None = Non
         hbm = {d: _device_hbm_bytes(schedule.queues_for(d)) for d in devices}
         events = {d: sim.host_events.get(d, 0) for d in devices}
         atomics = {d: sim.engine_atomics.get(d, 0) for d in devices}
+        reduces = {d: sim.reduce_chunks.get(d, 0) for d in devices}
         rep = None
 
     latency = max(b.total for b in per_device.values())
@@ -722,6 +773,7 @@ def simulate(schedule: Schedule, topo: Topology, *, symmetric: bool | None = Non
         busy={k: tl.busy for k, tl in sim.timelines.items()},
         host_events=events,
         engine_atomics=atomics,
+        reduce_chunks=reduces,
         representative=rep,
     )
 

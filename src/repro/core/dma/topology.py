@@ -68,6 +68,16 @@ class Calibration:
                creation (host) and issue (engine front end); the MI300X
                value is the sDMA linear-copy packet ceiling (22-bit byte
                count, ~4MB).  ``0`` disables chunking.
+    reduce_setup: constant per-chunk reduction launch latency (DESIGN.md
+               §10): dispatching the accumulate over an arrived chunk on
+               the consumer (descriptor + address setup on MI300X, vector
+               loop launch on the TPU scalar core).
+    reduce_bytes_per_s: consumer-side reduction throughput (DESIGN.md §10).
+               The accumulate streams both operands from local HBM and
+               writes the partial back, so it runs at roughly a third of
+               HBM bandwidth — far above link bandwidth on both platforms,
+               which is why per-chunk reductions hide under the wire once
+               the pipeline is primed.
     """
 
     # Values fit by benchmarks/calibration.py so the model lands on the
@@ -86,6 +96,10 @@ class Calibration:
     poll_trigger: float = 0.5838e-6
     hop_latency: float = 0.0
     max_chunk_bytes: int = 4 * 1024 * 1024
+    # Per-chunk reduction cost on the consumer (DESIGN.md §10): MI300X
+    # accumulates at ~1/3 of HBM3 bandwidth (read chunk + read/write acc).
+    reduce_setup: float = 0.45e-6
+    reduce_bytes_per_s: float = 1.6e12
     # Effective per-engine streaming bandwidth (one engine saturates roughly
     # one xGMI link; pcpy engages one engine per link).
     engine_bw: float = 64e9
@@ -308,6 +322,8 @@ def tpu_v5e_pod(n_devices: int = 256, calib: Calibration | None = None) -> Topol
         sync_obs_batched=0.05e-6,
         poll_trigger=0.20e-6,
         hop_latency=0.40e-6,   # ICI router forward per extra hop
+        reduce_setup=0.12e-6,  # vector accumulate launch on the scalar core
+        reduce_bytes_per_s=260e9,   # ~1/3 of the v5e HBM bandwidth (819 GB/s)
         engine_bw=50e9,
         dma_link_efficiency=0.95,
     )

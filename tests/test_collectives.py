@@ -36,12 +36,38 @@ expect = np.swapaxes(np.asarray(xa), 0, 1)
 assert np.allclose(wrap_aa(coll.pairwise_all_to_all), expect)
 assert np.allclose(wrap_aa(coll.reference_all_to_all), expect)
 
+# reduce collectives (DESIGN.md §10): ring RS/AR vs the XLA references
+xr = jax.random.normal(jax.random.PRNGKey(2), (N, N, 2, 8), jnp.float32)
+expect_rs = np.asarray(xr).sum(axis=0)          # row i = device i's chunk
+def wrap_rs(fn):
+    f = shard_map(lambda a: fn(a[0], "x")[None], mesh=mesh,
+                  in_specs=P("x", None, None, None),
+                  out_specs=P("x", None, None, None), check_vma=False)
+    return np.asarray(jax.jit(f)(xr))
+assert np.allclose(wrap_rs(coll.ring_reduce_scatter), expect_rs, atol=1e-4)
+assert np.allclose(wrap_rs(coll.reference_reduce_scatter), expect_rs, atol=1e-4)
+def wrap_ar(fn):
+    f = shard_map(lambda a: fn(a[0], "x"), mesh=mesh,
+                  in_specs=P("x", None, None, None),
+                  out_specs=P(None, None, None), check_vma=False)
+    return np.asarray(jax.jit(f)(xr))
+assert np.allclose(wrap_ar(coll.ring_all_reduce), expect_rs, atol=1e-4)
+assert np.allclose(wrap_ar(coll.reference_all_reduce), expect_rs, atol=1e-4)
+
 # CommBackend end-to-end inside shard_map (size-dispatched)
 be = CommBackend("latte", axis_devices=N)
 y = np.asarray(jax.jit(shard_map(lambda a: be.all_gather(a[0], "x"),
       mesh=mesh, in_specs=P("x", None, None), out_specs=P(None, None, None),
       check_vma=False))(x))
 assert np.allclose(y, ref)
+z = np.asarray(jax.jit(shard_map(lambda a: be.reduce_scatter(a[0], "x")[None],
+      mesh=mesh, in_specs=P("x", None, None, None),
+      out_specs=P("x", None, None, None), check_vma=False))(xr))
+assert np.allclose(z, expect_rs, atol=1e-4)
+w = np.asarray(jax.jit(shard_map(lambda a: be.all_reduce(a[0], "x"),
+      mesh=mesh, in_specs=P("x", None, None, None),
+      out_specs=P(None, None, None), check_vma=False))(xr))
+assert np.allclose(w, expect_rs, atol=1e-4)
 print("LATTE_OK")
 """
 
@@ -52,12 +78,18 @@ def test_latte_collectives_match_reference(subproc):
 
 
 def test_dispatch_tables_structure():
-    ag, aa = tpu_dispatch_tables(16)
+    ag, aa, rs, ar = tpu_dispatch_tables(16)
     assert ag[0].lo == 1024 and ag[-1].hi is None
     # contiguous, non-overlapping
     for a, b in zip(ag, ag[1:]):
         assert a.hi == b.lo
     assert ag[0].variant.endswith("b2b")
+    # reduce tables (DESIGN.md §10) carry reduce-family winners only
+    for table in (rs, ar):
+        assert table[0].lo == 1024 and table[-1].hi is None
+        for a, b in zip(table, table[1:]):
+            assert a.hi == b.lo
+        assert all(e.variant.endswith("_rs") for e in table)
 
 
 def test_kv_fetch_plan_threshold():

@@ -2,12 +2,15 @@
 
 The on-disk/bundled dispatch tables are keyed by a fingerprint of the cache
 version, the full topology repr (calibration included) and the sweep inputs.
-The v4 bump (pipelined ``pipe_`` sweeps, DESIGN.md §9) invalidates every
-v3/v2 table — those sweeps never saw the pipelined candidates, so serving
-them silently would pin the backend to pre-§9 policies.  These tests pin the
-fingerprint-mismatch path: stale entries are ignored, current entries round
-trip, and any calibration change alone also misses.
+The v5 bump (reduce collectives, DESIGN.md §10) invalidates every v4/v3/v2
+table — those sweeps never derived the reduce_scatter/all_reduce tables and
+never saw the reduce calibration, so serving them silently would pin the
+backend to pre-§10 policies (and crash the 4-tuple unpack).  These tests pin
+the fingerprint-mismatch path: stale entries are ignored, current entries
+round trip, and a calibration change alone — including a reduce-only
+recalibration — also misses.
 """
+import dataclasses
 import hashlib
 import json
 
@@ -32,22 +35,22 @@ def _isolate(tmp_path, monkeypatch, bundled: dict | None = None):
     monkeypatch.setattr(backend, "_BUNDLED_TABLES", str(bundled_path))
 
 
-_POISON = [[{"lo": 1024, "hi": None, "variant": "STALE", "chunk": None}]] * 2
+_POISON = [[{"lo": 1024, "hi": None, "variant": "STALE", "chunk": None}]] * 4
 
 
-def test_cache_version_is_v4():
-    """The pipelined sweep (DESIGN.md §9) requires the v4 fingerprint."""
-    assert backend._TABLE_CACHE_VERSION == 4
+def test_cache_version_is_v5():
+    """The reduce sweeps (DESIGN.md §10) require the v5 fingerprint."""
+    assert backend._TABLE_CACHE_VERSION == 5
 
 
 def test_stale_versioned_disk_tables_rejected(tmp_path, monkeypatch):
-    """v2/v3 disk entries (pre-pipelined sweeps) must never be served: their
-    file names carry the old fingerprint, so the v4 lookup misses."""
+    """v2/v3/v4 disk entries (pre-reduce sweeps) must never be served:
+    their file names carry the old fingerprint, so the v5 lookup misses."""
     _isolate(tmp_path, monkeypatch)
     topo = tpu_v5e_pod(16)
     sizes = backend._SWEEP_SIZES
     (tmp_path / "cache").mkdir()
-    for old in (2, 3):
+    for old in (2, 3, 4):
         stale = _key_for_version(topo, sizes, old)
         assert stale != backend._table_key(topo, sizes)
         path = tmp_path / "cache" / f"tables_{topo.name}_{stale}.json"
@@ -60,7 +63,7 @@ def test_stale_versioned_bundled_tables_rejected(tmp_path, monkeypatch):
     topo = tpu_v5e_pod(16)
     sizes = backend._SWEEP_SIZES
     _isolate(tmp_path, monkeypatch, bundled={
-        _key_for_version(topo, sizes, v): _POISON for v in (2, 3)})
+        _key_for_version(topo, sizes, v): _POISON for v in (2, 3, 4)})
     assert backend._load_table_cache(topo, sizes) is None
 
 
@@ -71,7 +74,9 @@ def test_current_fingerprint_round_trips(tmp_path, monkeypatch):
     topo = tpu_v5e_pod(16)
     sizes = backend._SWEEP_SIZES
     tables = ((DispatchEntry(1024, None, "prelaunch_pipe_bidir_ring", None),),
-              (DispatchEntry(1024, None, "prelaunch_swap", 1024 * 1024),))
+              (DispatchEntry(1024, None, "prelaunch_swap", 1024 * 1024),),
+              (DispatchEntry(1024, None, "prelaunch_pipe_bidir_ring_rs", None),),
+              (DispatchEntry(1024, None, "prelaunch_bidir_ring_rs", None),))
     backend._store_table_cache(topo, sizes, tables)
     assert backend._load_table_cache(topo, sizes) == tables
 
@@ -83,27 +88,57 @@ def test_calibration_change_alone_misses(tmp_path, monkeypatch):
     topo = tpu_v5e_pod(16)
     sizes = backend._SWEEP_SIZES
     tables = ((DispatchEntry(1024, None, "ring", None),),
-              (DispatchEntry(1024, None, "swap", None),))
+              (DispatchEntry(1024, None, "swap", None),),
+              (DispatchEntry(1024, None, "ring_rs", None),),
+              (DispatchEntry(1024, None, "ring_rs", None),))
     backend._store_table_cache(topo, sizes, tables)
     recal = tpu_v5e_pod(16, calib=Calibration(control=1e-9))
     assert recal.name == topo.name          # same file-name stem...
     assert backend._load_table_cache(recal, sizes) is None  # ...different key
 
 
-def test_bundled_tables_carry_current_fingerprint_and_pipe_winners():
-    """The shipped _dispatch_tables.json was regenerated for v4: its key
-    matches the current fingerprint and the AG table contains a pipelined
-    winner (the sweep really offered the §9 candidates)."""
+def test_reduce_calibration_only_change_misses(tmp_path, monkeypatch):
+    """A REDUCE-only recalibration (DESIGN.md §10: reduce_setup /
+    reduce_bytes_per_s, untouched by any pre-v5 sweep input) must miss on
+    its own — the reduce calibration is part of the v5 fingerprint via
+    topo!r."""
+    _isolate(tmp_path, monkeypatch)
+    topo = tpu_v5e_pod(16)
+    sizes = backend._SWEEP_SIZES
+    tables = ((DispatchEntry(1024, None, "ring", None),),
+              (DispatchEntry(1024, None, "swap", None),),
+              (DispatchEntry(1024, None, "pipe_ring_rs", None),),
+              (DispatchEntry(1024, None, "ring_rs", None),))
+    backend._store_table_cache(topo, sizes, tables)
+    recal = tpu_v5e_pod(16, calib=dataclasses.replace(
+        topo.calib, reduce_bytes_per_s=topo.calib.reduce_bytes_per_s * 2))
+    assert recal.name == topo.name
+    assert backend._table_key(recal, sizes) != backend._table_key(topo, sizes)
+    assert backend._load_table_cache(recal, sizes) is None
+    assert backend._load_table_cache(topo, sizes) == tables  # original serves
+
+
+def test_bundled_tables_carry_current_fingerprint_and_reduce_winners():
+    """The shipped _dispatch_tables.json was regenerated for v5: its key
+    matches the current fingerprint, it carries all four tables, the AG
+    table contains a pipelined winner and the RS/AR tables carry pipelined
+    reduce winners (the sweep really offered the §10 candidates)."""
     with open(backend._BUNDLED_TABLES) as f:
         bundled = json.load(f)
     topo = tpu_v5e_pod(16)
     key = backend._table_key(topo, backend._SWEEP_SIZES)
     assert key in bundled
-    ag, aa = backend._parse_tables(bundled[key])
+    ag, aa, rs, ar = backend._parse_tables(bundled[key])
     assert any("pipe_" in e.variant for e in ag)
+    assert any("pipe_" in e.variant for e in rs)
+    assert any("pipe_" in e.variant for e in ar)
     # every winner must strip to a known JAX implementation
     strip = backend.CommBackend()._strip
     for e in ag:
         assert strip(e.variant) in backend._AG_IMPL, e.variant
     for e in aa:
         assert strip(e.variant) in backend._AA_IMPL, e.variant
+    for e in rs:
+        assert strip(e.variant) in backend._RS_IMPL, e.variant
+    for e in ar:
+        assert strip(e.variant) in backend._AR_IMPL, e.variant

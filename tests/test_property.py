@@ -21,10 +21,13 @@ from hypothesis import given, settings, strategies as st
 import jax
 import jax.numpy as jnp
 
-from repro.core.dma import (allgather_schedule, alltoall_schedule, kv_fetch_schedule,
-                            link_traffic, mi300x_platform, simulate, tpu_v5e_pod,
-                            variant_latency)
-from repro.core.dma.claims import pipe_vs_final_chunk_ratio
+from repro.core.dma import (allgather_schedule, allreduce_schedule,
+                            alltoall_schedule, chunk_sizes, kv_fetch_schedule,
+                            link_traffic, mi300x_platform, reduce_scatter_schedule,
+                            reduce_work, simulate, tpu_v5e_pod, variant_latency)
+from repro.core.dma.claims import (pipe_vs_final_chunk_ratio,
+                                   rs_pipe_vs_final_chunk_ratio)
+from repro.core.dma.collectives import AR_AG_VARIANT, _pipe_granularity
 from repro.data.pipeline import DataConfig, synth_batch
 from repro.models.layers import apply_rotary, rope_angles
 from repro.serve.kvcache import blocks_to_kv, kv_to_blocks
@@ -60,6 +63,18 @@ variants_aa_direct = st.sampled_from([
 ])
 chunk_grains = st.sampled_from([0, 256 * KB, 1 * MB, 4 * MB])
 pipe_depths = st.sampled_from([1, 2, 4, 8])
+# The full reduce-scatter variant space (DESIGN.md §10): the ring reduce
+# family with every prelaunch_/opt_/pipe_ composition.
+variants_rs = st.sampled_from([
+    "ring_rs", "bidir_ring_rs", "pipe_ring_rs", "pipe_bidir_ring_rs",
+    "prelaunch_ring_rs", "prelaunch_bidir_ring_rs",
+    "opt_ring_rs", "opt_bidir_ring_rs",
+    "opt_pipe_ring_rs", "prelaunch_pipe_bidir_ring_rs",
+    "opt_prelaunch_pipe_ring_rs", "opt_prelaunch_pipe_bidir_ring_rs",
+])
+variants_rs_base = st.sampled_from([
+    "ring_rs", "bidir_ring_rs", "pipe_ring_rs", "pipe_bidir_ring_rs"])
+topologies = st.sampled_from([TOPO, TPU])
 
 
 _link_traffic = link_traffic
@@ -166,6 +181,78 @@ def test_pipe_beats_final_chunk_only_signaling(size, depth):
     signaling strictly beats final-chunk-only signaling of the same
     pipelined schedule across the mid-size band."""
     assert pipe_vs_final_chunk_ratio(TPU, size, depth) > 1.0
+
+
+@settings(max_examples=30, deadline=None)
+@given(size=sizes, v=variants_rs)
+def test_rs_per_link_bytes_match_allgather_rings(size, v):
+    """Conservation: a reduce-scatter moves exactly what its ring moves —
+    every device receives n-1 shard-sized partials, whatever the
+    variant/chunking/signaling grain (DESIGN.md §10)."""
+    sched = reduce_scatter_schedule(TOPO, size, v)
+    n = TOPO.n_devices
+    shard = max(1, size // n)
+    inbound = {d: 0 for d in range(n)}
+    for (_, dst), nbytes in _link_traffic(sched).items():
+        inbound[dst] += nbytes
+    assert inbound == {d: (n - 1) * shard for d in range(n)}
+
+
+@settings(max_examples=25, deadline=None)
+@given(size=st.integers(min_value=1 * MB, max_value=1 << 31), v=variants_rs,
+       grain_a=chunk_grains, grain_b=chunk_grains,
+       depth_a=pipe_depths, depth_b=pipe_depths)
+def test_rs_per_link_bytes_invariant_under_chunking_and_depth(
+        size, v, grain_a, grain_b, depth_a, depth_b):
+    """Chunk granularity AND pipeline depth never change WHAT a
+    reduce-scatter moves: per-(src, dst) byte totals are identical."""
+    a = _link_traffic(reduce_scatter_schedule(
+        TOPO, size, v, max_chunk_bytes=grain_a, pipe_depth=depth_a))
+    b = _link_traffic(reduce_scatter_schedule(
+        TOPO, size, v, max_chunk_bytes=grain_b, pipe_depth=depth_b))
+    assert a == b
+
+
+@settings(max_examples=30, deadline=None)
+@given(size=sizes, v=variants_rs, grain=chunk_grains, depth=pipe_depths,
+       topo=topologies)
+def test_rs_reduction_work_conserved(size, v, grain, depth, topo):
+    """Conservation of reduction work — the §10 invariant class that caught
+    PR 4's bidir off-by-one: each device performs exactly
+    (n-1) * shard_chunks chunk reductions totalling (n-1) * shard bytes,
+    under chunking AND pipe depth AND signaling grain."""
+    sched = reduce_scatter_schedule(topo, size, v, max_chunk_bytes=grain,
+                                    pipe_depth=depth)
+    n = topo.n_devices
+    shard = max(1, size // n)
+    g = _pipe_granularity(shard, depth, grain) if "pipe_" in v else grain
+    shard_chunks = len(chunk_sizes(shard, g))
+    assert reduce_work(sched) == \
+        {d: ((n - 1) * shard_chunks, (n - 1) * shard) for d in range(n)}
+
+
+@settings(max_examples=12, deadline=None)
+@given(size=st.sampled_from([512 * KB, 1 * MB, 2 * MB, 4 * MB, 8 * MB]),
+       depth=st.sampled_from([1, 2, 4, 8]),
+       v=st.sampled_from(["pipe_ring_rs", "pipe_bidir_ring_rs"]))
+def test_pipe_rs_never_slower_than_final_chunk_only(size, depth, v):
+    """§10 acceptance invariant: reducing each chunk as it lands never
+    loses to final-chunk-only signaling of the same schedule (strictly
+    wins at >= 2 chunks — pinned in tests/test_sim.py)."""
+    assert rs_pipe_vs_final_chunk_ratio(TPU, size, depth, v) >= 1.0 - 1e-9
+
+
+@settings(max_examples=15, deadline=None)
+@given(size=st.integers(min_value=64 * KB, max_value=1 << 28),
+       v=variants_rs_base, topo=topologies)
+def test_allreduce_not_slower_than_sequential_rs_then_ag(size, v, topo):
+    """The composed all-reduce (armed gather chained off the terminal
+    reductions, DESIGN.md §10) never loses to running reduce-scatter and
+    all-gather back to back."""
+    ar = simulate(allreduce_schedule(topo, size, v), topo).latency
+    rs = simulate(reduce_scatter_schedule(topo, size, v), topo).latency
+    ag = simulate(allgather_schedule(topo, size, AR_AG_VARIANT[v]), topo).latency
+    assert ar <= (rs + ag) * (1 + 1e-9)
 
 
 @settings(max_examples=25, deadline=None)

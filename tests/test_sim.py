@@ -1,20 +1,24 @@
 """Event-simulator core tests: contended resources, torus routing,
 cross-device waits, the symmetric fast path, dispatch derivation, the
 optimized command streams (DESIGN.md §7), chunked transfers plus the
-hot-path overhaul (DESIGN.md §8), and the per-chunk-signaled pipelined
-rings (DESIGN.md §9)."""
+hot-path overhaul (DESIGN.md §8), the per-chunk-signaled pipelined
+rings (DESIGN.md §9), and the reduce collectives (DESIGN.md §10)."""
 import pytest
 
 from repro.core.dma import (
-    allgather_schedule, alltoall_schedule, batch_commands, chunk_schedule,
-    commands as cmd, derive_dispatch, fuse_signals, mi300x_platform, optimize,
-    pipelined_variants, simulate, split_queues, tpu_v5e_pod, variant_latency,
+    allgather_schedule, allreduce_schedule, alltoall_schedule, batch_commands,
+    candidate_variants, chunk_schedule, commands as cmd, derive_dispatch,
+    fuse_signals, mi300x_platform, optimize, pipelined_variants,
+    reduce_scatter_schedule, reduce_variants, reduce_work, simulate,
+    split_queues, tpu_v5e_pod, variant_latency,
 )
 from repro.core.dma.claims import (
     optimized_power_claims,
     optimized_stream_claims,
     pipe_vs_final_chunk_ratio,
     pipelined_stream_claims,
+    reduce_stream_claims,
+    rs_pipe_vs_final_chunk_ratio,
 )
 from repro.core.dma.commands import CmdKind, EngineQueue, Schedule
 from repro.core.dma.optimizations import OptimizationConfig
@@ -696,6 +700,158 @@ class TestPipelinedRings:
                                   [2 ** i for i in range(10, 31)],
                                   allow_pipelined=True)
         assert any("pipe_" in e.variant for e in entries)
+
+
+class TestReduceScatter:
+    """Reduce collectives (DESIGN.md §10): per-chunk reduction costs,
+    pipelined reduce-scatter, the all-reduce composition and their claim
+    bands."""
+
+    def test_reduce_term_charged(self):
+        """A reduce-scatter carries strictly more work than the same ring's
+        all-gather (same traffic + n-1 per-shard reductions), and the
+        reduce term scales with the calibrated throughput."""
+        size = 8 * MB
+        rs = variant_latency(TPU, "reduce_scatter", size, "ring_rs")
+        ag = variant_latency(TPU, "all_gather", size, "ring")
+        assert rs > ag
+        import dataclasses
+        fast_calib = dataclasses.replace(TPU.calib, reduce_setup=0.0,
+                                         reduce_bytes_per_s=1e18)
+        fast_topo = tpu_v5e_pod(16, calib=fast_calib)
+        assert variant_latency(fast_topo, "reduce_scatter", size, "ring_rs") < rs
+
+    def test_sim_executes_every_scheduled_reduction(self):
+        """The event loop executes exactly the reductions the schedule
+        carries (SimResult.reduce_chunks == commands.reduce_work)."""
+        for v in ("ring_rs", "bidir_ring_rs", "pipe_ring_rs",
+                  "pipe_bidir_ring_rs"):
+            sched = reduce_scatter_schedule(TPU, 8 * MB, v)
+            res = simulate(sched, TPU)
+            want = {d: n for d, (n, _) in reduce_work(sched).items()}
+            assert res.reduce_chunks == want, v
+
+    def test_pipe_rs_beats_final_chunk_signaling_monotone(self):
+        """THE §10 acceptance claim: per-chunk reduction beats
+        final-chunk-only signaling of the same pipe_bidir_ring_rs schedule
+        at >= 2 chunks, monotone to the depth-4 sweep ceiling and still
+        > 1 one doubling past it."""
+        for size in (512 * KB, 1 * MB):
+            f = {d: rs_pipe_vs_final_chunk_ratio(TPU, size, d)
+                 for d in (1, 2, 4, 8)}
+            assert f[1] == pytest.approx(1.0, abs=1e-9), size   # structural
+            assert f[2] > 1.05, (size, f)                       # wins at 2 chunks
+            assert f[4] > f[2], (size, f)                       # monotone to ceiling
+            assert f[8] > 1.0, (size, f)                        # saturates, not flips
+
+    def test_pipe_rs_beats_fco_midband_both_variants(self):
+        for v in ("pipe_ring_rs", "pipe_bidir_ring_rs"):
+            for size in (2 * MB, 4 * MB, 8 * MB, 32 * MB):
+                assert rs_pipe_vs_final_chunk_ratio(TPU, size, 2, v) > 1.0, (v, size)
+
+    def test_reduce_claim_bands(self):
+        bad = [c for c in reduce_stream_claims() if not c.ok]
+        assert not bad, [
+            f"{c.name}: {c.model_value} not in [{c.lo},{c.hi}]" for c in bad]
+
+    @pytest.mark.parametrize("variant", [
+        "ring_rs", "bidir_ring_rs", "pipe_ring_rs", "pipe_bidir_ring_rs",
+        "opt_ring_rs", "opt_pipe_bidir_ring_rs",
+        "prelaunch_pipe_ring_rs", "opt_prelaunch_pipe_bidir_ring_rs"])
+    @pytest.mark.parametrize("topo", [MI, TPU], ids=["mi300x", "tpu16"])
+    def test_rs_symmetric_fast_path_bit_identical(self, topo, variant):
+        """Fast-path bit-identity with the reduce term present: the
+        one-device run must replicate the full simulation exactly on both
+        modeled platforms."""
+        sched = reduce_scatter_schedule(topo, 8 * MB, variant)
+        assert sched.symmetric
+        full = simulate(sched, topo, symmetric=False)
+        fast = simulate(sched, topo, symmetric=True)
+        assert fast.latency == full.latency
+        assert fast.per_device == full.per_device
+        assert fast.reduce_chunks == full.reduce_chunks
+
+    @pytest.mark.parametrize("variant", [
+        "ring_rs", "bidir_ring_rs", "pipe_ring_rs", "pipe_bidir_ring_rs"])
+    @pytest.mark.parametrize("topo", [MI, TPU], ids=["mi300x", "tpu16"])
+    def test_ar_symmetric_fast_path_bit_identical(self, topo, variant):
+        sched = allreduce_schedule(topo, 8 * MB, variant)
+        assert sched.symmetric
+        full = simulate(sched, topo, symmetric=False)
+        fast = simulate(sched, topo, symmetric=True)
+        assert fast.latency == full.latency
+        assert fast.per_device == full.per_device
+
+    @pytest.mark.parametrize("variant", ["pipe_ring_rs", "pipe_bidir_ring_rs"])
+    def test_rs_closed_form_chunk_run_matches_loop(self, variant):
+        """The §9.2 closed-form chunk run stays bit-identical with the
+        §10 reduce term downstream: the producer's run commits closed-form
+        and each chunk's semaphore wakes its parked reduction exactly as
+        the per-chunk loop would — on MI300X and the TPU torus."""
+        from repro.core.dma import sim as sim_mod
+
+        for topo in (MI, TPU):
+            sched = reduce_scatter_schedule(topo, 32 * MB, variant,
+                                            pipe_depth=8)
+            fast = simulate(sched, topo)
+            orig = sim_mod._Sim._chunk_run
+            sim_mod._Sim._chunk_run = lambda *a, **k: False
+            try:
+                slow = simulate(sched, topo)
+            finally:
+                sim_mod._Sim._chunk_run = orig
+            assert fast.latency == pytest.approx(slow.latency, rel=1e-12)
+            for d in fast.per_device:
+                for ph in ("control", "schedule", "copy", "sync"):
+                    assert getattr(fast.per_device[d], ph) == pytest.approx(
+                        getattr(slow.per_device[d], ph), rel=1e-12, abs=1e-15)
+
+    @pytest.mark.parametrize("n", [9, 15])
+    def test_odd_grid_rs_runs_full_loop(self, n):
+        """Odd-row tori: the snake ring's wraparound is multi-hop, so the
+        reduce schedules are not symmetric and must run (and resolve all
+        chunk-granularity reduce waits in) the full event loop."""
+        topo = tpu_v5e_pod(n)
+        for v in ("ring_rs", "pipe_bidir_ring_rs"):
+            sched = reduce_scatter_schedule(topo, 4 * MB, v)
+            assert not sched.symmetric
+            res = simulate(sched, topo)
+            assert 0 < res.latency < 1.0
+        ar = allreduce_schedule(topo, 4 * MB, "pipe_ring_rs")
+        assert not ar.symmetric
+        assert 0 < simulate(ar, topo).latency < 1.0
+
+    def test_rs_queues_never_slot_split(self):
+        """§7.2 x §10: a reduce stream never slot-splits across the chunk
+        boundary — opt_ reduce schedules keep every queue on slot 0."""
+        for v in ("opt_ring_rs", "opt_pipe_ring_rs", "opt_pipe_bidir_ring_rs"):
+            sched = reduce_scatter_schedule(TPU, 8 * MB, v)
+            assert {q.slot for q in sched.queues} == {0}, v
+
+    def test_reduce_dispatch_needs_opt_in(self):
+        """reduce_scatter/all_reduce sweeps require allow_reduce=True."""
+        with pytest.raises(ValueError, match="allow_reduce"):
+            candidate_variants(TPU, "reduce_scatter")
+        with pytest.raises(ValueError, match="allow_reduce"):
+            derive_dispatch(TPU, "all_reduce", [4 * MB])
+
+    def test_reduce_dispatch_carries_pipe_winner(self):
+        vs = reduce_variants(TPU)
+        assert "pipe_bidir_ring_rs" in vs
+        assert "opt_prelaunch_pipe_ring_rs" in vs
+        entries = derive_dispatch(TPU, "reduce_scatter",
+                                  [2 ** i for i in range(10, 31)],
+                                  allow_pipelined=True, allow_reduce=True)
+        assert all(e.variant.endswith("_rs") for e in entries)
+        assert any("pipe_" in e.variant for e in entries)
+
+    def test_ar_deadlock_free_without_prelaunch_gate(self):
+        """The armed gather phase parks on the reduce phase's result tags;
+        a deadlock here would mean the terminal reductions never raised
+        them.  Exercise the non-symmetric full loop too."""
+        res = simulate(allreduce_schedule(TPU, 1 * MB, "pipe_bidir_ring_rs"),
+                       TPU, symmetric=False)
+        assert 0 < res.latency < 1.0
 
 
 class TestHostTimelineIndependence:

@@ -8,11 +8,16 @@ Checks, over the whole repo:
 2. README.md exists and every ``benchmarks/<x>.py`` / ``src/...`` /
    ``tests/...`` path it mentions exists on disk.
 3. The markdown files README.md links to exist.
+4. Every claim name defined in ``claims.py`` is mentioned in README.md's
+   figure→benchmark→claims map (literally, or covered by a ``prefix_*``
+   wildcard the map uses for claim families) — a claim band without a
+   documented entry point is how reproduction results silently rot.
 
 Exit code 0 when everything resolves; 1 with a line per broken reference.
 """
 from __future__ import annotations
 
+import fnmatch
 import re
 import sys
 from pathlib import Path
@@ -23,6 +28,8 @@ SOURCE_DIRS = ("src", "benchmarks", "tests", "examples", "tools")
 CITATION = re.compile(r"DESIGN\.md\s+§(\d+(?:\.\d+)?)")
 REPO_PATH = re.compile(r"\b((?:src|benchmarks|tests|examples|tools)/[\w./-]+\.\w+)")
 MD_LINK = re.compile(r"\]\(([\w./-]+\.md)\)")
+CLAIM_NAME = re.compile(r"Claim\(\s*\"([A-Za-z0-9_]+)\"")
+README_WILDCARD = re.compile(r"`([a-z0-9_]+_\*)`")
 
 
 def design_anchors(design_text: str) -> set[str]:
@@ -60,7 +67,28 @@ def check() -> list[str]:
         for rel in sorted({*MD_LINK.findall(text)}):
             if not (ROOT / rel).exists():
                 errors.append(f"README.md links to missing doc {rel}")
+        errors.extend(check_claim_coverage(text))
 
+    return errors
+
+
+def check_claim_coverage(readme_text: str) -> list[str]:
+    """Every claim name in claims.py must appear in README.md — literally
+    or via a ``prefix_*`` wildcard in the figure→claims map."""
+    claims_path = ROOT / "src" / "repro" / "core" / "dma" / "claims.py"
+    if not claims_path.exists():
+        return ["src/repro/core/dma/claims.py is missing"]
+    names = CLAIM_NAME.findall(claims_path.read_text())
+    wildcards = README_WILDCARD.findall(readme_text)
+    errors = []
+    for name in sorted(set(names)):
+        if name in readme_text:
+            continue
+        if any(fnmatch.fnmatch(name, w) for w in wildcards):
+            continue
+        errors.append(
+            f"claims.py defines claim {name!r} but README.md's "
+            "figure→benchmark→claims map never mentions it")
     return errors
 
 
