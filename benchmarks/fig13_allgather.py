@@ -10,12 +10,20 @@ optimized-collective claim bands (~30% slower than RCCL at small sizes,
 ``--pipelined`` adds the per-chunk-signaled pipelined ring curves
 (DESIGN.md §9), the chunk-depth sensitivity against final-chunk-only
 signaling, and the §9 claim bands.
+
+``--hierarchical`` swaps in the 2-node MI300X RDMA cluster (DESIGN.md §11)
+and emits the flat-vs-hierarchical all-gather curves — flat ring, direct
+fan-out, ``hier_ring``, ``hier_pipe`` — plus the §11 claim bands
+(``hier_ag_nic_gain``, ``hier_pipe_overlap_gain``).
 """
 from __future__ import annotations
 
 from repro.core.dma import (allgather_schedule, derive_dispatch, mi300x_platform,
                             paper_dispatch, rccl_ag_calibration, simulate)
+from repro.core.dma.claims import hierarchical_stream_claims
+from repro.core.dma.dispatch import variant_latency
 from repro.core.dma.rccl_model import rccl_collective_latency
+from repro.core.dma.topology import mi300x_cluster
 from .common import (ALL_SIZES, MB, SMALL_SIZES, ClaimChecker, fmt_size,
                      geomean, optimized_report, pipelined_report)
 
@@ -23,7 +31,35 @@ VARIANTS = ("pcpy", "bcst", "b2b", "prelaunch_pcpy", "prelaunch_bcst", "prelaunc
 OPT_VARIANTS = tuple(f"opt_{v}" for v in VARIANTS)
 
 
-def run(verbose: bool = True, optimized: bool = False, pipelined: bool = False):
+#: --hierarchical curve variants: the two flat streams the cluster could run
+#: unchanged vs the two-tier decompositions (DESIGN.md §11).
+HIER_VARIANTS = ("ring", "pcpy", "hier_ring", "hier_pipe")
+
+
+def hierarchical_report(cc: ClaimChecker, verbose: bool) -> None:
+    """Flat-vs-hierarchical AG curves on the 2-node MI300X cluster plus the
+    §11 claim bands.  Sizes start at 1MB: below that the comparison is a
+    NIC-latency shootout the claims don't cover, and the flat streams run
+    the full (non-symmetric) event loop, so the probe grid stays modest."""
+    cluster = mi300x_cluster(2)
+    sizes = [s for s in ALL_SIZES if s >= 1 * MB]
+    lat = {v: {s: variant_latency(cluster, "all_gather", s, v) for s in sizes}
+           for v in HIER_VARIANTS}
+    if verbose:
+        print(f"\n== hierarchical all-gather, {cluster.name} "
+              "(speedup vs flat ring, DESIGN.md §11) ==")
+        print("size   " + "".join(f"{v:>12}" for v in HIER_VARIANTS))
+        for s in sizes:
+            print(f"{fmt_size(s):>5} "
+                  + "".join(f"{lat['ring'][s] / lat[v][s]:12.2f}"
+                            for v in HIER_VARIANTS))
+    for claim in hierarchical_stream_claims(cluster):
+        cc.check(claim.description, claim.model_value, claim.paper_value,
+                 claim.lo, claim.hi)
+
+
+def run(verbose: bool = True, optimized: bool = False, pipelined: bool = False,
+        hierarchical: bool = False):
     topo = mi300x_platform()
     rc = rccl_ag_calibration()
     variants = VARIANTS + OPT_VARIANTS if optimized else VARIANTS
@@ -82,6 +118,8 @@ def run(verbose: bool = True, optimized: bool = False, pipelined: bool = False):
         optimized_report(cc, topo, "all_gather", lat, rccl, verbose)
     if pipelined:
         pipelined_report(cc, topo, "all_gather", lat, rccl, verbose)
+    if hierarchical:
+        hierarchical_report(cc, verbose)
     return cc, lat
 
 
@@ -95,8 +133,13 @@ def main(argv=None):
     p.add_argument("--pipelined", action="store_true",
                    help="also sweep the per-chunk-signaled pipelined rings "
                         "(DESIGN.md §9) and check the §9 claim bands")
+    p.add_argument("--hierarchical", action="store_true",
+                   help="also emit the flat-vs-hierarchical curves on the "
+                        "2-node MI300X cluster (DESIGN.md §11) and check "
+                        "the §11 claim bands")
     args = p.parse_args(argv)
-    cc, _ = run(optimized=args.optimized, pipelined=args.pipelined)
+    cc, _ = run(optimized=args.optimized, pipelined=args.pipelined,
+                hierarchical=args.hierarchical)
     return 0 if cc.report() else 1
 
 

@@ -12,6 +12,14 @@ speedup on the reference chunked 8-device GB-scale all-to-all sweep.
 simulator's sweep and writes a JSON report next to the dispatch-sweep cache
 (``$REPRO_DISPATCH_CACHE``) so the perf numbers ride the same artifact.
 
+``--sweep`` times the other perf-guarded layer (DESIGN.md §11.3): the
+vectorized dispatch-sweep fast path (representative-only builds) against
+the historical per-point loop (full schedule build + ``simulate()`` per
+(variant, size, chunk) point) on the 64-device TPU multislice all-gather
+sweep — the derivation the v6 multi-node tables depend on.  Latencies are
+asserted bit-identical point by point; ``--sweep --check`` enforces the
+>=5x throughput floor and a wall budget on the fast path.
+
 Both simulators produce the same latencies (asserted per scenario): the
 overhaul changes data structures, not semantics.
 """
@@ -23,8 +31,13 @@ import os
 import time
 from collections import defaultdict
 
+from repro.core.backend import _SWEEP_CHUNKS, _SWEEP_SIZES
 from repro.core.dma import alltoall_schedule, mi300x_platform, simulate
+from repro.core.dma.collectives import allgather_schedule
 from repro.core.dma.commands import DATA_KINDS, CmdKind
+from repro.core.dma.dispatch import candidate_variants
+from repro.core.dma.sweep import sweep_variant_latencies
+from repro.core.dma.topology import tpu_v5e_multislice
 
 GB = 1024 * 1024 * 1024
 
@@ -37,6 +50,13 @@ SCENARIOS = tuple(
 
 MIN_SPEEDUP = 5.0        # acceptance floor; the overhaul lands far above
 BUDGET_S = 2.5           # --check: new-sim wall budget for the whole sweep
+
+#: --sweep acceptance floor (DESIGN.md §11.3): the vectorized fast path
+#: must beat the per-point loop >=5x on the tpu64 all-gather sweep (it
+#: lands far above — the per-device build work it deletes grows linearly
+#: with device count), inside a wall budget that keeps CI honest.
+SWEEP_MIN_SPEEDUP = 5.0
+SWEEP_BUDGET_S = 2.0
 
 
 # --------------------------------------------------------------------------
@@ -283,12 +303,64 @@ def run(verbose: bool = True) -> dict:
     return report
 
 
-def _json_path() -> str:
+def run_sweep(verbose: bool = True) -> dict:
+    """Time the vectorized dispatch sweep against the per-point loop
+    (DESIGN.md §11.3) on the tpu64 all-gather derivation, asserting
+    bit-identity point by point."""
+    topo = tpu_v5e_multislice(64)
+    sizes = tuple(_SWEEP_SIZES)
+    variants = candidate_variants(topo, "all_gather", allow_pipelined=True,
+                                  allow_optimized=True)
+    candidates = [(v, ch) for v in variants for ch in _SWEEP_CHUNKS]
+
+    t0 = time.perf_counter()
+    fast = {}
+    for v, ch in candidates:
+        lats = sweep_variant_latencies(topo, "all_gather", sizes, v, ch)
+        assert lats is not None, f"{v} lost the symmetric fast path on tpu64"
+        fast[(v, ch)] = lats
+    t_fast = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    ref = {}
+    for v, ch in candidates:
+        ref[(v, ch)] = [
+            simulate(allgather_schedule(topo, s, v, max_chunk_bytes=ch),
+                     topo).latency
+            for s in sizes]
+    t_ref = time.perf_counter() - t0
+
+    for key in candidates:
+        if fast[key] != ref[key]:
+            raise AssertionError(
+                f"vectorized sweep diverged from per-point loop on {key}")
+
+    n_points = len(candidates) * len(sizes)
+    speedup = t_ref / t_fast
+    report = {
+        "topology": topo.name,
+        "collective": "all_gather",
+        "points": n_points,
+        "wall_fast_s": t_fast,
+        "wall_per_point_s": t_ref,
+        "speedup": speedup,
+        "min_speedup": SWEEP_MIN_SPEEDUP,
+        "budget_s": SWEEP_BUDGET_S,
+    }
+    if verbose:
+        print(f"tpu64 all-gather dispatch sweep ({n_points} points): "
+              f"fast {t_fast:.3f}s  per-point {t_ref:.3f}s  "
+              f"{speedup:.1f}x speedup (floor {SWEEP_MIN_SPEEDUP}x, "
+              f"fast-path budget {SWEEP_BUDGET_S}s)")
+    return report
+
+
+def _json_path(name: str = "sim_perf.json") -> str:
     cache_dir = os.environ.get("REPRO_DISPATCH_CACHE")
     if cache_dir:
         os.makedirs(cache_dir, exist_ok=True)
-        return os.path.join(cache_dir, "sim_perf.json")
-    return "sim_perf.json"
+        return os.path.join(cache_dir, name)
+    return name
 
 
 def main(argv=None) -> int:
@@ -299,8 +371,32 @@ def main(argv=None) -> int:
                         "report next to the dispatch-sweep cache")
     p.add_argument("--json", default=None,
                    help="explicit JSON report path (default: "
-                        "$REPRO_DISPATCH_CACHE/sim_perf.json)")
+                        "$REPRO_DISPATCH_CACHE/sim_perf.json, or "
+                        "sim_perf_sweep.json with --sweep)")
+    p.add_argument("--sweep", action="store_true",
+                   help="benchmark the vectorized dispatch-sweep fast path "
+                        "against the per-point loop on tpu64 (DESIGN.md "
+                        "§11.3) instead of the simulator hot path")
     args = p.parse_args(argv)
+    if args.sweep:
+        report = run_sweep()
+        if args.check or args.json:
+            path = args.json or _json_path("sim_perf_sweep.json")
+            with open(path, "w") as f:
+                json.dump(report, f, indent=1)
+            print(f"wrote {path}")
+        if not args.check:
+            return 0
+        ok = True
+        if report["speedup"] < SWEEP_MIN_SPEEDUP:
+            print(f"FAIL: sweep speedup {report['speedup']:.1f}x < "
+                  f"{SWEEP_MIN_SPEEDUP}x floor")
+            ok = False
+        if report["wall_fast_s"] > SWEEP_BUDGET_S:
+            print(f"FAIL: fast-path wall {report['wall_fast_s']:.3f}s "
+                  f"exceeds {SWEEP_BUDGET_S}s budget")
+            ok = False
+        return 0 if ok else 1
     report = run()
     if args.check or args.json:
         path = args.json or _json_path()

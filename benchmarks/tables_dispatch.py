@@ -1,7 +1,14 @@
 """Tables 2 & 3: the paper's size-range dispatch vs the dispatch re-derived
 from the calibrated timing model (MI300X) and re-derived for the TPU v5e
-topology (what the latte CommBackend actually uses)."""
+topology (what the latte CommBackend actually uses).
+
+``tpu_devices`` parameterizes the TPU slice size (any count
+``tpu_dispatch_tables`` accepts); the multi-node hierarchical sweeps
+(tpu64/tpu256/mi300x-2node, DESIGN.md §11) live in
+``benchmarks/tables_multinode.py``."""
 from __future__ import annotations
+
+import argparse
 
 from repro.core.backend import tpu_dispatch_tables
 from repro.core.dma import (PAPER_AA_DISPATCH, PAPER_AG_DISPATCH, derive_dispatch,
@@ -9,7 +16,7 @@ from repro.core.dma import (PAPER_AA_DISPATCH, PAPER_AG_DISPATCH, derive_dispatc
 from .common import ALL_SIZES, ClaimChecker, fmt_size
 
 
-def run(verbose: bool = True):
+def run(verbose: bool = True, tpu_devices: int = 16):
     topo = mi300x_platform()
     cc = ClaimChecker("tables")
     for coll, paper_table in (("all_gather", PAPER_AG_DISPATCH),
@@ -36,9 +43,10 @@ def run(verbose: bool = True):
                 agree += 1
         frac = agree / len(probes)
         cc.check(f"{coll}: derived dispatch agrees with paper table", frac, 1.0, 0.6, 1.0)
-    ag, aa, rs, ar = tpu_dispatch_tables(16)
+    ag, aa, rs, ar = tpu_dispatch_tables(tpu_devices)
     if verbose:
-        print("== TPU v5e re-derived thresholds (used by CommBackend('latte')) ==")
+        print(f"== TPU v5e ({tpu_devices} devices) re-derived thresholds "
+              "(used by CommBackend('latte')) ==")
         for name, t in (("all_gather", ag), ("all_to_all", aa),
                         ("reduce_scatter", rs), ("all_reduce", ar)):
             for e in t:
@@ -53,7 +61,12 @@ def run(verbose: bool = True):
 
 
 def main():
-    cc, _ = run()
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--tpu-devices", type=int, default=16,
+                   help="TPU slice size for the re-derived tables "
+                        "(default 16, the paper-scale pod)")
+    args = p.parse_args()
+    cc, _ = run(tpu_devices=args.tpu_devices)
     return 0 if cc.report() else 1
 
 

@@ -17,7 +17,8 @@ import tempfile
 
 from . import collectives as coll
 from .dma.dispatch import DispatchEntry, derive_dispatch
-from .dma.topology import Topology, tpu_v5e_pod
+from .dma.topology import (Topology, mi300x_cluster, tpu_v5e_multislice,
+                           tpu_v5e_pod)
 
 KB = 1024
 MB = 1024 * 1024
@@ -38,7 +39,13 @@ MB = 1024 * 1024
 # (Calibration.reduce_setup / reduce_bytes_per_s, embedded via topo!r) joins
 # the fingerprint; v4 tables carry neither, so they must miss and re-derive
 # (regression-tested in tests/test_dispatch_cache.py).
-_TABLE_CACHE_VERSION = 5
+# v6: hierarchical multi-node collectives (DESIGN.md §11) — bundled tables
+# grow the tpu64/tpu256/mi300x-2node hier sweeps and the NIC calibration
+# (Calibration.nic_latency / nic_bytes_per_s, embedded via topo!r) joins the
+# fingerprint; v5 tables never saw the hier candidates or the NIC tier, so
+# they must miss and re-derive (regression-tested in
+# tests/test_dispatch_cache.py).
+_TABLE_CACHE_VERSION = 6
 # The size sweep behind every cached/bundled table; part of the cache key.
 _SWEEP_SIZES = [2 ** i for i in range(10, 31)]
 # Chunk granularities the table sweep offers the argmin (DESIGN.md §8.1):
@@ -124,6 +131,12 @@ _AG_IMPL = {
     "bidir_ring": coll.bidir_ring_all_gather,
     "pipe_b2b": coll.ring_all_gather,
     "pipe_bidir_ring": coll.bidir_ring_all_gather,
+    # Hierarchical winners (DESIGN.md §11): XLA lowers a multislice
+    # all-gather to exactly the two-tier decomposition the hier_ variants
+    # model (intra-slice ring + DCN exchange), so both map onto the ring
+    # rendering — the dispatch *threshold* is what the table contributes.
+    "hier_ring": coll.ring_all_gather,
+    "hier_pipe": coll.ring_all_gather,
 }
 _AA_IMPL = {
     "pcpy": coll.reference_all_to_all,
@@ -141,12 +154,16 @@ _RS_IMPL = {
     "bidir_ring_rs": coll.ring_reduce_scatter,
     "pipe_ring_rs": coll.ring_reduce_scatter,
     "pipe_bidir_ring_rs": coll.ring_reduce_scatter,
+    "hier_ring_rs": coll.ring_reduce_scatter,
+    "hier_pipe_rs": coll.ring_reduce_scatter,
 }
 _AR_IMPL = {
     "ring_rs": coll.ring_all_reduce,
     "bidir_ring_rs": coll.ring_all_reduce,
     "pipe_ring_rs": coll.ring_all_reduce,
     "pipe_bidir_ring_rs": coll.ring_all_reduce,
+    "hier_ring_rs": coll.ring_all_reduce,
+    "hier_pipe_rs": coll.ring_all_reduce,
 }
 
 
@@ -179,6 +196,53 @@ def tpu_dispatch_tables(n_devices: int = 16):
     return ag, aa, rs, ar
 
 
+#: Multi-node topology builders the bundled v6 tables cover (DESIGN.md §11):
+#: 4- and 16-slice TPU v5e multislices plus a 2-node MI300X RDMA cluster.
+MULTINODE_TOPOS = {
+    "tpu64": lambda: tpu_v5e_multislice(64),
+    "tpu256": lambda: tpu_v5e_multislice(256),
+    "mi300x-2node": lambda: mi300x_cluster(2),
+}
+
+
+def _derive_multinode(topo: Topology):
+    """Derive the (ag, rs, ar) tables for one multi-node topology.
+
+    No all_to_all sweep — it has no hierarchical rendering and raises
+    (DESIGN.md §11).  The hier sweep offers the full ``opt_``/``prelaunch_``
+    composition: unlike the single-node paper tables (kept baseline-only so
+    Tables 2/3 stay reproducible as published) there is no published
+    multi-node baseline to preserve, so the table should simply be the best
+    modeled stream.  Only derivable in CI budgets because every hier
+    candidate runs the vectorized sweep fast path (DESIGN.md §11.3).
+    """
+    sizes = _SWEEP_SIZES
+    kw = dict(allow_pipelined=True, allow_optimized=True,
+              chunk_sizes=_SWEEP_CHUNKS)
+    ag = tuple(derive_dispatch(topo, "all_gather", sizes, **kw))
+    rs = tuple(derive_dispatch(topo, "reduce_scatter", sizes,
+                               allow_reduce=True, **kw))
+    ar = tuple(derive_dispatch(topo, "all_reduce", sizes,
+                               allow_reduce=True, **kw))
+    return ag, rs, ar
+
+
+@functools.lru_cache(maxsize=8)
+def multinode_dispatch_tables(spec: str = "tpu64"):
+    """Hierarchical dispatch tables for a multi-node topology (DESIGN.md
+    §11): ``(ag, rs, ar)`` entry tuples for a :data:`MULTINODE_TOPOS` spec.
+    Same cache discipline as :func:`tpu_dispatch_tables` — in-process memo,
+    disk cache, bundled package copy keyed by the v6 fingerprint."""
+    topo = MULTINODE_TOPOS[spec]()
+    sizes = _SWEEP_SIZES
+    cached = _load_table_cache(topo, sizes)
+    if cached is not None:
+        return cached
+    tables = _derive_multinode(topo)
+    _store_table_cache(topo, sizes, tables)
+    return tables
+
+
 def _pick(entries, size: int) -> str:
     for e in entries:
         if size >= e.lo and (e.hi is None or size < e.hi):
@@ -193,7 +257,12 @@ class CommBackend:
     b2b_fanout_threshold: int = 4 * MB   # paper §5.3.1 empirical threshold
 
     def _strip(self, v: str) -> str:
-        return v[len("prelaunch_"):] if v.startswith("prelaunch_") else v
+        # opt_/prelaunch_ change the command stream's scheduling envelope,
+        # not which JAX collective implements the winner.
+        for prefix in ("opt_", "prelaunch_"):
+            if v.startswith(prefix):
+                v = v[len(prefix):]
+        return v
 
     def all_gather(self, x, axis_name: str):
         """Called inside shard_map.  Returns stacked [n, *x.shape]."""
@@ -250,13 +319,20 @@ class CommBackend:
         return {"mode": "b2b", "fanout": 4, "optimized": True}
 
 
-def regenerate_bundled_tables(device_counts=(16,)) -> str:
-    """Derive the standard TPU dispatch tables and write the bundled package
-    copy (`python -m repro.core.backend`).  Run after any simulator or
+def regenerate_bundled_tables(device_counts=(16,),
+                              multinode=tuple(MULTINODE_TOPOS)) -> str:
+    """Derive the standard TPU dispatch tables plus the multi-node hier
+    tables (DESIGN.md §11) and write the bundled package copy
+    (`python -m repro.core.backend`).  Run after any simulator or
     calibration change (and bump _TABLE_CACHE_VERSION if the key inputs did
     not change but the semantics did).  Also writes through to the disk
     cache ($REPRO_DISPATCH_CACHE) so CI can upload the sweep artifact."""
     out = {}
+    for spec in multinode:
+        topo = MULTINODE_TOPOS[spec]()
+        tables = _derive_multinode(topo)
+        _store_table_cache(topo, _SWEEP_SIZES, tables)
+        out[_table_key(topo, _SWEEP_SIZES)] = _serialize_tables(tables)
     for n in device_counts:
         topo = tpu_v5e_pod(n)
         sizes = _SWEEP_SIZES

@@ -57,8 +57,38 @@ raise result tags that gate the all-gather's source queue chunk by chunk,
 so the gather phase starts on the first *reduced* chunk instead of the
 whole reduced shard.
 
+Hierarchical multi-node collectives (DESIGN.md §11): on a topology with
+``n_nodes > 1`` the ``hier_`` variants split every collective into an
+intra-node tier (DMA links) and an inter-node tier (each device's NIC):
+
+* ``hier_ring`` (all-gather) — ring all-gather across the *rank group*
+  (same local rank, one device per node, each hop a NIC transfer), then a
+  ring all-gather of the gathered node-blocks around each node's local
+  ring.  Only ``(n_nodes - 1) / n_nodes`` of the payload ever crosses a
+  NIC, vs everything on a flat ring whose node-boundary hops are NICs.
+* ``hier_pipe`` (all-gather) — same two tiers, but the intra tier runs one
+  sub-round per node-block and sub-round ``j`` is gated only on inter-node
+  arrival ``j - 1``, so the local gather of block ``j`` overlaps the NIC
+  transfer of block ``j + 1``.
+* ``hier_ring_rs`` / ``hier_pipe_rs`` (reduce-scatter / all-reduce) — the
+  reverse composition: ring reduce-scatter of node-blocks within the node,
+  then ring reduce-scatter of the result shard across the rank group; the
+  ``pipe`` rendering slices the inter tier per result shard so NIC sends
+  start on the first node-reduced slice.
+
+All ``hier_`` builders are translation invariant (every device runs the
+same queue shapes; NICs are sender-owned) so the symmetric fast path (§6)
+applies whenever each node's local ring closes on physical neighbors, and
+the ``opt_`` / ``prelaunch_`` prefixes compose exactly as for the flat
+variants.
+
 Size convention: ``size`` is the collective's *total message size* as in the
 paper's figures (1KB–4GB).  Each device's per-peer shard is ``size / n``.
+
+Representative-only builds (DESIGN.md §11.3): every public builder takes
+``device=<d>`` to construct only that device's queues — the dispatch sweep
+builds just the symmetric representative, which is what makes schedule
+construction (the sweep's dominant cost) O(1) in device count.
 """
 from __future__ import annotations
 
@@ -75,6 +105,12 @@ AG_VARIANTS = ("pcpy", "bcst", "b2b", "ring", "bidir_ring",
                "pipe_b2b", "pipe_bidir_ring")
 AA_VARIANTS = ("pcpy", "swap", "b2b", "ring", "pipe_b2b")
 RS_VARIANTS = ("ring_rs", "bidir_ring_rs", "pipe_ring_rs", "pipe_bidir_ring_rs")
+
+#: Hierarchical two-tier variants (DESIGN.md §11) — only buildable on
+#: topologies with ``n_nodes > 1``; kept out of the flat tuples so existing
+#: single-node sweeps/claims are untouched.
+HIER_AG_VARIANTS = ("hier_ring", "hier_pipe")
+HIER_RS_VARIANTS = ("hier_ring_rs", "hier_pipe_rs")
 
 #: Default pipeline depth of the ``pipe_`` variants (DESIGN.md §9): the
 #: minimum number of chunk commands a shard is split into.  Deeper splits
@@ -134,11 +170,21 @@ def _bidir_split(n: int) -> tuple[int, int]:
     return n_fwd, (n - 1) - n_fwd
 
 
-def _ring_neighbors(topo: Topology) -> dict[int, tuple[int, int]]:
-    """device -> (predecessor, successor) along the topology's ring embedding."""
+def _ring_neighbors(topo: Topology,
+                    device: int | None = None) -> dict[int, tuple[int, int]]:
+    """device -> (predecessor, successor) along the topology's ring embedding.
+
+    ``device`` restricts the map to that one device (representative-only
+    builds, DESIGN.md §11.3) — neighbors are still resolved on the full
+    ring, only the iteration shrinks.
+    """
     order = topo.ring_order()
     n = len(order)
-    return {order[i]: (order[(i - 1) % n], order[(i + 1) % n]) for i in range(n)}
+    items = ((order[i], (order[(i - 1) % n], order[(i + 1) % n]))
+             for i in range(n))
+    if device is None:
+        return dict(items)
+    return {d: ps for d, ps in items if d == device}
 
 
 def _ring_closes_on_neighbors(topo: Topology) -> bool:
@@ -151,11 +197,12 @@ def _ring_closes_on_neighbors(topo: Topology) -> bool:
     return all(topo.is_neighbor(order[i], order[(i + 1) % n]) for i in range(n))
 
 
-def _ring_ag_queues(topo: Topology, shard: int) -> list[EngineQueue]:
+def _ring_ag_queues(topo: Topology, shard: int,
+                    device: int | None = None) -> list[EngineQueue]:
     """Unidirectional ring all-gather: n-1 chained forward steps per device."""
     n = topo.n_devices
     queues = []
-    for d, (pred, succ) in _ring_neighbors(topo).items():
+    for d, (pred, succ) in _ring_neighbors(topo, device).items():
         cs: list[cmd.Command] = []
         for k in range(n - 1):
             if k > 0:
@@ -167,7 +214,8 @@ def _ring_ag_queues(topo: Topology, shard: int) -> list[EngineQueue]:
     return queues
 
 
-def _bidir_ring_ag_queues(topo: Topology, shard: int) -> list[EngineQueue]:
+def _bidir_ring_ag_queues(topo: Topology, shard: int,
+                          device: int | None = None) -> list[EngineQueue]:
     """Bidirectional ring all-gather: ceil((n-1)/2) forward + floor((n-1)/2)
     backward deliveries; the step-0 send reads the local shard ONCE for both
     directions (a bcst command), covering forward AND backward distance 1,
@@ -177,7 +225,7 @@ def _bidir_ring_ag_queues(topo: Topology, shard: int) -> list[EngineQueue]:
     n = topo.n_devices
     n_fwd, n_bwd = _bidir_split(n)
     queues = []
-    for d, (pred, succ) in _ring_neighbors(topo).items():
+    for d, (pred, succ) in _ring_neighbors(topo, device).items():
         fwd: list[cmd.Command] = []
         if n == 2:
             fwd.append(cmd.copy(d, succ, shard))
@@ -204,12 +252,13 @@ def _bidir_ring_ag_queues(topo: Topology, shard: int) -> list[EngineQueue]:
     return queues
 
 
-def _ring_aa_queues(topo: Topology, shard: int) -> list[EngineQueue]:
+def _ring_aa_queues(topo: Topology, shard: int,
+                    device: int | None = None) -> list[EngineQueue]:
     """Rotation ring all-to-all: every chunk moves one hop per round until it
     reaches its destination, so round r forwards n-1-r chunks."""
     n = topo.n_devices
     queues = []
-    for d, (pred, succ) in _ring_neighbors(topo).items():
+    for d, (pred, succ) in _ring_neighbors(topo, device).items():
         cs: list[cmd.Command] = []
         for r in range(n - 1):
             if r > 0:
@@ -230,7 +279,8 @@ def _pipe_granularity(payload: int, depth: int, mcb: int) -> int:
 
 
 def _pipe_ring_ag_queues(topo: Topology, shard: int, granularity: int,
-                         per_chunk: bool) -> list[EngineQueue]:
+                         per_chunk: bool,
+                         device: int | None = None) -> list[EngineQueue]:
     """Pipelined unidirectional ring all-gather (``pipe_b2b``, DESIGN.md §9).
 
     One engine queue per ring step: step ``k`` forwards the shard received
@@ -247,7 +297,7 @@ def _pipe_ring_ag_queues(topo: Topology, shard: int, granularity: int,
     c = len(chunk_sizes(shard, granularity))
     last = c - 1
     queues = []
-    for d, (pred, succ) in _ring_neighbors(topo).items():
+    for d, (pred, succ) in _ring_neighbors(topo, device).items():
         for k in range(n - 1):
             tag = ("pag", d, k) if k < n - 2 else None
             copies = chunked_copies(CmdKind.COPY, d, (succ,), shard,
@@ -265,7 +315,8 @@ def _pipe_ring_ag_queues(topo: Topology, shard: int, granularity: int,
 
 
 def _pipe_bidir_ag_queues(topo: Topology, shard: int, granularity: int,
-                          per_chunk: bool) -> list[EngineQueue]:
+                          per_chunk: bool,
+                          device: int | None = None) -> list[EngineQueue]:
     """Pipelined bidirectional ring all-gather (``pipe_bidir_ring``, §9).
 
     The step-0 ``bcst`` feeds both directions reading the local shard once;
@@ -291,7 +342,7 @@ def _pipe_bidir_ag_queues(topo: Topology, shard: int, granularity: int,
     c = len(chunk_sizes(shard, granularity))
     last = c - 1
     queues = []
-    for d, (pred, succ) in _ring_neighbors(topo).items():
+    for d, (pred, succ) in _ring_neighbors(topo, device).items():
         # step 0: one read feeds both directions (copy when n == 2).
         kind = CmdKind.COPY if n == 2 else CmdKind.BCST
         dsts = (succ,) if n == 2 else (succ, pred)
@@ -333,7 +384,8 @@ def _pipe_bidir_ag_queues(topo: Topology, shard: int, granularity: int,
 
 
 def _pipe_aa_queues(topo: Topology, shard: int, depth: int, mcb: int,
-                    per_chunk: bool) -> list[EngineQueue]:
+                    per_chunk: bool,
+                    device: int | None = None) -> list[EngineQueue]:
     """Pipelined rotation ring all-to-all (``pipe_b2b``, DESIGN.md §9).
 
     Round ``r`` forwards the ``(n-1-r) * shard`` bytes still in transit as
@@ -347,7 +399,7 @@ def _pipe_aa_queues(topo: Topology, shard: int, depth: int, mcb: int,
     """
     n = topo.n_devices
     queues = []
-    for d, (pred, succ) in _ring_neighbors(topo).items():
+    for d, (pred, succ) in _ring_neighbors(topo, device).items():
         for r in range(n - 1):
             payload = (n - 1 - r) * shard
             g_r = _pipe_granularity(payload, depth, mcb)
@@ -375,7 +427,8 @@ def _pipe_aa_queues(topo: Topology, shard: int, depth: int, mcb: int,
 
 
 def _ring_rs_queues(topo: Topology, shard: int, *,
-                    ar: bool = False) -> list[EngineQueue]:
+                    ar: bool = False,
+                    device: int | None = None) -> list[EngineQueue]:
     """Unidirectional ring reduce-scatter (DESIGN.md §10): n-1 chained
     send steps per device, each (after step 0) preceded by the reduction of
     the predecessor's arrived partial, plus the terminal reduction that
@@ -386,7 +439,7 @@ def _ring_rs_queues(topo: Topology, shard: int, *,
     """
     n = topo.n_devices
     queues = []
-    for d, (pred, succ) in _ring_neighbors(topo).items():
+    for d, (pred, succ) in _ring_neighbors(topo, device).items():
         cs: list[cmd.Command] = []
         for k in range(n - 1):
             if k > 0:
@@ -401,7 +454,8 @@ def _ring_rs_queues(topo: Topology, shard: int, *,
 
 
 def _bidir_ring_rs_queues(topo: Topology, shard: int, *,
-                          ar: bool = False) -> list[EngineQueue]:
+                          ar: bool = False,
+                          device: int | None = None) -> list[EngineQueue]:
     """Bidirectional ring reduce-scatter (DESIGN.md §10): partials flow in
     both directions — the forward chain accumulates the ``n_fwd``
     predecessors' contributions, the backward chain the ``n_bwd``
@@ -415,7 +469,7 @@ def _bidir_ring_rs_queues(topo: Topology, shard: int, *,
     n = topo.n_devices
     n_fwd, n_bwd = _bidir_split(n)
     queues = []
-    for d, (pred, succ) in _ring_neighbors(topo).items():
+    for d, (pred, succ) in _ring_neighbors(topo, device).items():
         for name, peer, target, steps, raise_name, engine in (
                 ("rsf", pred, succ, n_fwd, "arf", 0),
                 ("rsb", succ, pred, n_bwd, "arb",
@@ -437,7 +491,8 @@ def _bidir_ring_rs_queues(topo: Topology, shard: int, *,
 
 
 def _pipe_ring_rs_queues(topo: Topology, shard: int, granularity: int,
-                         per_chunk: bool, *, ar: bool = False) -> list[EngineQueue]:
+                         per_chunk: bool, *, ar: bool = False,
+                         device: int | None = None) -> list[EngineQueue]:
     """Pipelined unidirectional ring reduce-scatter (``pipe_ring_rs``,
     DESIGN.md §10).
 
@@ -455,7 +510,7 @@ def _pipe_ring_rs_queues(topo: Topology, shard: int, granularity: int,
     """
     n = topo.n_devices
     queues = []
-    for d, (pred, succ) in _ring_neighbors(topo).items():
+    for d, (pred, succ) in _ring_neighbors(topo, device).items():
         for k in range(n - 1):
             copies = chunked_copies(CmdKind.COPY, d, (succ,), shard,
                                     granularity, ("prs", d, k),
@@ -479,7 +534,8 @@ def _pipe_ring_rs_queues(topo: Topology, shard: int, granularity: int,
 
 
 def _pipe_bidir_rs_queues(topo: Topology, shard: int, granularity: int,
-                          per_chunk: bool, *, ar: bool = False) -> list[EngineQueue]:
+                          per_chunk: bool, *, ar: bool = False,
+                          device: int | None = None) -> list[EngineQueue]:
     """Pipelined bidirectional ring reduce-scatter (``pipe_bidir_ring_rs``,
     DESIGN.md §10): the two partial chains of ``_bidir_ring_rs_queues``
     with per-chunk reductions and per-chunk tags.  As in
@@ -493,7 +549,7 @@ def _pipe_bidir_rs_queues(topo: Topology, shard: int, granularity: int,
     e_fwd = max(1, (topo.n_engines + 1) // 2)
     e_bwd = max(1, topo.n_engines - e_fwd)
     queues = []
-    for d, (pred, succ) in _ring_neighbors(topo).items():
+    for d, (pred, succ) in _ring_neighbors(topo, device).items():
         for name, peer, target, steps, raise_name, fwd in (
                 ("prf", pred, succ, n_fwd, "arf", True),
                 ("prb", succ, pred, n_bwd, "arb", False)):
@@ -528,39 +584,294 @@ def _pipe_bidir_rs_queues(topo: Topology, shard: int, granularity: int,
     return queues
 
 
+# ------------------------------------------------ hierarchical (§11) ----
+
+def _require_hier(topo: Topology, variant: str) -> None:
+    if topo.n_nodes < 2:
+        raise ValueError(
+            f"variant {variant!r} needs a multi-node topology "
+            f"(n_nodes >= 2), got {topo.name!r} with n_nodes={topo.n_nodes}")
+    if topo.node_devices < 2:
+        raise ValueError(
+            f"variant {variant!r} needs >= 2 devices per node, "
+            f"got node_devices={topo.node_devices}")
+
+
+def _node_ring_neighbors(topo: Topology,
+                         device: int | None = None) -> dict[int, tuple[int, int]]:
+    """device -> (predecessor, successor) along its *node's* local ring."""
+    out: dict[int, tuple[int, int]] = {}
+    for node in range(topo.n_nodes):
+        order = topo.node_ring_order(node)
+        p = len(order)
+        for i, d in enumerate(order):
+            if device is not None and d != device:
+                continue
+            out[d] = (order[(i - 1) % p], order[(i + 1) % p])
+    return out
+
+
+def _internode_neighbors(topo: Topology, d: int) -> tuple[int, int]:
+    """(predecessor, successor) on ``d``'s rank-group ring — the same local
+    rank on the previous/next node (every NIC hop stays inside one rank
+    group, so each device's cross-node traffic serializes only on its own
+    NIC)."""
+    step = topo.node_devices
+    return (d - step) % topo.n_devices, (d + step) % topo.n_devices
+
+
+def _hier_symmetric(topo: Topology) -> bool:
+    """True when each node's local ring closes on physical neighbors — the
+    per-tier translation-invariance condition of the ``hier_`` builders
+    (the rank-group rings are always symmetric: one sender-owned NIC per
+    device).  All nodes share one shape, so checking node 0 suffices."""
+    order = topo.node_ring_order(0)
+    p = len(order)
+    if p < 2:
+        return False
+    return all(topo.is_neighbor(order[i], order[(i + 1) % p]) for i in range(p))
+
+
+def _build_devices(topo: Topology, device: int | None):
+    if device is None:
+        return range(topo.n_devices)
+    return (device,)
+
+
+def _hier_ring_ag_queues(topo: Topology, shard: int,
+                         device: int | None = None) -> list[EngineQueue]:
+    """Two-tier ring all-gather (``hier_ring``, DESIGN.md §11.2).
+
+    Inter tier (engine 0): ring all-gather of ``shard`` across the rank
+    group — ``n_nodes - 1`` chained NIC steps.  Intra tier (engine 1):
+    once the device's node-block is complete (the rank-group predecessor's
+    final inter step landed), ring all-gather of the ``n_nodes * shard``
+    block around the node's local ring — ``node_devices - 1`` steps over
+    DMA links.  One host signal per device, on the (later-finishing)
+    intra queue.
+    """
+    m = topo.n_nodes
+    block = m * shard
+    e1 = min(1, topo.n_engines - 1)
+    intra = _node_ring_neighbors(topo, device)
+    queues = []
+    for d in _build_devices(topo, device):
+        npred, nsucc = _internode_neighbors(topo, d)
+        inter: list[cmd.Command] = []
+        for k in range(m - 1):
+            if k > 0:
+                inter.append(cmd.wait(("hgi", npred, k - 1)))
+            inter.append(cmd.copy(d, nsucc, shard))
+            inter.append(cmd.signal(("hgi", d, k)))
+        queues.append(EngineQueue(d, 0, tuple(inter)))
+        ipred, isucc = intra[d]
+        cs: list[cmd.Command] = [cmd.wait(("hgi", npred, m - 2))]
+        for k in range(topo.node_devices - 1):
+            if k > 0:
+                cs.append(cmd.wait(("hga", ipred, k - 1)))
+            cs.append(cmd.copy(d, isucc, block))
+            cs.append(cmd.signal(("hga", d, k)))
+        cs.append(cmd.signal())
+        queues.append(EngineQueue(d, e1, tuple(cs)))
+    return queues
+
+
+def _hier_pipe_ag_queues(topo: Topology, shard: int,
+                         device: int | None = None) -> list[EngineQueue]:
+    """Tier-pipelined two-tier all-gather (``hier_pipe``, DESIGN.md §11.2).
+
+    Same inter tier as ``hier_ring``, but the intra tier runs one
+    *sub-round* per node-block: sub-round ``j`` ring-all-gathers block
+    ``j`` (``shard`` bytes per step) around the node and is gated only on
+    that block's inter-node arrival (``j = 0``, the local block, starts
+    with the doorbell) — the local gather of block ``j`` overlaps the NIC
+    transfer of block ``j + 1`` instead of waiting for the whole inter
+    phase.  All sub-rounds share ONE intra queue (engine 1): every
+    sub-round sends over the same ``d -> isucc`` link, so separate queues
+    would buy no wire overlap while their link-bound wake times tie
+    exactly — and exact ties leave the grant interleaving to the event
+    loop's global submission order, which is not translation invariant.
+    Serial engine issue keeps the link FIFO deterministic and the schedule
+    symmetric.
+    """
+    m = topo.n_nodes
+    p = topo.node_devices
+    e1 = min(1, topo.n_engines - 1)
+    intra = _node_ring_neighbors(topo, device)
+    queues = []
+    for d in _build_devices(topo, device):
+        npred, nsucc = _internode_neighbors(topo, d)
+        inter: list[cmd.Command] = []
+        for k in range(m - 1):
+            if k > 0:
+                inter.append(cmd.wait(("hgi", npred, k - 1)))
+            inter.append(cmd.copy(d, nsucc, shard))
+            inter.append(cmd.signal(("hgi", d, k)))
+        queues.append(EngineQueue(d, 0, tuple(inter)))
+        ipred, isucc = intra[d]
+        cs: list[cmd.Command] = []
+        for j in range(m):
+            if j > 0:
+                cs.append(cmd.wait(("hgi", npred, j - 1)))
+            for k in range(p - 1):
+                if k > 0:
+                    cs.append(cmd.wait(("hgp", ipred, j, k - 1)))
+                cs.append(cmd.copy(d, isucc, shard))
+                cs.append(cmd.signal(("hgp", d, j, k)))
+        cs.append(cmd.signal())
+        queues.append(EngineQueue(d, e1, tuple(cs)))
+    return queues
+
+
+def _hier_ring_rs_queues(topo: Topology, shard: int, *, ar: bool = False,
+                         device: int | None = None) -> list[EngineQueue]:
+    """Two-tier ring reduce-scatter (``hier_ring_rs``, DESIGN.md §11.2).
+
+    Intra tier (engine 0): ring reduce-scatter of ``n_nodes * shard``
+    node-blocks around the local ring — after ``node_devices - 1`` steps
+    each device holds its block reduced over the node; the terminal
+    reduction raises ``("hrit", d, 0)``.  Inter tier (engine 1): ring
+    reduce-scatter of the result ``shard`` across the rank group, gated on
+    the intra terminal — ``n_nodes - 1`` NIC steps.  Reduction work per
+    device is ``(node_devices - 1) * n_nodes * shard + (n_nodes - 1) *
+    shard = (n - 1) * shard`` bytes, exactly the flat rings' conservation
+    invariant.  ``ar=True`` makes the inter terminal reduction raise
+    ``("arf", d, 0)`` (all-reduce chaining).
+    """
+    m = topo.n_nodes
+    block = m * shard
+    e1 = min(1, topo.n_engines - 1)
+    intra = _node_ring_neighbors(topo, device)
+    queues = []
+    for d in _build_devices(topo, device):
+        npred, nsucc = _internode_neighbors(topo, d)
+        ipred, isucc = intra[d]
+        cs: list[cmd.Command] = []
+        for k in range(topo.node_devices - 1):
+            if k > 0:
+                cs.append(cmd.reduce_tag(("hri", ipred, k - 1), block))
+            cs.append(cmd.copy(d, isucc, block))
+            cs.append(cmd.signal(("hri", d, k)))
+        cs.append(cmd.reduce_tag(("hri", ipred, topo.node_devices - 2), block,
+                                 ("hrit", d, 0)))
+        queues.append(EngineQueue(d, 0, tuple(cs)))
+        cs = [cmd.wait(("hrit", d, 0))]
+        for k in range(m - 1):
+            if k > 0:
+                cs.append(cmd.reduce_tag(("hrx", npred, k - 1), shard))
+            cs.append(cmd.copy(d, nsucc, shard))
+            cs.append(cmd.signal(("hrx", d, k)))
+        cs.append(cmd.reduce_tag(("hrx", npred, m - 2), shard,
+                                 ("arf", d, 0) if ar else None))
+        cs.append(cmd.signal())
+        queues.append(EngineQueue(d, e1, tuple(cs)))
+    return queues
+
+
+def _hier_pipe_rs_queues(topo: Topology, shard: int,
+                         per_chunk: bool = True, *, ar: bool = False,
+                         device: int | None = None) -> list[EngineQueue]:
+    """Tier-pipelined two-tier reduce-scatter (``hier_pipe_rs``, §11.2).
+
+    The intra tier slices every node-block transfer and reduction at
+    ``shard`` granularity with per-chunk tags (``chunked_copies`` /
+    ``chunked_reduces``), so the terminal reduction raises one chunk tag
+    ``("hrit", d, 0, i)`` per result slice; inter step ``k`` waits on
+    slice ``k`` and starts its NIC send the moment that slice is
+    node-reduced — the inter tier overlaps the intra tail instead of
+    waiting for the whole block.  Slice index ``k`` is each device's
+    *local* completion order (per-node slice rotation), which keeps the
+    wait tags device-independent — the translation invariance the
+    symmetric fast path needs.  ``per_chunk=False`` blocks every intra
+    chunk on the predecessor's final chunk (the serialized control arm).
+    """
+    m = topo.n_nodes
+    p = topo.node_devices
+    block = m * shard
+    e_intra = max(1, topo.n_engines - 1)
+    intra = _node_ring_neighbors(topo, device)
+    queues = []
+    for d in _build_devices(topo, device):
+        npred, nsucc = _internode_neighbors(topo, d)
+        ipred, isucc = intra[d]
+        for k in range(p - 1):
+            copies = chunked_copies(CmdKind.COPY, d, (isucc,), block, shard,
+                                    ("hri", d, k), per_chunk=per_chunk)
+            if k == 0:
+                cs = list(copies)
+            else:
+                reduces = chunked_reduces(("hri", ipred, k - 1), block, shard,
+                                          per_chunk=per_chunk)
+                cs = []
+                for r, cc in zip(reduces, copies):
+                    cs.append(r)
+                    cs.append(cc)
+            queues.append(EngineQueue(d, 1 + (k % e_intra), tuple(cs)))
+        term = list(chunked_reduces(("hri", ipred, p - 2), block, shard,
+                                    per_chunk=per_chunk,
+                                    raise_tag=("hrit", d, 0)))
+        queues.append(EngineQueue(d, 1 + ((p - 1) % e_intra), tuple(term)))
+        # Inter tier on engine 0: step k consumes node-reduced slice k.
+        cs = [cmd.wait(("hrit", d, 0, 0)), cmd.copy(d, nsucc, shard),
+              cmd.signal(("hrx", d, 0))]
+        for k in range(1, m - 1):
+            cs.append(cmd.wait(("hrit", d, 0, k)))
+            cs.append(cmd.reduce_tag(("hrx", npred, k - 1), shard))
+            cs.append(cmd.copy(d, nsucc, shard))
+            cs.append(cmd.signal(("hrx", d, k)))
+        cs.append(cmd.wait(("hrit", d, 0, m - 1)))
+        cs.append(cmd.reduce_tag(("hrx", npred, m - 2), shard,
+                                 ("arf", d, 0) if ar else None))
+        cs.append(cmd.signal())
+        queues.append(EngineQueue(d, 0, tuple(cs)))
+    return queues
+
+
 def reduce_scatter_schedule(topo: Topology, size: int, variant: str = "ring_rs", *,
                             opt_config: OptimizationConfig | None = None,
                             max_chunk_bytes: int | None = None,
                             pipe_depth: int = PIPE_DEPTH,
-                            per_chunk_signaling: bool = True) -> Schedule:
+                            per_chunk_signaling: bool = True,
+                            device: int | None = None) -> Schedule:
     """Reduce-scatter: every device ends with its ``size / n`` result shard
     reduced over all n contributions (DESIGN.md §10).
 
-    Variants are the ring family (``ring_rs``, ``bidir_ring_rs``) and its
-    per-chunk-pipelined renderings (``pipe_ring_rs``, ``pipe_bidir_ring_rs``);
-    the ``opt_`` / ``prelaunch_`` prefixes compose as for the other
-    collectives.  ``pipe_depth`` / ``per_chunk_signaling`` parameterize the
-    ``pipe_`` variants exactly as in :func:`allgather_schedule`; reductions
-    re-slice at the same chunk granularity as the copies feeding them, so
-    reduction work is conserved at ``(n-1) * shard_chunks`` chunk
-    reductions per device whatever the grain.
+    Variants are the ring family (``ring_rs``, ``bidir_ring_rs``), its
+    per-chunk-pipelined renderings (``pipe_ring_rs``, ``pipe_bidir_ring_rs``)
+    and, on multi-node topologies, the hierarchical two-tier family
+    (``hier_ring_rs``, ``hier_pipe_rs``, DESIGN.md §11); the ``opt_`` /
+    ``prelaunch_`` prefixes compose as for the other collectives.
+    ``pipe_depth`` / ``per_chunk_signaling`` parameterize the ``pipe_``
+    variants exactly as in :func:`allgather_schedule`; reductions re-slice
+    at the same chunk granularity as the copies feeding them, so reduction
+    work is conserved at ``(n-1) * shard_chunks`` chunk reductions per
+    device whatever the grain.  ``device`` builds only that device's queues
+    (representative-only, §11.3).
     """
     requested = variant
     variant, optimized = parse_optimized(variant)
     base, prelaunch = parse_variant(variant)
-    if base not in RS_VARIANTS:
+    if base not in RS_VARIANTS and base not in HIER_RS_VARIANTS:
         raise ValueError(f"unknown reduce-scatter variant {requested!r}")
     n = topo.n_devices
     shard = max(1, size // n)
     symmetric = _ring_closes_on_neighbors(topo)
-    if base in ("pipe_ring_rs", "pipe_bidir_ring_rs"):
+    if base in HIER_RS_VARIANTS:
+        _require_hier(topo, requested)
+        symmetric = _hier_symmetric(topo)
+        if base == "hier_pipe_rs":
+            queues = _hier_pipe_rs_queues(topo, shard, per_chunk_signaling,
+                                          device=device)
+        else:
+            queues = _hier_ring_rs_queues(topo, shard, device=device)
+    elif base in ("pipe_ring_rs", "pipe_bidir_ring_rs"):
         mcb = topo.calib.max_chunk_bytes if max_chunk_bytes is None else max_chunk_bytes
         g = _pipe_granularity(shard, pipe_depth, mcb)
         builder = _pipe_ring_rs_queues if base == "pipe_ring_rs" else _pipe_bidir_rs_queues
-        queues = builder(topo, shard, g, per_chunk_signaling)
+        queues = builder(topo, shard, g, per_chunk_signaling, device=device)
     else:
         builder = _ring_rs_queues if base == "ring_rs" else _bidir_ring_rs_queues
-        queues = builder(topo, shard)
+        queues = builder(topo, shard, device=device)
     name = f"rs_opt_{variant}" if optimized else f"rs_{variant}"
     sched = Schedule(name=name, queues=_maybe_prelaunch(queues, prelaunch),
                      symmetric=symmetric)
@@ -635,6 +946,8 @@ AR_AG_VARIANT = {
     "bidir_ring_rs": "bidir_ring",
     "pipe_ring_rs": "pipe_b2b",
     "pipe_bidir_ring_rs": "pipe_bidir_ring",
+    "hier_ring_rs": "hier_ring",
+    "hier_pipe_rs": "hier_pipe",
 }
 
 
@@ -642,7 +955,8 @@ def allreduce_schedule(topo: Topology, size: int, variant: str = "ring_rs", *,
                        opt_config: OptimizationConfig | None = None,
                        max_chunk_bytes: int | None = None,
                        pipe_depth: int = PIPE_DEPTH,
-                       per_chunk_signaling: bool = True) -> Schedule:
+                       per_chunk_signaling: bool = True,
+                       device: int | None = None) -> Schedule:
     """All-reduce as reduce-scatter + pipelined all-gather (DESIGN.md §10).
 
     ``variant`` names the reduce-scatter flavor (:data:`RS_VARIANTS` plus
@@ -667,24 +981,42 @@ def allreduce_schedule(topo: Topology, size: int, variant: str = "ring_rs", *,
     requested = variant
     variant, optimized = parse_optimized(variant)
     base, prelaunch = parse_variant(variant)
-    if base not in RS_VARIANTS:
+    if base not in RS_VARIANTS and base not in HIER_RS_VARIANTS:
         raise ValueError(f"unknown all-reduce variant {requested!r}")
     n = topo.n_devices
     shard = max(1, size // n)
     symmetric = _ring_closes_on_neighbors(topo)
-    ag_builder = _AR_AG_BUILDERS[base]
-    if base in ("pipe_ring_rs", "pipe_bidir_ring_rs"):
+    if base in HIER_RS_VARIANTS:
+        _require_hier(topo, requested)
+        symmetric = _hier_symmetric(topo)
+        if base == "hier_pipe_rs":
+            rs_queues = _hier_pipe_rs_queues(topo, shard, per_chunk_signaling,
+                                             ar=True, device=device)
+            ag_queues = _hier_pipe_ag_queues(topo, shard, device=device)
+        else:
+            rs_queues = _hier_ring_rs_queues(topo, shard, ar=True,
+                                             device=device)
+            ag_queues = _hier_ring_ag_queues(topo, shard, device=device)
+        # The hier terminal reduction raises one transfer-granular result
+        # tag per device, so the gather gates exactly like the non-pipe
+        # flat variants.
+        ag_queues = _ar_gate_ag_sources(ag_queues, base, n, None)
+    elif base in ("pipe_ring_rs", "pipe_bidir_ring_rs"):
+        ag_builder = _AR_AG_BUILDERS[base]
         mcb = topo.calib.max_chunk_bytes if max_chunk_bytes is None else max_chunk_bytes
         g = _pipe_granularity(shard, pipe_depth, mcb)
         rs_builder = _pipe_ring_rs_queues if base == "pipe_ring_rs" else _pipe_bidir_rs_queues
-        rs_queues = rs_builder(topo, shard, g, per_chunk_signaling, ar=True)
+        rs_queues = rs_builder(topo, shard, g, per_chunk_signaling, ar=True,
+                               device=device)
         ag_queues = _ar_gate_ag_sources(
-            ag_builder(topo, shard, g, per_chunk_signaling), base, n,
+            ag_builder(topo, shard, g, per_chunk_signaling, device), base, n,
             len(chunk_sizes(shard, g)), per_chunk_signaling)
     else:
+        ag_builder = _AR_AG_BUILDERS[base]
         rs_builder = _ring_rs_queues if base == "ring_rs" else _bidir_ring_rs_queues
-        rs_queues = rs_builder(topo, shard, ar=True)
-        ag_queues = _ar_gate_ag_sources(ag_builder(topo, shard), base, n, None)
+        rs_queues = rs_builder(topo, shard, ar=True, device=device)
+        ag_queues = _ar_gate_ag_sources(ag_builder(topo, shard, device), base,
+                                        n, None)
     name = f"ar_opt_{variant}" if optimized else f"ar_{variant}"
     queues = _maybe_prelaunch(rs_queues, prelaunch) \
         + _maybe_prelaunch(ag_queues, True)
@@ -697,7 +1029,8 @@ def allgather_schedule(topo: Topology, size: int, variant: str = "pcpy", *,
                        opt_config: OptimizationConfig | None = None,
                        max_chunk_bytes: int | None = None,
                        pipe_depth: int = PIPE_DEPTH,
-                       per_chunk_signaling: bool = True) -> Schedule:
+                       per_chunk_signaling: bool = True,
+                       device: int | None = None) -> Schedule:
     """All-gather: every device sends its shard (size/n) to all n-1 peers.
 
     An ``opt_`` variant prefix applies the optimized command-stream
@@ -715,25 +1048,30 @@ def allgather_schedule(topo: Topology, size: int, variant: str = "pcpy", *,
     requested = variant
     variant, optimized = parse_optimized(variant)
     base, prelaunch = parse_variant(variant)
-    if base not in AG_VARIANTS:
+    if base not in AG_VARIANTS and base not in HIER_AG_VARIANTS:
         raise ValueError(f"unknown all-gather variant {requested!r}")
     n = topo.n_devices
     shard = max(1, size // n)
     queues: list[EngineQueue] = []
     symmetric = True
-    if base in ("pipe_b2b", "pipe_bidir_ring"):
+    if base in HIER_AG_VARIANTS:
+        _require_hier(topo, requested)
+        builder = _hier_ring_ag_queues if base == "hier_ring" else _hier_pipe_ag_queues
+        queues = builder(topo, shard, device=device)
+        symmetric = _hier_symmetric(topo)
+    elif base in ("pipe_b2b", "pipe_bidir_ring"):
         mcb = topo.calib.max_chunk_bytes if max_chunk_bytes is None else max_chunk_bytes
         g = _pipe_granularity(shard, pipe_depth, mcb)
         builder = _pipe_ring_ag_queues if base == "pipe_b2b" else _pipe_bidir_ag_queues
-        queues = builder(topo, shard, g, per_chunk_signaling)
+        queues = builder(topo, shard, g, per_chunk_signaling, device)
         symmetric = _ring_closes_on_neighbors(topo)
     elif base == "pcpy":
-        for d in range(n):
+        for d in _build_devices(topo, device):
             for e, p in enumerate(x for x in range(n) if x != d):
                 queues.append(EngineQueue(d, e, (cmd.copy(d, p, shard), cmd.signal())))
         symmetric = topo.fully_connected
     elif base == "bcst":
-        for d in range(n):
+        for d in _build_devices(topo, device):
             peers = [p for p in range(n) if p != d]
             e = 0
             it = iter(peers)
@@ -746,15 +1084,15 @@ def allgather_schedule(topo: Topology, size: int, variant: str = "pcpy", *,
                 e += 1
         symmetric = topo.fully_connected
     elif base == "b2b":
-        for d in range(n):
+        for d in _build_devices(topo, device):
             copies = tuple(cmd.copy(d, p, shard) for p in range(n) if p != d)
             queues.append(EngineQueue(d, 0, copies + (cmd.signal(),)))
         symmetric = topo.fully_connected
     elif base == "ring":
-        queues = _ring_ag_queues(topo, shard)
+        queues = _ring_ag_queues(topo, shard, device)
         symmetric = _ring_closes_on_neighbors(topo)
     else:  # bidir_ring
-        queues = _bidir_ring_ag_queues(topo, shard)
+        queues = _bidir_ring_ag_queues(topo, shard, device)
         symmetric = _ring_closes_on_neighbors(topo)
     name = f"ag_opt_{variant}" if optimized else f"ag_{variant}"
     sched = Schedule(name=name, queues=_maybe_prelaunch(queues, prelaunch),
@@ -767,7 +1105,8 @@ def alltoall_schedule(topo: Topology, size: int, variant: str = "pcpy", *,
                       opt_config: OptimizationConfig | None = None,
                       max_chunk_bytes: int | None = None,
                       pipe_depth: int = PIPE_DEPTH,
-                      per_chunk_signaling: bool = True) -> Schedule:
+                      per_chunk_signaling: bool = True,
+                      device: int | None = None) -> Schedule:
     """All-to-all: every device exchanges a size/n shard with every peer.
 
     With ``swap``, pair (i, j) is served by a single in-place swap command
@@ -789,7 +1128,8 @@ def alltoall_schedule(topo: Topology, size: int, variant: str = "pcpy", *,
     symmetric = True
     if base == "pipe_b2b":
         mcb = topo.calib.max_chunk_bytes if max_chunk_bytes is None else max_chunk_bytes
-        queues = _pipe_aa_queues(topo, shard, pipe_depth, mcb, per_chunk_signaling)
+        queues = _pipe_aa_queues(topo, shard, pipe_depth, mcb,
+                                 per_chunk_signaling, device)
         symmetric = _ring_closes_on_neighbors(topo)
     elif base == "swap":
         # Executor assignment alternates per pair -> devices run different
@@ -802,13 +1142,15 @@ def alltoall_schedule(topo: Topology, size: int, variant: str = "pcpy", *,
                 partner = j if executor == i else i
                 e = per_dev_engine[executor]
                 per_dev_engine[executor] += 1
+                if device is not None and executor != device:
+                    continue
                 queues.append(EngineQueue(executor, e, (cmd.swap(executor, partner, shard), cmd.signal())))
     elif base == "ring":
-        queues = _ring_aa_queues(topo, shard)
+        queues = _ring_aa_queues(topo, shard, device)
         symmetric = _ring_closes_on_neighbors(topo)
     else:
         symmetric = topo.fully_connected
-        for d in range(n):
+        for d in _build_devices(topo, device):
             peers = [p for p in range(n) if p != d]
             if base == "pcpy":
                 for e, p in enumerate(peers):

@@ -33,11 +33,21 @@ The explicit opt-in keeps pre-§10 sweeps byte-identical and makes an
 accidental ``reduce_scatter`` request against an old call site fail loudly
 instead of silently sweeping an empty candidate set.
 
+Hierarchical multi-node collectives (DESIGN.md §11): on a multi-node
+topology (``topo.n_nodes > 1``) the candidate set is the ``hier_`` family —
+intra-node ring tier composed with an inter-node NIC tier, the only modeled
+schedule shape that keeps per-device work translation-invariant across the
+node boundary.  ``all_to_all`` has no hierarchical rendering and raises.
+
 Simulation results are memoized: :func:`variant_latency` caches every
 (topology, collective, size, variant, chunk) point and
 :func:`derive_dispatch` caches whole argmin sweeps, so repeated claim
 evaluations and dispatch-table derivations in one process pay for each
-simulation once.
+simulation once.  Sweeps run on the vectorized fast path (DESIGN.md
+§11.3): symmetric candidates evaluate over the whole size grid with
+representative-only builds (:mod:`repro.core.dma.sweep`), bit-identical to
+the per-point ``simulate()`` loop, which is what makes the 64/256-device
+multi-node tables derivable inside CI budgets.
 """
 from __future__ import annotations
 
@@ -48,6 +58,7 @@ from typing import Callable
 from .collectives import (allgather_schedule, allreduce_schedule,
                           alltoall_schedule, reduce_scatter_schedule)
 from .engine import simulate
+from .sweep import argmin_grid, sweep_variant_latencies
 from .topology import Topology
 
 #: Schedule builder per collective name (the dispatch/claims vocabulary).
@@ -141,7 +152,45 @@ def candidate_variants(
     ``allow_pipelined`` adds the per-chunk ``pipe_*_rs`` renderings).
     Prefixes compose: with all flags set the sweep also offers
     ``prelaunch_pipe_*`` and ``opt_[prelaunch_]pipe_*``.
+
+    Multi-node topologies (``topo.n_nodes > 1``, DESIGN.md §11) sweep the
+    hierarchical family instead: ``hier_ring`` (+ ``hier_pipe`` under
+    ``allow_pipelined``) for all-gather, ``hier_ring_rs`` (+
+    ``hier_pipe_rs``) for the reduce collectives.  The flat variants still
+    *build* on multi-node topologies (the claims compare against them) but
+    are excluded from the sweep: none are translation invariant across the
+    node boundary, so every flat candidate would force the full
+    multi-device event loop — unaffordable at 64/256 devices — and their
+    NIC traffic scales with total device count instead of node count (the
+    flat ring loses outright, ``hier_ag_nic_gain``; the direct fan-outs
+    stay competitive at 2 nodes in the model but saturate the NIC at the
+    slice counts the tables target).  ``all_to_all`` has no hierarchical
+    rendering (every pair exchanges distinct data, so there is no
+    intra/inter decomposition that reduces NIC bytes) and raises.
     """
+    if topo.n_nodes > 1:
+        if collective == "all_to_all":
+            raise ValueError(
+                "all_to_all has no hierarchical multi-node rendering "
+                "(DESIGN.md §11); derive multi-node tables for "
+                "all_gather/reduce_scatter/all_reduce only")
+        if collective in ("reduce_scatter", "all_reduce"):
+            if not allow_reduce:
+                raise ValueError(
+                    f"collective {collective!r} needs allow_reduce=True "
+                    "(DESIGN.md §10)")
+            variants = ["hier_ring_rs"]
+            if allow_pipelined:
+                variants.append("hier_pipe_rs")
+        else:
+            variants = ["hier_ring"]
+            if allow_pipelined:
+                variants.append("hier_pipe")
+        if allow_prelaunch:
+            variants += [f"prelaunch_{v}" for v in list(variants)]
+        if allow_optimized:
+            variants += [f"opt_{v}" for v in list(variants)]
+        return variants
     if collective in ("reduce_scatter", "all_reduce"):
         if not allow_reduce:
             raise ValueError(
@@ -192,6 +241,26 @@ def reduce_variants(topo: Topology, collective: str = "reduce_scatter") -> list[
                               allow_pipelined=True, allow_reduce=True)
 
 
+def sweep_candidate_latencies(topo: Topology, collective: str,
+                              sizes: tuple[int, ...], variant: str,
+                              chunk_bytes: int | None) -> list[float]:
+    """One (variant, chunk) candidate's latency over the whole size grid.
+
+    Symmetric candidates take the vectorized fast path (representative-only
+    builds + single-device event loop, DESIGN.md §11.3); everything else
+    falls back to the memoized per-point ``simulate()`` loop.  Either way
+    the values are bit-identical to calling :func:`variant_latency` per
+    size — asserted over every bundled table entry in tests/test_hier.py —
+    so callers never need to know which path ran.
+    """
+    fast = sweep_variant_latencies(topo, collective, tuple(sizes), variant,
+                                   chunk_bytes)
+    if fast is not None:
+        return fast
+    return [variant_latency(topo, collective, size, variant, chunk_bytes)
+            for size in sizes]
+
+
 @functools.lru_cache(maxsize=256)
 def _derive_dispatch_cached(
     topo: Topology,
@@ -208,21 +277,20 @@ def _derive_dispatch_cached(
                                   allow_pipelined=allow_pipelined,
                                   allow_reduce=allow_reduce)
 
-    winners: list[tuple[int, str, int | None]] = []
-    for size in sizes:
-        best, best_ch, best_t = None, None, float("inf")
-        for v in variants:
-            for ch in chunk_sizes:
-                t = variant_latency(topo, collective, size, v, ch)
-                # Strict-improvement-with-tolerance argmin: prelaunched
-                # variants are chunk-flat (the per-chunk host cost is off
-                # the critical path), so without the epsilon the chunk
-                # winner would be picked on float noise and churn the
-                # derived ranges.  Earlier candidates (the calibrated
-                # default chunk first) win ties.
-                if t < best_t * (1.0 - 1e-9):
-                    best, best_ch, best_t = v, ch, t
-        winners.append((size, best, best_ch))
+    # Candidate axis in the historical sweep order (variant-major, the
+    # calibrated default chunk first) so the vectorized argmin's earlier-
+    # candidate tie-breaking reproduces the per-point loop exactly.
+    candidates = [(v, ch) for v in variants for ch in chunk_sizes]
+    lat = [sweep_candidate_latencies(topo, collective, sizes, v, ch)
+           for v, ch in candidates]
+    # Strict-improvement-with-tolerance argmin, one numpy pass per
+    # candidate over the size axis (DESIGN.md §11.3): prelaunched variants
+    # are chunk-flat (the per-chunk host cost is off the critical path), so
+    # without the epsilon the chunk winner would be picked on float noise
+    # and churn the derived ranges.  Earlier candidates (the calibrated
+    # default chunk first) win ties.
+    best_i, _ = argmin_grid(lat)
+    winners = [(size, *candidates[i]) for size, i in zip(sizes, best_i)]
 
     entries: list[DispatchEntry] = []
     for size, v, ch in winners:

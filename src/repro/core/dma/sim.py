@@ -308,10 +308,10 @@ class _Sim:
         self.host_events: dict[int, int] = defaultdict(int)
         self.engine_atomics: dict[int, int] = defaultdict(int)
         self.reduce_chunks: dict[int, int] = defaultdict(int)
-        # (src, dst) -> (timelines along the route, effective wire bandwidth);
+        # (src, dst) -> ((timeline, added latency) per hop, wire bandwidth);
         # resolving the route and the timeline dict once per endpoint pair
         # keeps the per-command cost flat under chunking.
-        self._routes: dict[tuple, tuple[tuple[_Timeline, ...], float]] = {}
+        self._routes: dict[tuple, tuple[tuple[tuple[_Timeline, float], ...], float]] = {}
 
     def timeline(self, key: str) -> _Timeline:
         tl = self.timelines.get(key)
@@ -325,34 +325,36 @@ class _Sim:
         return tag
 
     # ------------------------------------------------------------ wire ----
-    def route_tls(self, src, dst) -> tuple[tuple[_Timeline, ...], float]:
-        """Timelines along the src->dst route + the effective wire bandwidth."""
+    def route_tls(self, src, dst) -> tuple[tuple[tuple[_Timeline, float], ...], float]:
+        """Per-hop (timeline, added latency) along src->dst + wire bandwidth.
+
+        The hop structure comes from ``Topology.wire_path`` (DESIGN.md §11):
+        intra-node hops are directed DMA links (first hop latency 0, further
+        hops ``hop_latency``); a cross-node transfer is one hop through the
+        sender's NIC at NIC bandwidth with ``nic_latency`` up front.
+        """
         key = (src, dst)
         ent = self._routes.get(key)
         if ent is None:
-            eff = self.calib.dma_link_efficiency
             if src == "host" or dst == "host":
                 dev = dst if src == "host" else src
                 dirn = "h2d" if src == "host" else "d2h"
-                tls = (self.timeline(f"hostlink:{dev}:{dirn}"),)
-                bw = self.topo.host_link_bw * eff
+                tls = ((self.timeline(f"hostlink:{dev}:{dirn}"), 0.0),)
+                bw = self.topo.host_link_bw * self.calib.dma_link_efficiency
             else:
-                tls = tuple(self.timeline(f"link:{a}>{b}")
-                            for a, b in self.topo.route(src, dst))
-                bw = self.topo.link_bw * eff
+                hops, bw = self.topo.wire_path(src, dst)
+                tls = tuple((self.timeline(k), lat) for k, lat in hops)
             ent = self._routes[key] = (tls, bw)
         return ent
 
     def transfer(self, src, dst, size: int, start: float) -> float:
-        """Occupy every link on the src->dst route; returns completion time."""
+        """Occupy every hop on the src->dst route; returns completion time."""
         tls, bw = self.route_tls(src, dst)
         wire = size / bw
-        hop = self.calib.hop_latency
         t = start
         end = start
-        for h, tl in enumerate(tls):
-            req = t if h == 0 else t + hop
-            s, end = tl.acquire(req, wire)
+        for tl, lat in tls:
+            s, end = tl.acquire(t + lat, wire)
             t = s                    # cut-through: next hop staggers off start
         return end
 
@@ -381,17 +383,17 @@ class _Sim:
         if tagged is None and (cmd.fused_tag is not None or cmd.fused_signal):
             return False
         size = cmd.size
-        wires: list[tuple[_Timeline, float]] = []
+        wires: list[tuple[_Timeline, float, float]] = []
         for dst in cmd.dsts:
             tls, bw = self.route_tls(cmd.src, dst)
             if len(tls) != 1:
                 return False
-            wires.append((tls[0], size / bw))
+            wires.append((tls[0][0], size / bw, tls[0][1]))
         if cmd.kind is CmdKind.SWAP:
             tls, bw = self.route_tls(cmd.dsts[0], cmd.src)
             if len(tls) != 1:
                 return False
-            wires.append((tls[0], size / bw))
+            wires.append((tls[0][0], size / bw, tls[0][1]))
         b = self.calib.b2b_issue
         engine = st.engine_tl
         issue0 = st.issue
@@ -404,10 +406,13 @@ class _Sim:
             return False
         end = sm + ts
         commits: list[tuple[_Timeline, float, float]] = []
-        for tl, tw in wires:
-            w1 = s1 if s1 > tl.free else tl.free
+        for tl, tw, lat in wires:
+            # Each chunk's wire request lags its engine stream start by the
+            # hop latency (0 intra-node, nic_latency across nodes).
+            req1 = s1 + lat
+            w1 = req1 if req1 > tl.free else tl.free
             wm = w1 + (m - 1) * tw
-            if sm > wm:                     # engine-bound: chunks gap on this wire
+            if sm + lat > wm:               # engine-bound: chunks gap on this wire
                 return False
             commits.append((tl, w1, wm + tw))
             if wm + tw > end:
@@ -419,7 +424,7 @@ class _Sim:
             # Raise each chunk's semaphore at its completion time (§9.2):
             # engine-stream end and every wire's landing end are affine in
             # the chunk index under the back-to-back conditions above.
-            w1s = [(w1, tw) for (tl, tw), (_, w1, _) in zip(wires, commits)]
+            w1s = [(w1, tw) for (tl, tw, _), (_, w1, _) in zip(wires, commits)]
             fs = self.calib.fused_sync
             tags = self.tags
             for i, tc in enumerate(tagged):

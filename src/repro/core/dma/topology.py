@@ -18,6 +18,20 @@ dimension-ordered (rows first, then columns) with wraparound, so non-neighbor
 transfers are multi-hop and the simulator charges every link on the path plus
 a per-hop router latency (``Calibration.hop_latency``).
 
+Inter-node tier (DESIGN.md §11): multi-node topologies (``n_nodes > 1``)
+split the device range into equal nodes.  Intra-node routing is unchanged
+(per-node torus or fully-connected box); a cross-node transfer traverses the
+*sender's NIC* — one serial injection resource per device
+(``nic:{src}``) with its own latency (``Calibration.nic_latency``) and
+bandwidth (``Calibration.nic_bytes_per_s``), both far worse than the
+intra-node DMA links.  The NIC is deliberately sender-side only: a shared
+receiver-side resource would put two devices on one timeline and break the
+translation invariance the symmetric fast path (§6) relies on.  The
+per-hop view the simulator consumes is :meth:`Topology.wire_path`.
+
+* ``tpu_v5e_multislice()`` / ``mi300x_cluster()`` — the multi-node builders:
+  N×(4×4 ICI torus) slices over DCN, and N×8-GPU MI300X boxes over RDMA.
+
 Phase constants live in :class:`Calibration` and are fit once (see
 ``benchmarks/calibration.py``) so that the model reproduces the paper's
 measured figures.
@@ -78,6 +92,15 @@ class Calibration:
                HBM bandwidth — far above link bandwidth on both platforms,
                which is why per-chunk reductions hide under the wire once
                the pipeline is primed.
+    nic_latency: one-way injection latency of a cross-node message through
+               the sender's NIC (DESIGN.md §11) — RDMA/DCN software + fabric
+               latency, orders of magnitude above the intra-node hop cost.
+               Unused on single-node topologies.
+    nic_bytes_per_s: per-device NIC injection bandwidth (one direction).
+               The MI300X default models a 400G RDMA NIC (~50 GB/s); the TPU
+               multislice builder overrides it with a DCN-class value.  The
+               NIC serializes a device's cross-node traffic regardless of
+               how many intra-node DMA links it owns.
     """
 
     # Values fit by benchmarks/calibration.py so the model lands on the
@@ -100,6 +123,10 @@ class Calibration:
     # accumulates at ~1/3 of HBM3 bandwidth (read chunk + read/write acc).
     reduce_setup: float = 0.45e-6
     reduce_bytes_per_s: float = 1.6e12
+    # Inter-node NIC tier (DESIGN.md §11): 400G RDMA-class defaults; only
+    # consulted when ``Topology.n_nodes > 1``.
+    nic_latency: float = 2.0e-6
+    nic_bytes_per_s: float = 50e9
     # Effective per-engine streaming bandwidth (one engine saturates roughly
     # one xGMI link; pcpy engages one engine per link).
     engine_bw: float = 64e9
@@ -229,7 +256,8 @@ class Topology:
     host_link_bw: float                # bytes/s per direction (PCIe for MI300X)
     fully_connected: bool
     calib: Calibration = Calibration()
-    grid: tuple[int, int] | None = None  # 2D torus shape (rows, cols) if not FC
+    grid: tuple[int, int] | None = None  # per-node 2D torus (rows, cols) if not FC
+    n_nodes: int = 1                     # inter-node tier (DESIGN.md §11)
 
     def peer_links(self, device: int) -> int:
         return self.links_per_device
@@ -239,39 +267,106 @@ class Topology:
         """Total per-device injection bandwidth (bytes/s, one direction)."""
         return self.link_bw * self.links_per_device
 
-    # ---- routing (DESIGN.md §3) ----
+    # ---- node structure (DESIGN.md §11) ----
+    @property
+    def node_devices(self) -> int:
+        """Devices per node (the device range splits into equal nodes)."""
+        return self.n_devices // self.n_nodes
+
+    def node_of(self, device: int) -> int:
+        return device // self.node_devices
+
+    def local_rank(self, device: int) -> int:
+        return device % self.node_devices
+
+    def node_base(self, node: int) -> int:
+        return node * self.node_devices
+
+    # ---- routing (DESIGN.md §3, §11) ----
     def route(self, src: int, dst: int) -> tuple[tuple[int, int], ...]:
-        """Directed links a src->dst transfer traverses, in traversal order."""
+        """Directed links a src->dst transfer traverses, in traversal order.
+
+        A cross-node transfer is one logical hop — the sender's NIC
+        (DESIGN.md §11); :meth:`wire_path` maps it onto the ``nic:{src}``
+        resource.  Intra-node routing is per-node: the torus runs over
+        local ranks, offset back to global device ids.
+        """
         if src == dst:
             return ()
+        if self.n_nodes > 1 and self.node_of(src) != self.node_of(dst):
+            return ((src, dst),)
         if self.fully_connected or self.grid is None:
             return ((src, dst),)
-        return _torus_route(self.grid, src, dst)
+        base = self.node_base(self.node_of(src))
+        local = _torus_route(self.grid, src - base, dst - base)
+        if base:
+            return tuple((a + base, b + base) for a, b in local)
+        return local
 
     def hops(self, src: int, dst: int) -> int:
         return len(self.route(src, dst))
 
+    def wire_path(self, src: int, dst: int) -> tuple[tuple[tuple[str, float], ...], float]:
+        """Per-hop ``(timeline key, added latency)`` pairs + path bandwidth.
+
+        The simulator's view of a route (DESIGN.md §11): intra-node hops run
+        over directed DMA links (``link:{a}>{b}``) at the effective link
+        bandwidth, the first hop adding no latency and each further hop the
+        router's ``hop_latency`` (cut-through).  A cross-node transfer is a
+        single hop through the sender's NIC (``nic:{src}``) at NIC bandwidth,
+        charged ``nic_latency`` up front.
+        """
+        c = self.calib
+        if self.n_nodes > 1 and self.node_of(src) != self.node_of(dst):
+            return ((f"nic:{src}", c.nic_latency),), c.nic_bytes_per_s
+        hop = c.hop_latency
+        path = tuple(
+            (f"link:{a}>{b}", 0.0 if h == 0 else hop)
+            for h, (a, b) in enumerate(self.route(src, dst)))
+        return path, self.link_bw * c.dma_link_efficiency
+
     def neighbors(self, device: int) -> tuple[int, ...]:
+        """Directly linked peers — intra-node only (the NIC is not a link)."""
         if self.fully_connected or self.grid is None:
-            return tuple(d for d in range(self.n_devices) if d != device)
+            base = self.node_base(self.node_of(device))
+            return tuple(d for d in range(base, base + self.node_devices)
+                         if d != device)
+        base = self.node_base(self.node_of(device))
         rows, cols = self.grid
-        r, c = divmod(device, cols)
+        r, c = divmod(device - base, cols)
         out = []
         for dr, dc in ((0, 1), (0, -1), (1, 0), (-1, 0)):
-            n = ((r + dr) % rows) * cols + (c + dc) % cols
+            n = base + ((r + dr) % rows) * cols + (c + dc) % cols
             if n != device and n not in out:
                 out.append(n)
         return tuple(out)
 
     def is_neighbor(self, a: int, b: int) -> bool:
+        if self.n_nodes > 1 and self.node_of(a) != self.node_of(b):
+            return False
         return a != b and len(self.route(a, b)) == 1
 
     def ring_order(self) -> tuple[int, ...]:
         """A device order in which consecutive (and wraparound) devices are
-        physically adjacent — the embedding used by ring collectives."""
+        physically adjacent — the embedding used by ring collectives.  On a
+        multi-node topology the order is node-major (each node's local ring
+        concatenated), so consecutive devices are adjacent *within* a node;
+        the node boundaries are NIC hops and flat rings over them fail the
+        builders' adjacency check (they fall back to the full event loop)."""
         if self.fully_connected or self.grid is None:
             return tuple(range(self.n_devices))
-        return _snake_ring(self.grid)
+        local = _snake_ring(self.grid)
+        if self.n_nodes == 1:
+            return local
+        return tuple(self.node_base(n) + d
+                     for n in range(self.n_nodes) for d in local)
+
+    def node_ring_order(self, node: int) -> tuple[int, ...]:
+        """The intra-node ring (global device ids) for one node."""
+        base = self.node_base(node)
+        if self.fully_connected or self.grid is None:
+            return tuple(range(base, base + self.node_devices))
+        return tuple(base + d for d in _snake_ring(self.grid))
 
 
 def mi300x_platform(calib: Calibration | None = None) -> Topology:
@@ -337,6 +432,65 @@ def tpu_v5e_pod(n_devices: int = 256, calib: Calibration | None = None) -> Topol
         fully_connected=False,
         calib=c,
         grid=_near_square_grid(n_devices),
+    )
+
+
+def tpu_v5e_multislice(n_devices: int = 64, node_devices: int = 16,
+                       calib: Calibration | None = None) -> Topology:
+    """Multi-node TPU v5e: ``n_devices / node_devices`` ICI-torus slices
+    joined over DCN (DESIGN.md §11).
+
+    Each node is a ``node_devices``-chip 2D ICI torus (the same fabric as
+    :func:`tpu_v5e_pod`); cross-node traffic serializes through the sender's
+    DCN NIC at ~12.5 GB/s with ~5 µs injection latency — a 4× bandwidth and
+    ~12× latency step down from an ICI link, which is what makes the
+    hierarchical collective builders win (``collectives.py`` ``hier_``).
+    """
+    if n_devices % node_devices:
+        raise ValueError(
+            f"n_devices={n_devices} not divisible by node_devices={node_devices}")
+    base = tpu_v5e_pod(node_devices)
+    c = calib or dataclasses.replace(
+        base.calib,
+        nic_latency=5.0e-6,        # DCN injection (software + fabric)
+        nic_bytes_per_s=12.5e9,    # ~100G DCN per chip
+    )
+    return Topology(
+        name=f"tpu-v5e-{n_devices}x{node_devices}",
+        n_devices=n_devices,
+        link_bw=base.link_bw,
+        links_per_device=base.links_per_device,
+        n_engines=base.n_engines,
+        host_link_bw=base.host_link_bw,
+        fully_connected=False,
+        calib=c,
+        grid=_near_square_grid(node_devices),
+        n_nodes=n_devices // node_devices,
+    )
+
+
+def mi300x_cluster(n_nodes: int = 2, calib: Calibration | None = None) -> Topology:
+    """N fully-connected 8-GPU MI300X boxes joined over RDMA (DESIGN.md §11).
+
+    Intra-node routing is the single direct xGMI link exactly as on
+    :func:`mi300x_platform`; cross-node transfers serialize through the
+    sender's 400G NIC (``Calibration.nic_latency`` / ``nic_bytes_per_s``
+    defaults).  ``fully_connected`` is False because the *global* fabric is
+    not — same-node pairs still route direct (``grid is None``).
+    """
+    if n_nodes < 1:
+        raise ValueError(f"n_nodes must be >= 1, got {n_nodes}")
+    return Topology(
+        name=f"mi300x-8x{n_nodes}",
+        n_devices=8 * n_nodes,
+        link_bw=64e9,
+        links_per_device=7,
+        n_engines=16,
+        host_link_bw=64e9,
+        fully_connected=False,
+        calib=calib or Calibration(),
+        grid=None,
+        n_nodes=n_nodes,
     )
 
 

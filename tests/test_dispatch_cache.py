@@ -2,13 +2,13 @@
 
 The on-disk/bundled dispatch tables are keyed by a fingerprint of the cache
 version, the full topology repr (calibration included) and the sweep inputs.
-The v5 bump (reduce collectives, DESIGN.md §10) invalidates every v4/v3/v2
-table — those sweeps never derived the reduce_scatter/all_reduce tables and
-never saw the reduce calibration, so serving them silently would pin the
-backend to pre-§10 policies (and crash the 4-tuple unpack).  These tests pin
+The v6 bump (hierarchical multi-node collectives, DESIGN.md §11)
+invalidates every v5-and-older table — those sweeps never offered the
+``hier_`` candidates and never saw the NIC calibration, so serving them
+silently would pin the backend to single-node policies.  These tests pin
 the fingerprint-mismatch path: stale entries are ignored, current entries
-round trip, and a calibration change alone — including a reduce-only
-recalibration — also misses.
+round trip, and a calibration change alone — including a reduce-only or
+NIC-only recalibration — also misses.
 """
 import dataclasses
 import hashlib
@@ -16,7 +16,7 @@ import json
 
 from repro.core import backend
 from repro.core.dma.dispatch import DispatchEntry
-from repro.core.dma.topology import Calibration, tpu_v5e_pod
+from repro.core.dma.topology import Calibration, mi300x_cluster, tpu_v5e_pod
 
 
 def _key_for_version(topo, sizes, version: int) -> str:
@@ -38,19 +38,20 @@ def _isolate(tmp_path, monkeypatch, bundled: dict | None = None):
 _POISON = [[{"lo": 1024, "hi": None, "variant": "STALE", "chunk": None}]] * 4
 
 
-def test_cache_version_is_v5():
-    """The reduce sweeps (DESIGN.md §10) require the v5 fingerprint."""
-    assert backend._TABLE_CACHE_VERSION == 5
+def test_cache_version_is_v6():
+    """The hierarchical multi-node sweeps (DESIGN.md §11) require the v6
+    fingerprint."""
+    assert backend._TABLE_CACHE_VERSION == 6
 
 
 def test_stale_versioned_disk_tables_rejected(tmp_path, monkeypatch):
-    """v2/v3/v4 disk entries (pre-reduce sweeps) must never be served:
-    their file names carry the old fingerprint, so the v5 lookup misses."""
+    """v2-v5 disk entries (pre-hierarchical sweeps) must never be served:
+    their file names carry the old fingerprint, so the v6 lookup misses."""
     _isolate(tmp_path, monkeypatch)
     topo = tpu_v5e_pod(16)
     sizes = backend._SWEEP_SIZES
     (tmp_path / "cache").mkdir()
-    for old in (2, 3, 4):
+    for old in (2, 3, 4, 5):
         stale = _key_for_version(topo, sizes, old)
         assert stale != backend._table_key(topo, sizes)
         path = tmp_path / "cache" / f"tables_{topo.name}_{stale}.json"
@@ -63,7 +64,7 @@ def test_stale_versioned_bundled_tables_rejected(tmp_path, monkeypatch):
     topo = tpu_v5e_pod(16)
     sizes = backend._SWEEP_SIZES
     _isolate(tmp_path, monkeypatch, bundled={
-        _key_for_version(topo, sizes, v): _POISON for v in (2, 3, 4)})
+        _key_for_version(topo, sizes, v): _POISON for v in (2, 3, 4, 5)})
     assert backend._load_table_cache(topo, sizes) is None
 
 
@@ -118,8 +119,29 @@ def test_reduce_calibration_only_change_misses(tmp_path, monkeypatch):
     assert backend._load_table_cache(topo, sizes) == tables  # original serves
 
 
+def test_nic_calibration_only_change_misses(tmp_path, monkeypatch):
+    """A NIC-only recalibration (DESIGN.md §11: nic_latency /
+    nic_bytes_per_s) must miss on its own — the inter-node tier is part of
+    the v6 fingerprint via topo!r, so tables swept under one RDMA fabric
+    are never served for another."""
+    _isolate(tmp_path, monkeypatch)
+    topo = mi300x_cluster(2)
+    sizes = backend._SWEEP_SIZES
+    tables = ((DispatchEntry(1024, None, "hier_ring", None),),
+              (DispatchEntry(1024, None, "hier_ring", None),),
+              (DispatchEntry(1024, None, "hier_ring_rs", None),),
+              (DispatchEntry(1024, None, "hier_pipe_rs", None),))
+    backend._store_table_cache(topo, sizes, tables)
+    recal = mi300x_cluster(2, calib=dataclasses.replace(
+        topo.calib, nic_latency=topo.calib.nic_latency * 2))
+    assert recal.name == topo.name
+    assert backend._table_key(recal, sizes) != backend._table_key(topo, sizes)
+    assert backend._load_table_cache(recal, sizes) is None
+    assert backend._load_table_cache(topo, sizes) == tables  # original serves
+
+
 def test_bundled_tables_carry_current_fingerprint_and_reduce_winners():
-    """The shipped _dispatch_tables.json was regenerated for v5: its key
+    """The shipped _dispatch_tables.json was regenerated for v6: its key
     matches the current fingerprint, it carries all four tables, the AG
     table contains a pipelined winner and the RS/AR tables carry pipelined
     reduce winners (the sweep really offered the §10 candidates)."""
@@ -142,3 +164,26 @@ def test_bundled_tables_carry_current_fingerprint_and_reduce_winners():
         assert strip(e.variant) in backend._RS_IMPL, e.variant
     for e in ar:
         assert strip(e.variant) in backend._AR_IMPL, e.variant
+
+
+def test_bundled_multinode_tables_present_and_hier_winners():
+    """Every MULTINODE_TOPOS spec ships a bundled v6 table whose winners are
+    all hierarchical streams mapping (stripped) into the JAX impl maps —
+    multinode derivation in CI is a cache load, never a re-sweep."""
+    with open(backend._BUNDLED_TABLES) as f:
+        bundled = json.load(f)
+    strip = backend.CommBackend()._strip
+    for spec, build in backend.MULTINODE_TOPOS.items():
+        topo = build()
+        key = backend._table_key(topo, backend._SWEEP_SIZES)
+        assert key in bundled, spec
+        ag, rs, ar = backend._parse_tables(bundled[key])
+        for e in ag:
+            assert "hier_" in e.variant, (spec, e.variant)
+            assert strip(e.variant) in backend._AG_IMPL, (spec, e.variant)
+        for e in rs:
+            assert "hier_" in e.variant, (spec, e.variant)
+            assert strip(e.variant) in backend._RS_IMPL, (spec, e.variant)
+        for e in ar:
+            assert "hier_" in e.variant, (spec, e.variant)
+            assert strip(e.variant) in backend._AR_IMPL, (spec, e.variant)

@@ -1,0 +1,188 @@
+"""Hierarchical multi-node collectives (DESIGN.md §11) invariants.
+
+Three families of checks:
+
+* **Tier-split byte conservation** — ``link_traffic`` split at node
+  boundaries: a hierarchical all-gather / reduce-scatter moves exactly
+  ``(P - 1) * M * shard`` bytes per device over intra-node links and
+  ``(M - 1) * shard`` bytes per device through the sender NICs (M nodes,
+  P devices per node), whatever the rendering (ring vs pipelined) or
+  chunk granularity.
+* **Reduction-work conservation** — hier RS/AR reduce exactly
+  ``(N - 1) * shard`` bytes per device (DESIGN.md §10 extended across the
+  inter tier).
+* **Bit-identity** — the symmetric representative-device fast path
+  (§11.3) must agree *exactly* with the full event loop, per variant and
+  per sweep candidate, on both multi-node fabrics.  This is the contract
+  that lets dispatch derivation simulate one device instead of N.
+"""
+import pytest
+
+from repro.core.dma import (allgather_schedule, allreduce_schedule,
+                            candidate_variants, link_traffic,
+                            reduce_scatter_schedule, reduce_work, simulate)
+from repro.core.dma.dispatch import sweep_candidate_latencies, variant_latency
+from repro.core.dma.sweep import rep_latency, sweep_variant_latencies
+from repro.core.dma.topology import mi300x_cluster, tpu_v5e_multislice
+
+CLUSTER = mi300x_cluster(2)          # 2 nodes x 8 GPUs, RDMA NICs
+TPU64 = tpu_v5e_multislice(64)       # 4 slices x 16 chips, DCN NICs
+
+MB = 1024 * 1024
+
+_SCHED = {"all_gather": allgather_schedule,
+          "reduce_scatter": reduce_scatter_schedule,
+          "all_reduce": allreduce_schedule}
+
+
+def _tier_bytes(topo, sched):
+    """(intra-node bytes, cross-node bytes) summed over link_traffic."""
+    intra = nic = 0
+    for (src, dst), b in link_traffic(sched).items():
+        if topo.node_of(src) == topo.node_of(dst):
+            intra += b
+        else:
+            nic += b
+    return intra, nic
+
+
+# ---------------------------------------------------------------- traffic
+
+@pytest.mark.parametrize("topo", [CLUSTER, TPU64], ids=lambda t: t.name)
+@pytest.mark.parametrize("collective,variant", [
+    ("all_gather", "hier_ring"),
+    ("all_gather", "hier_pipe"),
+    ("reduce_scatter", "hier_ring_rs"),
+    ("reduce_scatter", "hier_pipe_rs"),
+])
+@pytest.mark.parametrize("size", [64 * 1024, 16 * MB])
+def test_hier_tier_split_byte_conservation(topo, collective, variant, size):
+    """Intra bytes = N*(P-1)*M*shard, NIC bytes = N*(M-1)*shard in total:
+    the two-tier decomposition sends each shard across the node ring once
+    and each gathered block around the local ring once — no tier leaks
+    traffic into the other."""
+    sched = _SCHED[collective](topo, size, variant)
+    n, m, p = topo.n_devices, topo.n_nodes, topo.node_devices
+    shard = size // n
+    intra, nic = _tier_bytes(topo, sched)
+    assert intra == n * (p - 1) * m * shard
+    assert nic == n * (m - 1) * shard
+
+
+@pytest.mark.parametrize("variant", ["hier_ring", "hier_pipe"])
+def test_hier_traffic_invariant_under_chunking(variant):
+    """Chunk granularity re-slices commands but must not move bytes
+    between tiers (the §8.1 invariant holds per tier)."""
+    size = 8 * MB
+    base = _tier_bytes(CLUSTER, allgather_schedule(CLUSTER, size, variant))
+    chunked = _tier_bytes(CLUSTER, allgather_schedule(
+        CLUSTER, size, variant, max_chunk_bytes=256 * 1024))
+    assert base == chunked
+
+
+# -------------------------------------------------------------- reduction
+
+@pytest.mark.parametrize("topo", [CLUSTER, TPU64], ids=lambda t: t.name)
+@pytest.mark.parametrize("collective", ["reduce_scatter", "all_reduce"])
+@pytest.mark.parametrize("variant", ["hier_ring_rs", "hier_pipe_rs"])
+def test_hier_reduction_work_conserved(topo, collective, variant):
+    """Every device reduces exactly (N-1)*shard bytes: (P-1)*M*shard in
+    the intra phase plus (M-1)*shard in the inter phase — the two tiers
+    partition the flat invariant, they do not duplicate work."""
+    size = 4 * MB
+    sched = _SCHED[collective](topo, size, variant)
+    n = topo.n_devices
+    shard = size // n
+    work = reduce_work(sched)
+    assert set(work) == set(range(n))
+    for dev, (_, reduced) in work.items():
+        assert reduced == (n - 1) * shard, dev
+
+
+# ------------------------------------------------------------ bit-identity
+
+@pytest.mark.parametrize("collective,variant", [
+    ("all_gather", "hier_ring"),
+    ("all_gather", "opt_prelaunch_hier_pipe"),
+    ("reduce_scatter", "hier_pipe_rs"),
+    ("all_reduce", "opt_prelaunch_hier_ring_rs"),
+])
+@pytest.mark.parametrize("size", [64 * 1024, 16 * MB])
+def test_hier_symmetric_matches_full_event_loop(collective, variant, size):
+    """Representative-device simulation == full N-device event loop,
+    bit-for-bit, on the 2-node MI300X cluster.  Any translation-variant
+    tie-break (e.g. two queues racing one link) breaks this equality."""
+    sched = _SCHED[collective](CLUSTER, size, variant)
+    assert sched.symmetric
+    sym = simulate(sched, CLUSTER).latency
+    full = simulate(sched, CLUSTER, symmetric=False).latency
+    assert sym == full
+
+
+@pytest.mark.parametrize("collective,variant", [
+    ("all_gather", "hier_pipe"),
+    ("all_reduce", "hier_ring_rs"),
+])
+def test_hier_symmetric_matches_full_event_loop_tpu64(collective, variant):
+    """Same equality on the 64-chip multislice (4 DCN-joined tori) — the
+    torus intra tier plus 4-way inter ring exercises deeper tag nesting
+    than the 2-node cluster."""
+    size = 2 * MB
+    sched = _SCHED[collective](TPU64, size, variant)
+    assert sched.symmetric
+    assert (simulate(sched, TPU64).latency
+            == simulate(sched, TPU64, symmetric=False).latency)
+
+
+@pytest.mark.parametrize("topo", [CLUSTER, TPU64], ids=lambda t: t.name)
+def test_vectorized_sweep_bit_identical(topo):
+    """The dispatch sweep fast path (rep-only builds + argmin grid,
+    DESIGN.md §11.3) returns exactly the per-point simulate() latencies
+    for every multi-node candidate — winners can never differ between the
+    fast and slow paths."""
+    sizes = (64 * 1024, 1 * MB, 16 * MB)
+    for collective in ("all_gather", "reduce_scatter", "all_reduce"):
+        variants = candidate_variants(
+            topo, collective, allow_pipelined=True, allow_optimized=True,
+            allow_reduce=collective != "all_gather")
+        for v in variants:
+            fast = sweep_candidate_latencies(topo, collective, sizes, v, None)
+            ref = [variant_latency(topo, collective, s, v) for s in sizes]
+            assert fast == ref, (collective, v)
+
+
+def test_rep_latency_refuses_non_symmetric():
+    """Flat fan-outs on a multi-node fabric are not translation invariant
+    (symmetric=False): the fast path must decline, not guess."""
+    assert rep_latency(CLUSTER, "all_gather", 1 * MB, "pcpy") is None
+    assert sweep_variant_latencies(
+        CLUSTER, "all_gather", (1 * MB, 4 * MB), "pcpy", None) is None
+
+
+# -------------------------------------------------------------- topology
+
+def test_multinode_topology_structure():
+    """Node bookkeeping + routing: cross-node transfers are one NIC hop at
+    NIC bandwidth, neighbors never cross nodes, and the ring order is
+    node-major so ring collectives stay on intra links."""
+    topo = TPU64
+    assert topo.n_nodes == 4 and topo.node_devices == 16
+    assert topo.node_of(17) == 1 and topo.local_rank(17) == 1
+    # cross-node: single nic hop, sender-side resource, NIC bandwidth
+    path, bw = topo.wire_path(3, 40)
+    assert path == ((f"nic:3", topo.calib.nic_latency),)
+    assert bw == topo.calib.nic_bytes_per_s
+    # intra-node: directed links at DMA-link bandwidth
+    path, bw = topo.wire_path(0, 1)
+    assert all(key.startswith("link:") for key, _ in path)
+    assert bw == topo.link_bw * topo.calib.dma_link_efficiency
+    # neighbors stay inside the node
+    for dev in (0, 17, 63):
+        node = topo.node_of(dev)
+        assert all(topo.node_of(nb) == node for nb in topo.neighbors(dev))
+    # node-major ring: consecutive devices share a node except at the
+    # n_nodes boundaries
+    ring = topo.ring_order()
+    crossings = sum(topo.node_of(a) != topo.node_of(b)
+                    for a, b in zip(ring, ring[1:] + ring[:1]))
+    assert crossings == topo.n_nodes
