@@ -20,6 +20,14 @@ sweep — the derivation the v6 multi-node tables depend on.  Latencies are
 asserted bit-identical point by point; ``--sweep --check`` enforces the
 >=5x throughput floor and a wall budget on the fast path.
 
+``--composed`` guards the §12 multi-schedule composition path: K
+staggered chunked GB-scale streams through ``run_composed`` must cost no
+more than a small constant factor over the sum of K isolated full-loop
+``simulate()`` runs.  Tag namespacing memoizes per command *object*, so a
+regression that breaks §8.3 identity-run sharing (every chunk becoming its
+own event) blows the ratio up by orders of magnitude — this floor is the
+tripwire.  K=1 is asserted bit-identical to ``simulate`` while at it.
+
 Both simulators produce the same latencies (asserted per scenario): the
 overhaul changes data structures, not semantics.
 """
@@ -32,7 +40,8 @@ import time
 from collections import defaultdict
 
 from repro.core.backend import _SWEEP_CHUNKS, _SWEEP_SIZES
-from repro.core.dma import alltoall_schedule, mi300x_platform, simulate
+from repro.core.dma import (alltoall_schedule, mi300x_platform,
+                            run_composed, simulate)
 from repro.core.dma.collectives import allgather_schedule
 from repro.core.dma.commands import DATA_KINDS, CmdKind
 from repro.core.dma.dispatch import candidate_variants
@@ -57,6 +66,13 @@ BUDGET_S = 2.5           # --check: new-sim wall budget for the whole sweep
 #: with device count), inside a wall budget that keeps CI honest.
 SWEEP_MIN_SPEEDUP = 5.0
 SWEEP_BUDGET_S = 2.0
+
+#: --composed acceptance: run_composed over K concurrent chunked GB-scale
+#: streams vs the sum of K isolated simulate() walls.  Composition adds
+#: work (one shared world serializes more events than K private ones), so
+#: the guard is an overhead *ceiling*, not a speedup floor.
+COMPOSED_MAX_OVERHEAD = 2.5
+COMPOSED_BUDGET_S = 3.0
 
 
 # --------------------------------------------------------------------------
@@ -355,6 +371,43 @@ def run_sweep(verbose: bool = True) -> dict:
     return report
 
 
+def run_composed_bench(verbose: bool = True) -> dict:
+    """Time the §12 composition path: K staggered GB-scale chunked streams
+    in one world vs K isolated full-loop runs, plus the K=1 identity."""
+    topo = mi300x_platform()
+    streams = [alltoall_schedule(topo, 1 * GB, v)
+               for v in ("pcpy", "opt_pcpy", "pcpy", "opt_pcpy", "pcpy",
+                         "opt_pcpy")]
+    releases = [k * 1e-4 for k in range(len(streams))]
+
+    one = simulate(streams[0], topo, symmetric=False)
+    k1 = run_composed([streams[0]], topo)
+    if (k1.result.latency != one.latency
+            or k1.result.per_device != one.per_device):
+        raise AssertionError("run_composed K=1 diverged from simulate()")
+
+    t_iso = sum(_wall(lambda s=s: simulate(s, topo, symmetric=False))
+                for s in streams)
+    t_comp = _wall(lambda: run_composed(streams, topo, releases))
+    comp = run_composed(streams, topo, releases)
+    overhead = t_comp / t_iso
+    report = {
+        "streams": len(streams),
+        "wall_isolated_sum_s": t_iso,
+        "wall_composed_s": t_comp,
+        "overhead": overhead,
+        "makespan_s": comp.makespan,
+        "max_overhead": COMPOSED_MAX_OVERHEAD,
+        "budget_s": COMPOSED_BUDGET_S,
+    }
+    if verbose:
+        print(f"composed {len(streams)}-stream GB-scale all-to-all: "
+              f"composed {t_comp * 1e3:.1f}ms vs isolated-sum "
+              f"{t_iso * 1e3:.1f}ms -> {overhead:.2f}x overhead "
+              f"(ceiling {COMPOSED_MAX_OVERHEAD}x, budget {COMPOSED_BUDGET_S}s)")
+    return report
+
+
 def _json_path(name: str = "sim_perf.json") -> str:
     cache_dir = os.environ.get("REPRO_DISPATCH_CACHE")
     if cache_dir:
@@ -373,11 +426,35 @@ def main(argv=None) -> int:
                    help="explicit JSON report path (default: "
                         "$REPRO_DISPATCH_CACHE/sim_perf.json, or "
                         "sim_perf_sweep.json with --sweep)")
+    p.add_argument("--composed", action="store_true",
+                   help="benchmark the multi-schedule composition path "
+                        "(run_composed, DESIGN.md §12) against the sum of "
+                        "isolated simulate() runs and enforce the overhead "
+                        "ceiling with --check")
     p.add_argument("--sweep", action="store_true",
                    help="benchmark the vectorized dispatch-sweep fast path "
                         "against the per-point loop on tpu64 (DESIGN.md "
                         "§11.3) instead of the simulator hot path")
     args = p.parse_args(argv)
+    if args.composed:
+        report = run_composed_bench()
+        if args.check or args.json:
+            path = args.json or _json_path("sim_perf_composed.json")
+            with open(path, "w") as f:
+                json.dump(report, f, indent=1)
+            print(f"wrote {path}")
+        if not args.check:
+            return 0
+        ok = True
+        if report["overhead"] > COMPOSED_MAX_OVERHEAD:
+            print(f"FAIL: composed overhead {report['overhead']:.2f}x exceeds "
+                  f"{COMPOSED_MAX_OVERHEAD}x ceiling")
+            ok = False
+        if report["wall_composed_s"] > COMPOSED_BUDGET_S:
+            print(f"FAIL: composed wall {report['wall_composed_s']:.3f}s "
+                  f"exceeds {COMPOSED_BUDGET_S}s budget")
+            ok = False
+        return 0 if ok else 1
     if args.sweep:
         report = run_sweep()
         if args.check or args.json:

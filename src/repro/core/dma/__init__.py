@@ -39,7 +39,15 @@ from .dispatch import (
     reduce_variants,
     variant_latency,
 )
-from .engine import PhaseBreakdown, SimResult, simulate, single_copy_breakdown
+from .engine import (
+    ComposedResult,
+    PhaseBreakdown,
+    ScheduleOutcome,
+    SimResult,
+    run_composed,
+    simulate,
+    single_copy_breakdown,
+)
 from .optimizations import (
     OptimizationConfig,
     batch_commands,
@@ -72,7 +80,8 @@ __all__ = [
     "candidate_variants", "derive_dispatch", "optimized_variants",
     "paper_dispatch", "pick_variant", "pipelined_variants",
     "reduce_variants", "variant_latency",
-    "PhaseBreakdown", "SimResult", "simulate", "single_copy_breakdown",
+    "ComposedResult", "PhaseBreakdown", "ScheduleOutcome", "SimResult",
+    "run_composed", "simulate", "single_copy_breakdown",
     "OptimizationConfig", "batch_commands", "fuse_signals", "optimize",
     "parse_optimized", "split_queues",
     "cu_collective_power", "dma_collective_power",

@@ -438,3 +438,73 @@ def optimized_stream_claims(
                   "opt_pcpy over pcpy, AA >=64MB (paper: ~7% large-size gain)"),
         ]
     return claims
+
+
+# ----------------------------------------------------------------------- #
+# Concurrent-traffic serving claims (DESIGN.md §12)                       #
+# ----------------------------------------------------------------------- #
+
+#: Canonical offered-load sweep (requests/s) of ``fig_serving_load``: the
+#: low end is unloaded (every TTFT at the Fig. 16 number), the high end is
+#: past the host-link saturation knee of the canonical workload below.
+SERVING_RATES = (250.0, 500.0, 1000.0, 1500.0, 2000.0, 3000.0)
+
+
+def serving_workload(rate: float):
+    """The canonical contention workload: 100 bursty requests (MMPP,
+    burst_factor 10), 4096-token prompts (±25%), 4 output tokens, seed 7 —
+    fetch-dominated serving where KV-fetch DMA traffic, not decode compute,
+    is the bottleneck (the regime the paper's offload targets)."""
+    from repro.serve.workload import synthetic_workload
+
+    return synthetic_workload(100, rate, seed=7, kind="bursty",
+                              prompt_tokens=4096, output_tokens=4,
+                              burst_factor=10.0, p_enter=0.4, p_exit=0.1)
+
+
+def serving_report(rate: float, admission: str):
+    """One point of the serving sweep: the canonical workload through the
+    §12 continuous-batching loop under ``admission`` ("fifo"/"defer")."""
+    from repro.serve.engine import ServingConfig, ServingSimulator
+
+    sim = ServingSimulator(ServingConfig(admission=admission))
+    return sim.run(serving_workload(rate))
+
+
+def serving_load_claims(reports=None) -> list[Claim]:
+    """Claim bands for serving under concurrent traffic (DESIGN.md §12).
+
+    * ``serving_ttft_knee`` — p99 TTFT under FIFO admission degrades ~8.5x
+      between the unloaded low end and the post-knee high end of the
+      canonical sweep: composed-schedule contention (host-link queueing of
+      concurrent KV fetches + batch-slot head-of-line blocking) produces a
+      saturation knee, not graceful linear growth.
+    * ``serving_admission_gain`` — the contention-aware admission policy
+      (defer a launch when the target host link's fetch queue is at depth)
+      recovers ~1.75x goodput over FIFO past the knee by keeping bursts on
+      a hot device from pinning batch slots and starving cool links, while
+      staying neutral at low load.
+
+    ``reports`` optionally supplies precomputed ``{(rate, admission):
+    ServingReport}`` points (the benchmark passes its sweep) so the three
+    endpoint runs are not simulated twice.  Values are model-derived (no
+    paper counterpart figure — the paper measures one request at a time);
+    the bands pin today's behavior against regressions.
+    """
+    reports = dict(reports or {})
+    lo_rate, hi_rate = SERVING_RATES[0], SERVING_RATES[-1]
+    for point in ((lo_rate, "fifo"), (hi_rate, "fifo"), (hi_rate, "defer")):
+        if point not in reports:
+            reports[point] = serving_report(*point)
+    knee = (reports[(hi_rate, "fifo")].ttft_p99
+            / reports[(lo_rate, "fifo")].ttft_p99)
+    gain = (reports[(hi_rate, "defer")].goodput
+            / reports[(hi_rate, "fifo")].goodput)
+    return [
+        Claim("serving_ttft_knee", 8.5, knee, 4.0, 15.0,
+              "p99 TTFT degradation, FIFO, 3000 vs 250 req/s (model-derived "
+              "saturation knee under composed contention)"),
+        Claim("serving_admission_gain", 1.75, gain, 1.2, 2.4,
+              "goodput of defer-admission over FIFO at 3000 req/s "
+              "(model-derived contention-aware admission win)"),
+    ]

@@ -9,6 +9,15 @@ path — see DESIGN.md §2).  This module keeps the historical import surface:
 """
 from __future__ import annotations
 
-from .sim import PhaseBreakdown, SimResult, simulate, single_copy_breakdown
+from .sim import (
+    ComposedResult,
+    PhaseBreakdown,
+    ScheduleOutcome,
+    SimResult,
+    run_composed,
+    simulate,
+    single_copy_breakdown,
+)
 
-__all__ = ["PhaseBreakdown", "SimResult", "simulate", "single_copy_breakdown"]
+__all__ = ["ComposedResult", "PhaseBreakdown", "ScheduleOutcome", "SimResult",
+           "run_composed", "simulate", "single_copy_breakdown"]

@@ -128,6 +128,17 @@ Device 1's queue makes no progress until device 0's tagged signal is raised;
 :func:`_run` parks it on the ``("done", 0, 0)`` waiter list and re-queues it
 the moment device 0's signal lands (a drained heap with parked waiters left
 over raises ``RuntimeError`` naming the blocked tags).
+
+Multi-schedule composition (DESIGN.md §12): :func:`run_composed` executes K
+independent schedules in ONE resource world — every host, engine, link and
+NIC timeline is shared, so concurrent collectives contend exactly as they
+would on real hardware.  Each schedule is released at its arrival time
+(host control may not begin earlier), its tags are namespaced by schedule
+index so streams never satisfy each other's waits, and the per-schedule
+``ScheduleOutcome`` reports release/start/finish plus a phase breakdown
+relative to the release.  Composed runs always take the full event loop:
+the symmetric fast path reasons about ONE schedule's translation symmetry
+and is meaningless under cross-schedule contention.
 """
 from __future__ import annotations
 
@@ -278,9 +289,10 @@ class _Timeline:
 
 class _QueueState:
     __slots__ = ("q", "idx", "issue", "seen_data", "last_end", "copy_end",
-                 "start", "engine_tl", "blocked")
+                 "start", "engine_tl", "blocked", "key")
 
-    def __init__(self, q: EngineQueue, start: float, engine_tl: _Timeline) -> None:
+    def __init__(self, q: EngineQueue, start: float, engine_tl: _Timeline,
+                 key: tuple) -> None:
         self.q = q
         self.idx = 0
         self.start = start
@@ -290,6 +302,7 @@ class _QueueState:
         self.copy_end = start       # max data completion (device copy phase)
         self.engine_tl = engine_tl  # the engine's streaming timeline (cached)
         self.blocked = None         # resolved tag this queue is parked on
+        self.key = key              # (schedule index, device) stats key (§12)
 
 
 class _Sim:
@@ -300,12 +313,15 @@ class _Sim:
         self.timelines: dict[str, _Timeline] = {}
         self.tags: dict[tuple, float] = {}  # tagged signal -> raise time
         self.raised: list[tuple] = []       # tags raised since last drain (§8.2)
-        self.host_signals: dict[int, list[float]] = defaultdict(list)
+        # Signal/event stats are keyed by (schedule index, device) so
+        # composed runs (§12) keep per-schedule provenance; a plain
+        # simulate() uses schedule index 0 throughout.
+        self.host_signals: dict[tuple, list[float]] = defaultdict(list)
         # Fused completions (§7.3) write adjacent slots of one completion
         # record per device: the host drains them in a single sweep, paying
         # sync_obs once and sync_obs_batched for each further entry.
-        self.fused_signals: dict[int, list[float]] = defaultdict(list)
-        self.host_events: dict[int, int] = defaultdict(int)
+        self.fused_signals: dict[tuple, list[float]] = defaultdict(list)
+        self.host_events: dict[tuple, int] = defaultdict(int)
         self.engine_atomics: dict[int, int] = defaultdict(int)
         self.reduce_chunks: dict[int, int] = defaultdict(int)
         # (src, dst) -> ((timeline, added latency) per hop, wire bandwidth);
@@ -507,7 +523,7 @@ class _Sim:
                     tags[rt] = end + c.fused_sync
                     self.raised.append(rt)
                 if cmd.fused_signal:
-                    self.fused_signals[q.device].append(end + c.fused_sync)
+                    self.fused_signals[st.key].append(end + c.fused_sync)
                 idx += 1
                 m = j - idx
                 if m > 0 and self._chunk_run(st, cmd, m, ts, tagged):
@@ -559,7 +575,7 @@ class _Sim:
                 else:
                     # Completion signals post asynchronously (fire-and-forget):
                     # later copies in the queue are not delayed.
-                    self.host_signals[q.device].append(t)
+                    self.host_signals[st.key].append(t)
                 idx += 1
             else:                           # POLL: arming handled via queue start
                 idx += 1
@@ -598,8 +614,16 @@ def _control_cost(live: list[EngineQueue], c) -> tuple[float, int]:
     return t, events
 
 
-def _start_device(sim: _Sim, dev: int, queues: list[EngineQueue]) -> tuple[float, list[_QueueState]]:
-    """Host control + doorbells; returns (t_control, queue states).
+def _start_device(sim: _Sim, dev: int, queues: list[EngineQueue],
+                  t0: float, key: tuple) -> tuple[float, float, list[_QueueState]]:
+    """Host control + doorbells; returns (cstart, cend, queue states).
+
+    ``t0`` is the schedule's release time (DESIGN.md §12): host
+    packet-creation may not begin earlier, and prelaunched queues arm
+    relative to it.  ``cstart``/``cend`` are the absolute control-phase
+    grant/end on the (possibly contended) host timeline; a plain
+    simulate() passes ``t0=0`` on fresh timelines, where
+    ``cend - t0 == t_control`` exactly.
 
     Doorbells are serial MMIO writes on the host.  Batched queues
     (``batch > 1``) submitted consecutively ring back-to-back: the first
@@ -616,7 +640,10 @@ def _start_device(sim: _Sim, dev: int, queues: list[EngineQueue]) -> tuple[float
     host = sim.timeline(f"host:{dev}")
 
     t_control, events = _control_cost(live, c)
-    host.acquire(0.0, t_control)
+    if live:
+        cstart, cend = host.acquire(t0, t_control)
+    else:
+        cstart = cend = t0
 
     states: list[_QueueState] = []
     batched_seen = False
@@ -632,21 +659,23 @@ def _start_device(sim: _Sim, dev: int, queues: list[EngineQueue]) -> tuple[float
         _, bell = host.acquire(host.free, bell_cost)
         engine_tl = sim.timeline(f"engine:{dev}.{q.engine}")
         engine_tl.acquire(bell, c.fetch)
-        states.append(_QueueState(q, bell + c.fetch, engine_tl))
+        states.append(_QueueState(q, bell + c.fetch, engine_tl, key))
     for q in pre:
-        states.append(_QueueState(q, c.poll_trigger,
-                                  sim.timeline(f"engine:{dev}.{q.engine}")))
-    sim.host_events[dev] += events
-    return t_control, states
+        states.append(_QueueState(q, t0 + c.poll_trigger,
+                                  sim.timeline(f"engine:{dev}.{q.engine}"), key))
+    sim.host_events[key] += events
+    return cstart, cend, states
 
 
-def _finish_device(sim: _Sim, dev: int, t_control: float,
-                   states: list[_QueueState]) -> PhaseBreakdown:
+def _finish_device(sim: _Sim, dev: int, cend: float,
+                   states: list[_QueueState], key: tuple) -> tuple[float, float, float]:
+    """Drain this job's completion signals; returns absolute
+    (sched_end, copy_end, total)."""
     c = sim.topo.calib
-    sched_end = max((st.start for st in states), default=t_control)
+    sched_end = max((st.start for st in states), default=cend)
     copy_end = max((st.copy_end for st in states), default=sched_end)
-    sigs = sim.host_signals.get(dev, [])
-    fused = sim.fused_signals.get(dev, [])
+    sigs = sim.host_signals.get(key, [])
+    fused = sim.fused_signals.get(key, [])
     # The host drains its completion-signal set serially once the last
     # engine signal has landed: one observation per scattered per-queue
     # signal; fused completions (§7.3) share one contiguous completion
@@ -658,19 +687,32 @@ def _finish_device(sim: _Sim, dev: int, t_control: float,
     # One host wakeup drains the whole completion set (scattered signals
     # still cost a serial sync_obs read each — time, not an extra wakeup).
     if sigs or fused:
-        sim.host_events[dev] += 1
+        sim.host_events[key] += 1
     signal_done = max([copy_end] + sigs + fused)
     _, total = sim.timeline(f"host:{dev}").acquire(signal_done, t_obs)
+    return sched_end, copy_end, total
+
+
+def _breakdown(t0: float, cend: float, sched_end: float, copy_end: float,
+               total: float) -> PhaseBreakdown:
+    """Phase split of one job's absolute milestones relative to ``t0``."""
     return PhaseBreakdown(
-        control=t_control,
-        schedule=max(0.0, sched_end - t_control),
+        control=cend - t0,
+        schedule=max(0.0, sched_end - cend),
         copy=max(0.0, copy_end - sched_end),
         sync=max(0.0, total - copy_end),
     )
 
 
-def _run(sim: _Sim, device_queues: dict[int, list[EngineQueue]]) -> dict[int, PhaseBreakdown]:
+def _run(sim: _Sim, jobs: list[tuple[tuple, int, list[EngineQueue], float]]
+         ) -> dict[tuple, tuple[float, float, float, list[_QueueState]]]:
     """Heap-based event loop (DESIGN.md §8.2).
+
+    ``jobs`` is a list of (key, device, queues, release) in submission
+    order — host control/doorbells are booked eagerly per job in that
+    order, so composed callers (§12) must pre-sort by release time.
+    Returns key -> (release, cstart, cend, states); phase accounting
+    happens in :func:`_finish_device` once the loop drains.
 
     Each queue enters a heap keyed by its ready time (doorbell + fetch, or
     the poll trigger for prelaunched queues) and runs until it finishes or
@@ -680,10 +722,13 @@ def _run(sim: _Sim, device_queues: dict[int, list[EngineQueue]]) -> dict[int, Ph
     order.  A drained heap with parked waiters left is a deadlock, reported
     with the blocked tags.
     """
-    started = {dev: _start_device(sim, dev, qs) for dev, qs in device_queues.items()}
+    started: dict[tuple, tuple[float, float, float, list[_QueueState]]] = {}
+    for key, dev, queues, t0 in jobs:
+        cstart, cend, states = _start_device(sim, dev, queues, t0, key)
+        started[key] = (t0, cstart, cend, states)
     heap: list[tuple[float, int, _QueueState]] = []
     seq = 0
-    for _, states in started.values():
+    for _, _, _, states in started.values():
         for st in states:
             heap.append((st.start, seq, st))
             seq += 1
@@ -709,8 +754,7 @@ def _run(sim: _Sim, device_queues: dict[int, list[EngineQueue]]) -> dict[int, Ph
         blocked = {st.q.commands[st.idx].tag
                    for ws in waiting.values() for st in ws}
         raise RuntimeError(f"deadlocked schedule: waits on unsignaled tags {blocked}")
-    return {dev: _finish_device(sim, dev, t_control, states)
-            for dev, (t_control, states) in started.items()}
+    return started
 
 
 def _device_hbm_bytes(queues: list[EngineQueue]) -> int:
@@ -747,23 +791,31 @@ def simulate(schedule: Schedule, topo: Topology, *, symmetric: bool | None = Non
     """
     sym = schedule.symmetric if symmetric is None else symmetric
     devices = schedule.devices
+
+    def run_full(run_devices: list[int]) -> dict[int, PhaseBreakdown]:
+        started = _run(sim, [((0, d), d, schedule.queues_for(d), 0.0)
+                             for d in run_devices])
+        return {d: _breakdown(t0, cend, *_finish_device(sim, d, cend, states, key))
+                for key, (t0, cstart, cend, states) in started.items()
+                for d in (key[1],)}
+
     if sym and len(devices) > 1:
         rep = devices[0]
         sim = _Sim(topo, rep)
         rep_queues = schedule.queues_for(rep)
-        breakdown = _run(sim, {rep: rep_queues})[rep]
+        breakdown = run_full([rep])[rep]
         per_device = {d: breakdown for d in devices}
         engines = {d: len({q.engine for q in rep_queues}) for d in devices}
         hbm = {d: _device_hbm_bytes(rep_queues) for d in devices}
-        events = {d: sim.host_events.get(rep, 0) for d in devices}
+        events = {d: sim.host_events.get((0, rep), 0) for d in devices}
         atomics = {d: sim.engine_atomics.get(rep, 0) for d in devices}
         reduces = {d: sim.reduce_chunks.get(rep, 0) for d in devices}
     else:
         sim = _Sim(topo, None)
-        per_device = _run(sim, {d: schedule.queues_for(d) for d in devices})
+        per_device = run_full(devices)
         engines = {d: schedule.engines_used(d) for d in devices}
         hbm = {d: _device_hbm_bytes(schedule.queues_for(d)) for d in devices}
-        events = {d: sim.host_events.get(d, 0) for d in devices}
+        events = {d: sim.host_events.get((0, d), 0) for d in devices}
         atomics = {d: sim.engine_atomics.get(d, 0) for d in devices}
         reduces = {d: sim.reduce_chunks.get(d, 0) for d in devices}
         rep = None
@@ -781,6 +833,183 @@ def simulate(schedule: Schedule, topo: Topology, *, symmetric: bool | None = Non
         reduce_chunks=reduces,
         representative=rep,
     )
+
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleOutcome:
+    """One schedule's timing inside a composed run (DESIGN.md §12).
+
+    ``release`` is the arrival time passed to :func:`run_composed`;
+    ``start`` is when the shared host first granted its control phase
+    (``start - release`` is pure queueing delay); ``latency`` is the
+    request-observed completion measured from ``release`` — the max over
+    the schedule's per-device phase sums, the *same arithmetic*
+    ``simulate()`` uses for ``SimResult.latency``, so under zero contention
+    (or K=1) the two are bit-identical.  ``finish`` is the absolute
+    completion, ``release + latency``.
+    """
+
+    index: int
+    name: str
+    release: float
+    start: float
+    latency: float
+    per_device: dict[int, PhaseBreakdown]
+
+    @property
+    def finish(self) -> float:
+        """Absolute completion time of the schedule's last device."""
+        return self.release + self.latency
+
+
+@dataclasses.dataclass(frozen=True)
+class ComposedResult:
+    """K schedules executed in one resource world (:func:`run_composed`).
+
+    ``outcomes[k]`` times schedule k against its own release;``result`` is
+    the composed world's :class:`SimResult` — ``latency`` is the makespan
+    (time origin 0), ``timelines``/``busy`` cover every shared resource,
+    per-device counters aggregate across schedules, and ``per_device``
+    holds the breakdown of the last-finishing schedule on each device
+    measured from 0 (so ``latency == max(total)`` still holds).
+    """
+
+    outcomes: tuple[ScheduleOutcome, ...]
+    result: SimResult
+
+    @property
+    def makespan(self) -> float:
+        return self.result.latency
+
+
+def _namespace_schedule(schedule: Schedule, k: int) -> Schedule:
+    """Prefix every tag/fused_tag with the schedule index (DESIGN.md §12).
+
+    Streams composed into one world must never satisfy each other's waits:
+    schedule k's tag ``(name, dev, step, ...)`` becomes
+    ``(k, name, dev, step, ...)``.  The rewrite is memoized by command
+    *identity* so a run of identical chunk commands (one shared instance,
+    §8.3) maps to one shared rewritten instance — the closed-form chunk-run
+    detection survives composition.  Tagless commands pass through
+    unchanged.
+    """
+    memo: dict[int, object] = {}
+
+    def rewrite(c):
+        nc = memo.get(id(c))
+        if nc is None:
+            if c.tag is None and c.fused_tag is None:
+                nc = c
+            else:
+                nc = dataclasses.replace(
+                    c,
+                    tag=None if c.tag is None else (k,) + tuple(c.tag),
+                    fused_tag=(None if c.fused_tag is None
+                               else (k,) + tuple(c.fused_tag)))
+            memo[id(c)] = nc
+        return nc
+
+    queues = tuple(
+        dataclasses.replace(q, commands=tuple(rewrite(c) for c in q.commands))
+        for q in schedule.queues)
+    return dataclasses.replace(schedule, queues=queues, symmetric=False)
+
+
+def run_composed(schedules, topo: Topology,
+                 release_times=None) -> ComposedResult:
+    """Execute K independent schedules in ONE resource world (§12).
+
+    ``schedules`` is a sequence of :class:`Schedule`; ``release_times``
+    (default all 0) gives each stream's arrival time — its host control may
+    not start earlier.  All host/engine/link/NIC timelines are shared, so
+    concurrent streams contend exactly like concurrent collectives on real
+    hardware; tags are namespaced per schedule so streams stay causally
+    independent.  Host control/doorbells are granted in release order (ties:
+    argument order), matching a driver that submits work as it arrives.
+
+    Composed runs always execute the full event loop: the symmetric fast
+    path (§6) models ONE schedule's translation symmetry and bails out here
+    by construction.  With K=1 and release 0 the composed result is
+    bit-identical to ``simulate(schedule, topo, symmetric=False)`` — and
+    hence, for symmetric schedules, to ``simulate(schedule, topo)``.
+    """
+    schedules = list(schedules)
+    if not schedules:
+        raise ValueError("run_composed needs at least one schedule")
+    if release_times is None:
+        release_times = [0.0] * len(schedules)
+    release_times = [float(t) for t in release_times]
+    if len(release_times) != len(schedules):
+        raise ValueError(
+            f"{len(schedules)} schedules but {len(release_times)} release times")
+    if any(t < 0.0 for t in release_times):
+        raise ValueError("release times must be >= 0")
+
+    sim = _Sim(topo, None)
+    namespaced = [_namespace_schedule(s, k) for k, s in enumerate(schedules)]
+    jobs = []
+    for k, (ns, t0) in enumerate(zip(namespaced, release_times)):
+        for d in ns.devices:
+            jobs.append(((k, d), d, ns.queues_for(d), t0))
+    jobs.sort(key=lambda j: j[3])       # stable: ties keep submission order
+    started = _run(sim, jobs)
+
+    # Per-job milestones, finished in submission order (the host drains
+    # completion sets serially; order is the same deterministic ready-time/
+    # submission order the event loop used).
+    raw: dict[tuple, tuple[float, float, float, float, float, float]] = {}
+    for key, (t0, cstart, cend, states) in started.items():
+        sched_end, copy_end, total = _finish_device(sim, key[1], cend, states, key)
+        raw[key] = (t0, cstart, cend, sched_end, copy_end, total)
+
+    outcomes = []
+    for k, (s, ns, t0) in enumerate(zip(schedules, namespaced, release_times)):
+        devs = ns.devices
+        per_device = {}
+        for d in devs:
+            _, _, cend, sched_end, copy_end, total = raw[(k, d)]
+            per_device[d] = _breakdown(t0, cend, sched_end, copy_end, total)
+        outcomes.append(ScheduleOutcome(
+            index=k,
+            name=s.name,
+            release=t0,
+            start=min(raw[(k, d)][1] for d in devs),
+            latency=max(b.total for b in per_device.values()),
+            per_device=per_device,
+        ))
+
+    # Composed world view: on each device, report the breakdown of the
+    # last-finishing schedule measured from time 0, so the SimResult keeps
+    # its `latency == max(per_device total)` invariant (= the makespan).
+    all_devices = sorted({d for ns in namespaced for d in ns.devices})
+    per_device = {}
+    engines: dict[int, int] = {}
+    hbm: dict[int, int] = {}
+    events: dict[int, int] = {}
+    for d in all_devices:
+        keys = [(k, d) for k, ns in enumerate(namespaced) if d in ns.devices]
+        last = max(keys, key=lambda key: raw[key][5])
+        _, _, cend, sched_end, copy_end, total = raw[last]
+        per_device[d] = _breakdown(0.0, cend, sched_end, copy_end, total)
+        engines[d] = len({q.engine for ns in namespaced for q in ns.queues_for(d)})
+        hbm[d] = sum(_device_hbm_bytes(ns.queues_for(d)) for ns in namespaced)
+        events[d] = sum(sim.host_events.get(key, 0) for key in keys)
+
+    # max-of-totals rather than max(outcome.finish): bitwise the same
+    # arithmetic simulate() uses (sum of phases), so K=1 stays bit-identical.
+    result = SimResult(
+        latency=max(b.total for b in per_device.values()),
+        per_device=per_device,
+        engines_used=engines,
+        hbm_bytes=hbm,
+        timelines={k2: tuple(tl.intervals) for k2, tl in sim.timelines.items()},
+        busy={k2: tl.busy for k2, tl in sim.timelines.items()},
+        host_events=events,
+        engine_atomics={d: sim.engine_atomics.get(d, 0) for d in all_devices},
+        reduce_chunks={d: sim.reduce_chunks.get(d, 0) for d in all_devices},
+        representative=None,
+    )
+    return ComposedResult(outcomes=tuple(outcomes), result=result)
 
 
 def single_copy_breakdown(size: int, topo: Topology, *, prelaunch: bool = False) -> PhaseBreakdown:

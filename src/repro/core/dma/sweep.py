@@ -41,7 +41,7 @@ import numpy as np
 
 from .collectives import (allgather_schedule, allreduce_schedule,
                           alltoall_schedule, reduce_scatter_schedule)
-from .sim import _Sim, _run
+from .sim import _Sim, _breakdown, _finish_device, _run
 from .topology import Topology
 
 _BUILDERS = {
@@ -68,7 +68,10 @@ def rep_latency(topo: Topology, collective: str, size: int, variant: str,
     if not sched.symmetric or topo.n_devices < 2:
         return None
     sim = _Sim(topo, _REP)
-    return _run(sim, {_REP: sched.queues_for(_REP)})[_REP].total
+    key = (0, _REP)
+    started = _run(sim, [(key, _REP, sched.queues_for(_REP), 0.0)])
+    t0, _, cend, states = started[key]
+    return _breakdown(t0, cend, *_finish_device(sim, _REP, cend, states, key)).total
 
 
 def sweep_variant_latencies(
