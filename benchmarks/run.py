@@ -14,7 +14,7 @@ import time
 def main() -> None:
     from . import (calibration, fig01_ag_gap, fig07_copy_breakdown, fig13_allgather,
                    fig14_alltoall, fig15_power, fig16_ttft, fig17_throughput,
-                   fig_allreduce, fig_serving_load, tables_dispatch,
+                   fig_allreduce, fig_faults, fig_serving_load, tables_dispatch,
                    tables_multinode, tpu_collectives)
 
     benches = [
@@ -28,6 +28,7 @@ def main() -> None:
         ("fig16_ttft", fig16_ttft),
         ("fig17_throughput", fig17_throughput),
         ("fig_serving_load", fig_serving_load),
+        ("fig_faults", fig_faults),
         ("tables_dispatch", tables_dispatch),
         ("tables_multinode", tables_multinode),
         ("tpu_collectives", tpu_collectives),

@@ -45,6 +45,7 @@ from repro.core.dma import (alltoall_schedule, mi300x_platform,
 from repro.core.dma.collectives import allgather_schedule
 from repro.core.dma.commands import DATA_KINDS, CmdKind
 from repro.core.dma.dispatch import candidate_variants
+from repro.core.dma.faults import FaultPlan
 from repro.core.dma.sweep import sweep_variant_latencies
 from repro.core.dma.topology import tpu_v5e_multislice
 
@@ -73,6 +74,14 @@ SWEEP_BUDGET_S = 2.0
 #: the guard is an overhead *ceiling*, not a speedup floor.
 COMPOSED_MAX_OVERHEAD = 2.5
 COMPOSED_BUDGET_S = 3.0
+
+#: Fault-hook acceptance (DESIGN.md §13.1): an *empty* FaultPlan is
+#: normalized to the untouched fault-free path, so passing one must be
+#: bit-identical AND essentially free — the guard caps the wall-clock
+#: ratio of the empty-plan run over the plain run on the reference
+#: scenario.  A regression here means fault threading leaked work into
+#: the fault-free event loop.
+FAULT_MAX_OVERHEAD = 1.05
 
 
 # --------------------------------------------------------------------------
@@ -304,6 +313,20 @@ def run(verbose: bool = True) -> dict:
                   f"new {t_new * 1e3:7.2f}ms  legacy {t_old * 1e3:7.2f}ms  "
                   f"{t_old / t_new:6.1f}x")
     speedup = legacy_total / new_total
+
+    # Fault-hook overhead (§13.1): empty plan must be bit-identical and free.
+    sched = alltoall_schedule(topo, SCENARIOS[0][0], SCENARIOS[0][1])
+    plain = simulate(sched, topo, symmetric=False)
+    empty = simulate(sched, topo, symmetric=False, faults=FaultPlan())
+    if plain.latency != empty.latency or empty.fault_report is not None:
+        raise AssertionError(
+            "empty FaultPlan diverged from the fault-free run: "
+            f"{empty.latency} vs {plain.latency}")
+    t_plain = _wall(lambda: simulate(sched, topo, symmetric=False), reps=5)
+    t_empty = _wall(lambda: simulate(sched, topo, symmetric=False,
+                                     faults=FaultPlan()), reps=5)
+    fault_overhead = t_empty / t_plain
+
     report = {
         "scenarios": scenarios,
         "wall_new_s": new_total,
@@ -311,11 +334,16 @@ def run(verbose: bool = True) -> dict:
         "speedup": speedup,
         "min_speedup": MIN_SPEEDUP,
         "budget_s": BUDGET_S,
+        "fault_overhead": fault_overhead,
+        "fault_max_overhead": FAULT_MAX_OVERHEAD,
     }
     if verbose:
         print(f"chunked 8-device GB-scale all-to-all sweep: "
               f"{speedup:.1f}x speedup (floor {MIN_SPEEDUP}x), "
               f"new-sim wall {new_total:.3f}s (budget {BUDGET_S}s)")
+        print(f"empty-FaultPlan overhead on the fault-free path: "
+              f"{fault_overhead:.3f}x (ceiling {FAULT_MAX_OVERHEAD}x, "
+              f"bit-identical asserted)")
     return report
 
 
@@ -489,6 +517,11 @@ def main(argv=None) -> int:
     if report["wall_new_s"] > BUDGET_S:
         print(f"FAIL: new-sim wall {report['wall_new_s']:.3f}s exceeds "
               f"{BUDGET_S}s budget")
+        ok = False
+    if report["fault_overhead"] > FAULT_MAX_OVERHEAD:
+        print(f"FAIL: empty-FaultPlan overhead "
+              f"{report['fault_overhead']:.3f}x exceeds "
+              f"{FAULT_MAX_OVERHEAD}x ceiling")
         ok = False
     return 0 if ok else 1
 

@@ -29,15 +29,31 @@ from .dispatch import (
     COLLECTIVE_BUILDERS,
     PAPER_AA_DISPATCH,
     PAPER_AG_DISPATCH,
+    PERTURB_SCENARIOS,
+    FragileEntry,
+    RobustnessReport,
     best_variant_for,
     candidate_variants,
     derive_dispatch,
+    dispatch_robustness,
     optimized_variants,
     paper_dispatch,
+    perturbed_topology,
     pick_variant,
     pipelined_variants,
     reduce_variants,
     variant_latency,
+)
+from .faults import (
+    BlockedWaiter,
+    FaultPlan,
+    FaultReport,
+    LinkDerate,
+    NicFlap,
+    RetryRecord,
+    SimFault,
+    Straggler,
+    straggler_plan,
 )
 from .engine import (
     ComposedResult,
@@ -76,10 +92,15 @@ __all__ = [
     "PIPE_DEPTH", "RS_VARIANTS", "allgather_schedule", "allreduce_schedule",
     "alltoall_schedule", "kv_fetch_schedule", "reduce_scatter_schedule",
     "COLLECTIVE_BUILDERS", "PAPER_AA_DISPATCH", "PAPER_AG_DISPATCH",
+    "PERTURB_SCENARIOS", "FragileEntry", "RobustnessReport",
     "best_variant_for",
-    "candidate_variants", "derive_dispatch", "optimized_variants",
-    "paper_dispatch", "pick_variant", "pipelined_variants",
+    "candidate_variants", "derive_dispatch", "dispatch_robustness",
+    "optimized_variants",
+    "paper_dispatch", "perturbed_topology", "pick_variant",
+    "pipelined_variants",
     "reduce_variants", "variant_latency",
+    "BlockedWaiter", "FaultPlan", "FaultReport", "LinkDerate", "NicFlap",
+    "RetryRecord", "SimFault", "Straggler", "straggler_plan",
     "ComposedResult", "PhaseBreakdown", "ScheduleOutcome", "SimResult",
     "run_composed", "simulate", "single_copy_breakdown",
     "OptimizationConfig", "batch_commands", "fuse_signals", "optimize",

@@ -274,6 +274,8 @@ def _pipe_granularity(payload: int, depth: int, mcb: int) -> int:
     """Chunk granularity of a pipelined transfer (DESIGN.md §9): split
     ``payload`` into at least ``depth`` chunks, never exceeding the sDMA
     packet ceiling ``mcb`` (``mcb <= 0`` = ceiling disabled)."""
+    if depth < 1:
+        raise ValueError(f"pipe_depth must be >= 1, got {depth}")
     g = max(1, -(-payload // depth))
     return min(g, mcb) if mcb > 0 else g
 

@@ -120,7 +120,12 @@ class Command:
         if self.kind in (CmdKind.WAIT, CmdKind.REDUCE) and self.tag is None:
             raise ValueError(f"{self.kind.value} needs a tag to block on")
         if self.size < 0:
-            raise ValueError("negative size")
+            raise ValueError(f"negative size {self.size}")
+        if self.size == 0 and (self.kind in DATA_KINDS
+                               or self.kind is CmdKind.REDUCE):
+            raise ValueError(
+                f"{self.kind.value} needs a positive size — a zero-byte "
+                "transfer would time as a silent no-op")
         if self.fused_signal and self.kind not in DATA_KINDS:
             raise ValueError("only data commands can carry a fused signal")
         if self.fused_tag is not None \

@@ -55,9 +55,12 @@ import dataclasses
 import functools
 from typing import Callable
 
+import numpy as np
+
 from .collectives import (allgather_schedule, allreduce_schedule,
                           alltoall_schedule, reduce_scatter_schedule)
 from .engine import simulate
+from .faults import straggler_plan
 from .sweep import argmin_grid, sweep_variant_latencies
 from .topology import Topology
 
@@ -353,3 +356,142 @@ def pick_variant(entries: list[DispatchEntry], size: int) -> str:
         if size >= e.lo and (e.hi is None or size < e.hi):
             return e.variant
     return entries[-1].variant if size >= entries[-1].lo else entries[0].variant
+
+
+# ---------------------------------------------------------------------------
+# Dispatch robustness (DESIGN.md §13.5): which bundled-table winners survive
+# calibration drift and straggler engines?
+# ---------------------------------------------------------------------------
+
+#: Named calibration perturbations (field -> multiplicative scale).  The
+#: scales bracket realistic drift: host-side costs vary with CPU load and
+#: kernel version (+50%), link efficiency with cable/firmware degradation
+#: (-20%), engine bandwidth with thermal throttling (-30%).  All scales keep
+#: every Calibration field inside its validated domain.
+PERTURB_SCENARIOS: tuple[tuple[str, dict[str, float]], ...] = (
+    ("control+50%", {"control": 1.5, "control_batched": 1.5}),
+    ("doorbell+50%", {"doorbell": 1.5, "doorbell_batched": 1.5}),
+    ("sync+50%", {"sync_engine": 1.5, "fused_sync": 1.5,
+                  "sync_obs": 1.5, "sync_obs_batched": 1.5}),
+    ("link_eff-20%", {"dma_link_efficiency": 0.8}),
+    ("engine_bw-30%", {"engine_bw": 0.7}),
+)
+
+
+def perturbed_topology(topo: Topology, scales: dict[str, float]) -> Topology:
+    """``topo`` with each named Calibration field scaled multiplicatively.
+
+    The perturbed topology is a distinct frozen value, so the
+    :func:`variant_latency` memo and the sweep fast path treat it as a
+    fresh calibration — no cache invalidation needed."""
+    calib = dataclasses.replace(
+        topo.calib,
+        **{f: getattr(topo.calib, f) * s for f, s in scales.items()})
+    return dataclasses.replace(topo, calib=calib)
+
+
+@dataclasses.dataclass(frozen=True)
+class FragileEntry:
+    """One (size, scenario) point whose dispatch winner flipped.
+
+    ``regret`` is what shipping the base winner costs under the scenario:
+    base winner's latency there / the scenario's best latency (>= 1; 1.0
+    means the flip is a tie and the table entry is effectively robust)."""
+
+    size: int
+    scenario: str
+    base_variant: str
+    new_variant: str
+    regret: float
+
+
+@dataclasses.dataclass(frozen=True)
+class RobustnessReport:
+    """Winner-stability audit of one dispatch sweep (DESIGN.md §13.5)."""
+
+    collective: str
+    scenarios: tuple[str, ...]
+    n_points: int                        # len(sizes) x len(scenarios)
+    fragile: tuple[FragileEntry, ...]    # sorted by (size, scenario)
+
+    @property
+    def n_fragile(self) -> int:
+        return len(self.fragile)
+
+    @property
+    def fragile_fraction(self) -> float:
+        return self.n_fragile / self.n_points if self.n_points else 0.0
+
+    @property
+    def max_regret(self) -> float:
+        return max((f.regret for f in self.fragile), default=1.0)
+
+
+def dispatch_robustness(
+    topo: Topology,
+    collective: str,
+    sizes: list[int],
+    *,
+    allow_prelaunch: bool = True,
+    allow_optimized: bool = False,
+    allow_pipelined: bool = False,
+    allow_reduce: bool = False,
+    chunk_bytes: int | None = None,
+    scenarios: tuple[tuple[str, dict[str, float]], ...] = PERTURB_SCENARIOS,
+    straggler_slowdown: float | None = 4.0,
+    variants: list[str] | None = None,
+) -> RobustnessReport:
+    """Re-run winner selection under perturbed calibrations and a straggler
+    scenario; flag fragile entries whose winners flip (DESIGN.md §13.5).
+
+    The base sweep is the same (variants x sizes) argmin
+    :func:`derive_dispatch` runs.  Each named calibration scenario rebuilds
+    the latency matrix on a :func:`perturbed_topology` (vectorized fast path
+    where symmetric); ``straggler_slowdown`` adds a full-event-loop scenario
+    (``straggler_x<s>``) where device 0's engines stream that much slower —
+    the one fault the symmetric fast path cannot express, so it costs
+    len(variants) x len(sizes) full simulations; pass ``None`` to skip.
+    ``variants`` overrides the candidate set (the claims use this to probe a
+    deliberately fragile pair).  Deterministic throughout: the matrices
+    replay the same argmin, and ``fragile`` is sorted by (size, scenario).
+    """
+    variants = list(variants) if variants is not None else candidate_variants(
+        topo, collective, allow_prelaunch=allow_prelaunch,
+        allow_optimized=allow_optimized, allow_pipelined=allow_pipelined,
+        allow_reduce=allow_reduce)
+    sizes = list(sizes)
+    base = [sweep_candidate_latencies(topo, collective, tuple(sizes), v,
+                                      chunk_bytes)
+            for v in variants]
+    base_i, _ = argmin_grid(base)
+
+    named: list[tuple[str, list[list[float]]]] = []
+    for name, scales in scenarios:
+        ptopo = perturbed_topology(topo, scales)
+        named.append((name, [sweep_candidate_latencies(
+            ptopo, collective, tuple(sizes), v, chunk_bytes)
+            for v in variants]))
+    if straggler_slowdown is not None:
+        plan = straggler_plan(0, straggler_slowdown)
+        builder = COLLECTIVE_BUILDERS[collective]
+        named.append((f"straggler_x{straggler_slowdown:g}", [
+            [simulate(builder(topo, size, v, max_chunk_bytes=chunk_bytes),
+                      topo, faults=plan).latency for size in sizes]
+            for v in variants]))
+
+    fragile: list[FragileEntry] = []
+    for name, lat in named:
+        alt = np.asarray(lat, dtype=float)
+        alt_i, alt_t = argmin_grid(alt)
+        for j in np.flatnonzero(alt_i != base_i):
+            fragile.append(FragileEntry(
+                size=sizes[j], scenario=name,
+                base_variant=variants[base_i[j]],
+                new_variant=variants[alt_i[j]],
+                regret=float(alt[base_i[j], j] / alt_t[j])))
+    fragile.sort(key=lambda f: (f.size, f.scenario))
+    return RobustnessReport(
+        collective=collective,
+        scenarios=tuple(name for name, _ in named),
+        n_points=len(sizes) * len(named),
+        fragile=tuple(fragile))

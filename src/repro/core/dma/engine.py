@@ -9,6 +9,7 @@ path — see DESIGN.md §2).  This module keeps the historical import surface:
 """
 from __future__ import annotations
 
+from .faults import FaultPlan, FaultReport, SimFault
 from .sim import (
     ComposedResult,
     PhaseBreakdown,
@@ -19,5 +20,6 @@ from .sim import (
     single_copy_breakdown,
 )
 
-__all__ = ["ComposedResult", "PhaseBreakdown", "ScheduleOutcome", "SimResult",
+__all__ = ["ComposedResult", "FaultPlan", "FaultReport", "PhaseBreakdown",
+           "ScheduleOutcome", "SimFault", "SimResult",
            "run_composed", "simulate", "single_copy_breakdown"]

@@ -139,6 +139,21 @@ index so streams never satisfy each other's waits, and the per-schedule
 relative to the release.  Composed runs always take the full event loop:
 the symmetric fast path reasons about ONE schedule's translation symmetry
 and is meaningless under cross-schedule contention.
+
+Fault injection and timeout/retry (DESIGN.md §13): ``simulate(...,
+faults=FaultPlan(...))`` threads a seeded, deterministic fault plan
+(:mod:`repro.core.dma.faults`) through the event loop — straggler engines
+stream slower, derated/flapping wires grant slower or later, and tagged
+raises may land late or be *dropped*.  A queue parked on a dropped tag is
+recovered by watchdog/retry: once the heap drains with waiters left, the
+producing command is re-issued from the watchdog deadline with exponential
+backoff, its costs charged on the real host/engine/link timelines, up to
+``max_attempts`` total attempts.  Exhaustion — and any fault-free deadlock
+— raises :class:`~repro.core.dma.faults.SimFault`, a ``RuntimeError``
+subclass carrying a deterministic sorted diagnosis of every parked waiter
+(device, blocked tag, producing command, nearest raised sibling tag) plus
+the retry history.  An *empty* plan is normalized to ``None`` so the
+fault-free path runs untouched and bit-identical.
 """
 from __future__ import annotations
 
@@ -147,6 +162,8 @@ import heapq
 from collections import defaultdict
 
 from .commands import DATA_KINDS, CmdKind, EngineQueue, Schedule
+from .faults import (BlockedWaiter, FaultPlan, FaultReport, RetryRecord,
+                     SimFault)
 from .topology import Topology
 
 
@@ -218,6 +235,9 @@ class SimResult:
     # side of the reduction-work conservation invariant.
     reduce_chunks: dict[int, int] = dataclasses.field(default_factory=dict)
     representative: int | None = None    # set when the symmetric fast path ran
+    # What the fault layer did (DESIGN.md §13) — None on fault-free runs
+    # (an empty FaultPlan is normalized away before the event loop).
+    fault_report: FaultReport | None = None
 
     @property
     def breakdown(self) -> PhaseBreakdown:
@@ -305,11 +325,38 @@ class _QueueState:
         self.key = key              # (schedule index, device) stats key (§12)
 
 
+class _DroppedSignal:
+    """Watchdog state of a tag whose raise was dropped (DESIGN.md §13.2).
+
+    ``time`` is the would-have-raised time of the latest lost attempt;
+    ``attempts`` counts total raise attempts so far (the original drop is
+    attempt 1); ``deadline`` is lazily set to the watchdog expiry once a
+    waiter is known to be parked on the tag (the watchdog arms from the
+    later of the drop and the earliest parked wait)."""
+
+    __slots__ = ("time", "device", "engine", "cmd", "attempts", "deadline")
+
+    def __init__(self, time: float, device: int, engine: int, cmd) -> None:
+        self.time = time
+        self.device = device
+        self.engine = engine
+        self.cmd = cmd
+        self.attempts = 1
+        self.deadline: float | None = None
+
+
 class _Sim:
-    def __init__(self, topo: Topology, rep: int | None) -> None:
+    def __init__(self, topo: Topology, rep: int | None,
+                 faults: FaultPlan | None = None) -> None:
         self.topo = topo
         self.calib = topo.calib
         self.rep = rep                      # symmetric-mode representative
+        self.faults = faults                # FaultPlan or None (§13)
+        self.dropped: dict[tuple, _DroppedSignal] = {}
+        self.drop_log: list[tuple] = []
+        self.delay_log: list[tuple] = []
+        self.retry_log: list[RetryRecord] = []
+        self.retry_seconds = 0.0
         self.timelines: dict[str, _Timeline] = {}
         self.tags: dict[tuple, float] = {}  # tagged signal -> raise time
         self.raised: list[tuple] = []       # tags raised since last drain (§8.2)
@@ -341,13 +388,16 @@ class _Sim:
         return tag
 
     # ------------------------------------------------------------ wire ----
-    def route_tls(self, src, dst) -> tuple[tuple[tuple[_Timeline, float], ...], float]:
-        """Per-hop (timeline, added latency) along src->dst + wire bandwidth.
+    def route_tls(self, src, dst) -> tuple[tuple[tuple[_Timeline, float, str], ...], float]:
+        """Per-hop (timeline, added latency, resource key) along src->dst +
+        wire bandwidth.
 
         The hop structure comes from ``Topology.wire_path`` (DESIGN.md §11):
         intra-node hops are directed DMA links (first hop latency 0, further
         hops ``hop_latency``); a cross-node transfer is one hop through the
-        sender's NIC at NIC bandwidth with ``nic_latency`` up front.
+        sender's NIC at NIC bandwidth with ``nic_latency`` up front.  The
+        resource key rides along so the fault layer (§13) can target derate
+        windows and NIC flaps at specific wires.
         """
         key = (src, dst)
         ent = self._routes.get(key)
@@ -355,11 +405,12 @@ class _Sim:
             if src == "host" or dst == "host":
                 dev = dst if src == "host" else src
                 dirn = "h2d" if src == "host" else "d2h"
-                tls = ((self.timeline(f"hostlink:{dev}:{dirn}"), 0.0),)
+                hkey = f"hostlink:{dev}:{dirn}"
+                tls = ((self.timeline(hkey), 0.0, hkey),)
                 bw = self.topo.host_link_bw * self.calib.dma_link_efficiency
             else:
                 hops, bw = self.topo.wire_path(src, dst)
-                tls = tuple((self.timeline(k), lat) for k, lat in hops)
+                tls = tuple((self.timeline(k), lat, k) for k, lat in hops)
             ent = self._routes[key] = (tls, bw)
         return ent
 
@@ -369,9 +420,18 @@ class _Sim:
         wire = size / bw
         t = start
         end = start
-        for tl, lat in tls:
-            s, end = tl.acquire(t + lat, wire)
-            t = s                    # cut-through: next hop staggers off start
+        fp = self.faults
+        if fp is None:
+            for tl, lat, _ in tls:
+                s, end = tl.acquire(t + lat, wire)
+                t = s                # cut-through: next hop staggers off start
+        else:
+            for tl, lat, key in tls:
+                # A flapping NIC holds the request until the outage clears;
+                # a derate window stretches the wire occupancy (§13).
+                req = fp.outage_release(key, t + lat)
+                s, end = tl.acquire(req, wire / fp.derate_factor(key, req))
+                t = s
         return end
 
     # ------------------------------------------------- chunk runs (§8.3) ----
@@ -396,6 +456,11 @@ class _Sim:
         raised at its closed-form completion time, waking chunk-granularity
         waiters exactly as the per-chunk loop would.
         """
+        if self.faults is not None:
+            # Fault runs take the per-chunk loop (always correct): stragglers,
+            # derate windows, flaps and per-tag signal draws all break the
+            # back-to-back affine structure the closed form relies on (§13).
+            return False
         if tagged is None and (cmd.fused_tag is not None or cmd.fused_signal):
             return False
         size = cmd.size
@@ -468,6 +533,7 @@ class _Sim:
         n = len(cmds)
         tags = self.tags
         idx = st.idx
+        fp = self.faults
         while idx < n:
             cmd = cmds[idx]
             kind = cmd.kind
@@ -500,6 +566,8 @@ class _Sim:
                         tagged = cmds[idx + 1:j]
                 stream_bytes = size if kind is CmdKind.COPY else 2 * size
                 ts = stream_bytes / c.engine_bw
+                if fp is not None:
+                    ts *= fp.engine_slowdown(q.device, q.engine)
                 engine = st.engine_tl
                 start = st.issue if st.issue > engine.free else engine.free
                 _, end = engine.acquire(start, ts)
@@ -520,8 +588,11 @@ class _Sim:
                 # the queue front end (st.issue) is NOT gated.
                 if cmd.fused_tag is not None:
                     rt = self.resolve(cmd.fused_tag)
-                    tags[rt] = end + c.fused_sync
-                    self.raised.append(rt)
+                    if fp is None:
+                        tags[rt] = end + c.fused_sync
+                        self.raised.append(rt)
+                    else:
+                        self._faulty_raise(rt, end + c.fused_sync, q, cmd)
                 if cmd.fused_signal:
                     self.fused_signals[st.key].append(end + c.fused_sync)
                 idx += 1
@@ -551,6 +622,8 @@ class _Sim:
                 arrival = t + c.poll_trigger
                 start = st.issue if st.issue > arrival else arrival
                 dur = c.reduce_setup + cmd.size / c.reduce_bytes_per_s
+                if fp is not None:
+                    dur *= fp.engine_slowdown(q.device, q.engine)
                 _, end = st.engine_tl.acquire(start, dur)
                 st.issue = end
                 if end > st.last_end:
@@ -560,8 +633,11 @@ class _Sim:
                 self.reduce_chunks[q.device] += 1
                 if cmd.fused_tag is not None:
                     rt2 = self.resolve(cmd.fused_tag)
-                    tags[rt2] = end + c.fused_sync
-                    self.raised.append(rt2)
+                    if fp is None:
+                        tags[rt2] = end + c.fused_sync
+                        self.raised.append(rt2)
+                    else:
+                        self._faulty_raise(rt2, end + c.fused_sync, q, cmd)
                 idx += 1
             elif kind is CmdKind.SIGNAL:
                 t = (st.issue if st.issue > st.last_end else st.last_end) + c.sync_engine
@@ -570,8 +646,14 @@ class _Sim:
                     # Semaphore update gates the engine's next command.
                     st.issue = t
                     rt = self.resolve(cmd.tag)
-                    tags[rt] = t
-                    self.raised.append(rt)
+                    if fp is None:
+                        tags[rt] = t
+                        self.raised.append(rt)
+                    else:
+                        # The engine-side update happened (the queue front end
+                        # is gated either way); what a drop loses is the
+                        # raise's visibility to waiters (§13.2).
+                        self._faulty_raise(rt, t, q, cmd)
                 else:
                     # Completion signals post asynchronously (fire-and-forget):
                     # later copies in the queue are not delayed.
@@ -581,6 +663,109 @@ class _Sim:
                 idx += 1
         st.idx = idx
         return True
+
+    # ------------------------------------------- fault layer (§13) ----------
+    def _faulty_raise(self, rt: tuple, t: float, q: EngineQueue, cmd) -> None:
+        """Raise ``rt`` at ``t`` through the fault plan's signal draws:
+        dropped raises park in ``self.dropped`` for the watchdog, delayed
+        raises land ``delay_s`` late, the rest raise normally."""
+        fp = self.faults
+        if fp.drops_signal(rt, 0):
+            self.dropped[rt] = _DroppedSignal(t, q.device, q.engine, cmd)
+            self.drop_log.append(rt)
+            return
+        if fp.delays_signal(rt, 0):
+            t += fp.delay_s
+            self.delay_log.append(rt)
+        self.tags[rt] = t
+        self.raised.append(rt)
+
+    def retry_dropped(self, waiting: dict) -> bool:
+        """Watchdog/retry step (§13.2), called when the heap drains with
+        parked waiters left.  Re-issues the producer of the dropped tag with
+        the earliest watchdog deadline (ties broken by tag repr —
+        deterministic), charging host control+doorbell, engine fetch and the
+        command's execution on the real contended timelines.  The re-raise
+        runs the per-attempt fault draws again; a re-drop re-arms the
+        watchdog with exponential backoff.  Returns False when no dropped,
+        waited-on tag has attempts left — the caller then raises SimFault.
+        """
+        fp = self.faults
+        cands = []
+        for rt, rec in self.dropped.items():
+            ws = waiting.get(rt)
+            if not ws:
+                continue                    # nobody waits: drop is harmless
+            if rec.deadline is None:
+                # The watchdog arms from the later of the lost raise and the
+                # earliest parked wait (a waiter can't time out a signal it
+                # hasn't started waiting for).
+                park = min(w.issue for w in ws)
+                base = rec.time if rec.time > park else park
+                rec.deadline = base + fp.watchdog_s
+            if rec.attempts < fp.max_attempts:
+                cands.append((rec.deadline, repr(rt), rt))
+        if not cands:
+            return False
+        deadline, _, rt = min(cands)
+        rec = self.dropped[rt]
+        cmd = rec.cmd
+        c = self.calib
+        # Host re-creates the command packet and rings the doorbell; the
+        # engine re-fetches and re-executes.  All on live contended timelines
+        # so retry cost is real, not an additive constant.
+        _, t = self.timeline(f"host:{rec.device}").acquire(
+            deadline, c.control + c.doorbell)
+        engine = self.timeline(f"engine:{rec.device}.{rec.engine}")
+        _, t = engine.acquire(t, c.fetch)
+        if cmd.kind in DATA_KINDS:
+            stream = cmd.size if cmd.kind is CmdKind.COPY else 2 * cmd.size
+            ts = (stream / c.engine_bw) * fp.engine_slowdown(rec.device, rec.engine)
+            s0, end = engine.acquire(t + c.copy_setup, ts)
+            for dst in cmd.dsts:
+                e = self.transfer(cmd.src, dst, cmd.size, s0)
+                if e > end:
+                    end = e
+            if cmd.kind is CmdKind.SWAP:
+                e = self.transfer(cmd.dsts[0], cmd.src, cmd.size, s0)
+                if e > end:
+                    end = e
+            raise_t = end + c.fused_sync
+        elif cmd.kind is CmdKind.REDUCE:
+            dur = (c.reduce_setup + cmd.size / c.reduce_bytes_per_s) \
+                * fp.engine_slowdown(rec.device, rec.engine)
+            _, end = engine.acquire(t, dur)
+            raise_t = end + c.fused_sync
+        else:                               # SIGNAL: engine atomic round-trip
+            _, raise_t = engine.acquire(t, c.sync_engine)
+            self.engine_atomics[rec.device] += 1
+        self.retry_seconds += raise_t - deadline
+        attempt = rec.attempts              # draw-stream index of this re-raise
+        dropped_again = fp.drops_signal(rt, attempt)
+        self.retry_log.append(RetryRecord(
+            tag=rt, attempt=attempt, issued_at=deadline,
+            completed_at=raise_t, raised=not dropped_again))
+        rec.attempts += 1
+        if dropped_again:
+            self.drop_log.append(rt)
+            rec.time = raise_t
+            rec.deadline = raise_t + fp.watchdog_s * fp.backoff ** attempt
+        else:
+            del self.dropped[rt]
+            if fp.delays_signal(rt, attempt):
+                raise_t += fp.delay_s
+                self.delay_log.append(rt)
+            self.tags[rt] = raise_t
+            self.raised.append(rt)
+        return True
+
+    def fault_report(self) -> FaultReport:
+        return FaultReport(
+            dropped=tuple(sorted(self.drop_log, key=repr)),
+            delayed=tuple(sorted(self.delay_log, key=repr)),
+            retries=tuple(self.retry_log),
+            retry_seconds=self.retry_seconds,
+        )
 
 
 def _control_cost(live: list[EngineQueue], c) -> tuple[float, int]:
@@ -735,26 +920,114 @@ def _run(sim: _Sim, jobs: list[tuple[tuple, int, list[EngineQueue], float]]
     heapq.heapify(heap)
     waiting: dict[tuple, list[_QueueState]] = {}
     n_waiting = 0
-    while heap:
-        _, _, st = heapq.heappop(heap)
-        if not sim.advance(st):
-            waiting.setdefault(st.blocked, []).append(st)
-            n_waiting += 1
+
+    def wake() -> None:
+        nonlocal n_waiting, seq
+        for rt in sim.raised:
+            ws = waiting.pop(rt, None)
+            if ws:
+                t = sim.tags[rt]
+                for w in ws:
+                    heapq.heappush(heap, (t, seq, w))
+                    seq += 1
+                n_waiting -= len(ws)
+        sim.raised.clear()
+
+    while True:
+        while heap:
+            _, _, st = heapq.heappop(heap)
+            if not sim.advance(st):
+                waiting.setdefault(st.blocked, []).append(st)
+                n_waiting += 1
+            if sim.raised:
+                wake()
+        if not n_waiting:
+            break
+        # Drained heap with parked waiters: under a FaultPlan, the watchdog
+        # re-issues the producer of a dropped tag (§13.2) and the loop
+        # continues; otherwise — or once retries are exhausted — this is a
+        # deadlock, reported with the full blocked-dependency diagnosis.
+        if sim.faults is None or not sim.retry_dropped(waiting):
+            raise _deadlock_fault(sim, started, waiting)
         if sim.raised:
-            for rt in sim.raised:
-                ws = waiting.pop(rt, None)
-                if ws:
-                    t = sim.tags[rt]
-                    for w in ws:
-                        heapq.heappush(heap, (t, seq, w))
-                        seq += 1
-                    n_waiting -= len(ws)
-            sim.raised.clear()
-    if n_waiting:
-        blocked = {st.q.commands[st.idx].tag
-                   for ws in waiting.values() for st in ws}
-        raise RuntimeError(f"deadlocked schedule: waits on unsignaled tags {blocked}")
+            wake()
     return started
+
+
+def _producers(sim: _Sim, started) -> dict[tuple, str]:
+    """Resolved tag -> human description of the command that produces it."""
+    out: dict[tuple, str] = {}
+    for _, _, _, states in started.values():
+        for st in states:
+            q = st.q
+            for i, c in enumerate(q.commands):
+                if c.kind is CmdKind.SIGNAL and c.tag is not None:
+                    out.setdefault(
+                        sim.resolve(c.tag),
+                        f"signal (cmd {i}) on device {q.device} engine {q.engine}")
+                if c.fused_tag is not None:
+                    out.setdefault(
+                        sim.resolve(c.fused_tag),
+                        f"fused {c.kind.name.lower()} (cmd {i}) "
+                        f"on device {q.device} engine {q.engine}")
+    return out
+
+
+def _nearest_tag(tag: tuple, raised) -> tuple | None:
+    """The raised tag most similar to ``tag``: same name, smallest summed
+    distance over trailing elements (numeric difference where both are
+    numbers, a large constant otherwise).  Ties break on repr — the
+    diagnosis stays deterministic.  The usual hit is an off-by-one step or
+    chunk index: the breadcrumb that turns a deadlock report into a fix."""
+    best = None
+    best_key = None
+    for cand in raised:
+        if not cand or not tag or cand[0] != tag[0] or cand == tag:
+            continue
+        d = 1000.0 * abs(len(cand) - len(tag))
+        for a, b in zip(tag[1:], cand[1:]):
+            if isinstance(a, (int, float)) and isinstance(b, (int, float)):
+                d += abs(a - b)
+            elif a != b:
+                d += 1000.0
+        k = (d, repr(cand))
+        if best_key is None or k < best_key:
+            best, best_key = cand, k
+    return best
+
+
+def _deadlock_fault(sim: _Sim, started, waiting: dict) -> SimFault:
+    """Build the structured deadlock/fault report (DESIGN.md §13.3): one
+    sorted :class:`BlockedWaiter` row per parked queue — device, engine,
+    blocked tag, producing command, nearest raised sibling tag — plus the
+    watchdog retry history when a FaultPlan was active."""
+    producers = _producers(sim, started)
+    raised = list(sim.tags)
+    rows = []
+    for rt, ws in waiting.items():
+        for st in ws:
+            rows.append(BlockedWaiter(
+                device=st.q.device, engine=st.q.engine, tag=rt,
+                producer=producers.get(rt),
+                nearest=_nearest_tag(rt, raised)))
+    rows.sort(key=lambda w: (repr(w.tag), w.device, w.engine))
+    lines = [f"deadlocked schedule: {len(rows)} queue(s) parked on "
+             f"unsignaled tags"]
+    for w in rows:
+        line = f"  device {w.device} engine {w.engine} waits on {w.tag!r}"
+        if w.producer is not None:
+            line += f" [producer: {w.producer}]"
+        if w.nearest is not None:
+            line += f"; nearest raised: {w.nearest!r}"
+        lines.append(line)
+    retries = tuple(sim.retry_log)
+    if retries:
+        lines.append(f"  retry history ({len(retries)} attempt(s)):")
+        for r in retries:
+            lines.append(
+                f"    {r.tag!r} attempt {r.attempt} issued {r.issued_at:.6g}s"
+                f" -> {'raised' if r.raised else 'dropped'} {r.completed_at:.6g}s")
+    return SimFault("\n".join(lines), waiters=tuple(rows), retries=retries)
 
 
 def _device_hbm_bytes(queues: list[EngineQueue]) -> int:
@@ -776,7 +1049,9 @@ def _device_hbm_bytes(queues: list[EngineQueue]) -> int:
     return total
 
 
-def simulate(schedule: Schedule, topo: Topology, *, symmetric: bool | None = None) -> SimResult:
+def simulate(schedule: Schedule, topo: Topology, *,
+             symmetric: bool | None = None,
+             faults: FaultPlan | None = None) -> SimResult:
     """Execute ``schedule`` on ``topo`` and return a :class:`SimResult`.
 
     ``symmetric=None`` (default) honors the builder's ``Schedule.symmetric``
@@ -786,10 +1061,22 @@ def simulate(schedule: Schedule, topo: Topology, *, symmetric: bool | None = Non
     is not actually device-symmetric produces wrong (optimistic) timings and
     is only useful for testing the fast path itself.
 
-    Raises ``RuntimeError`` if the schedule deadlocks (a ``wait`` on a tag no
-    remaining queue can raise); the message names the blocked tags.
+    ``faults`` injects a seeded :class:`~repro.core.dma.faults.FaultPlan`
+    (DESIGN.md §13).  An *empty* plan is normalized to ``None`` — the
+    fault-free path runs untouched, bit-identical to passing no plan.  A
+    non-empty plan forces the full event loop (faults break the translation
+    symmetry the fast path relies on) and fills ``SimResult.fault_report``.
+
+    Raises :class:`~repro.core.dma.faults.SimFault` (a ``RuntimeError``) if
+    the schedule deadlocks — a ``wait`` on a tag no remaining queue can
+    raise, or a dropped signal whose watchdog retries are exhausted; the
+    message carries the sorted per-waiter diagnosis (§13.3).
     """
+    if faults is not None and faults.is_empty():
+        faults = None
     sym = schedule.symmetric if symmetric is None else symmetric
+    if faults is not None:
+        sym = False
     devices = schedule.devices
 
     def run_full(run_devices: list[int]) -> dict[int, PhaseBreakdown]:
@@ -811,7 +1098,7 @@ def simulate(schedule: Schedule, topo: Topology, *, symmetric: bool | None = Non
         atomics = {d: sim.engine_atomics.get(rep, 0) for d in devices}
         reduces = {d: sim.reduce_chunks.get(rep, 0) for d in devices}
     else:
-        sim = _Sim(topo, None)
+        sim = _Sim(topo, None, faults)
         per_device = run_full(devices)
         engines = {d: schedule.engines_used(d) for d in devices}
         hbm = {d: _device_hbm_bytes(schedule.queues_for(d)) for d in devices}
@@ -832,6 +1119,7 @@ def simulate(schedule: Schedule, topo: Topology, *, symmetric: bool | None = Non
         engine_atomics=atomics,
         reduce_chunks=reduces,
         representative=rep,
+        fault_report=sim.fault_report() if faults is not None else None,
     )
 
 
@@ -916,7 +1204,8 @@ def _namespace_schedule(schedule: Schedule, k: int) -> Schedule:
 
 
 def run_composed(schedules, topo: Topology,
-                 release_times=None) -> ComposedResult:
+                 release_times=None,
+                 faults: FaultPlan | None = None) -> ComposedResult:
     """Execute K independent schedules in ONE resource world (§12).
 
     ``schedules`` is a sequence of :class:`Schedule`; ``release_times``
@@ -932,8 +1221,15 @@ def run_composed(schedules, topo: Topology,
     by construction.  With K=1 and release 0 the composed result is
     bit-identical to ``simulate(schedule, topo, symmetric=False)`` — and
     hence, for symmetric schedules, to ``simulate(schedule, topo)``.
+
+    ``faults`` threads a :class:`~repro.core.dma.faults.FaultPlan` through
+    the composed world (DESIGN.md §13) — fault windows are in the composed
+    run's time frame (0 = the first release).  An empty plan is normalized
+    to ``None`` (bit-identical to no plan).
     """
     schedules = list(schedules)
+    if faults is not None and faults.is_empty():
+        faults = None
     if not schedules:
         raise ValueError("run_composed needs at least one schedule")
     if release_times is None:
@@ -945,7 +1241,7 @@ def run_composed(schedules, topo: Topology,
     if any(t < 0.0 for t in release_times):
         raise ValueError("release times must be >= 0")
 
-    sim = _Sim(topo, None)
+    sim = _Sim(topo, None, faults)
     namespaced = [_namespace_schedule(s, k) for k, s in enumerate(schedules)]
     jobs = []
     for k, (ns, t0) in enumerate(zip(namespaced, release_times)):
@@ -1008,6 +1304,7 @@ def run_composed(schedules, topo: Topology,
         engine_atomics={d: sim.engine_atomics.get(d, 0) for d in all_devices},
         reduce_chunks={d: sim.reduce_chunks.get(d, 0) for d in all_devices},
         representative=None,
+        fault_report=sim.fault_report() if faults is not None else None,
     )
     return ComposedResult(outcomes=tuple(outcomes), result=result)
 

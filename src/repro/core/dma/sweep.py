@@ -117,3 +117,14 @@ def argmin_grid(lat: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
         best_i[better] = c
         best_t[better] = lat[c][better]
     return best_i, best_t
+
+
+def winner_flips(base, alt) -> np.ndarray:
+    """Size-grid indices where the argmin winner differs between two
+    (candidates, sizes) latency matrices over the *same* candidate axis —
+    the dispatch-robustness primitive (DESIGN.md §13.5): a flip means the
+    bundled table's winner at that size is fragile under the perturbation
+    that produced ``alt``."""
+    base_i, _ = argmin_grid(base)
+    alt_i, _ = argmin_grid(alt)
+    return np.flatnonzero(base_i != alt_i)

@@ -135,6 +135,31 @@ class Calibration:
     # at bandwidth-bound sizes).
     dma_link_efficiency: float = 0.9616
 
+    def __post_init__(self) -> None:
+        # A mistyped calibration (negative latency, zero bandwidth) times as
+        # silent nonsense — instant transfers, negative phases — so reject it
+        # at construction.  Latency constants may be 0 (hop_latency is, on
+        # fully-connected fabrics); divisors must be strictly positive.
+        for f in ("control", "control_batched", "doorbell", "doorbell_batched",
+                  "fetch", "copy_setup", "b2b_issue", "sync_engine",
+                  "fused_sync", "sync_obs", "sync_obs_batched", "poll_trigger",
+                  "hop_latency", "reduce_setup", "nic_latency"):
+            v = getattr(self, f)
+            if not v >= 0.0:
+                raise ValueError(f"Calibration.{f} must be >= 0, got {v}")
+        for f in ("engine_bw", "nic_bytes_per_s", "reduce_bytes_per_s"):
+            v = getattr(self, f)
+            if not v > 0.0:
+                raise ValueError(f"Calibration.{f} must be > 0, got {v}")
+        if not 0.0 < self.dma_link_efficiency <= 1.0:
+            raise ValueError(
+                "Calibration.dma_link_efficiency must be in (0, 1], got "
+                f"{self.dma_link_efficiency}")
+        if self.max_chunk_bytes < 0:
+            raise ValueError(
+                "Calibration.max_chunk_bytes must be >= 0 (0 disables "
+                f"chunking), got {self.max_chunk_bytes}")
+
 
 @dataclasses.dataclass(frozen=True)
 class RcclCalibration:
@@ -258,6 +283,23 @@ class Topology:
     calib: Calibration = Calibration()
     grid: tuple[int, int] | None = None  # per-node 2D torus (rows, cols) if not FC
     n_nodes: int = 1                     # inter-node tier (DESIGN.md §11)
+
+    def __post_init__(self) -> None:
+        if self.n_devices < 1:
+            raise ValueError(f"n_devices must be >= 1, got {self.n_devices}")
+        if not self.link_bw > 0.0:
+            raise ValueError(f"link_bw must be > 0, got {self.link_bw}")
+        if not self.host_link_bw > 0.0:
+            raise ValueError(
+                f"host_link_bw must be > 0, got {self.host_link_bw}")
+        if self.links_per_device < 1 or self.n_engines < 1:
+            raise ValueError(
+                f"links_per_device/n_engines must be >= 1, got "
+                f"{self.links_per_device}/{self.n_engines}")
+        if self.n_nodes < 1 or self.n_devices % self.n_nodes:
+            raise ValueError(
+                f"n_nodes ({self.n_nodes}) must divide n_devices "
+                f"({self.n_devices})")
 
     def peer_links(self, device: int) -> int:
         return self.links_per_device

@@ -323,15 +323,34 @@ class ServingSimulator:
     request's first token rides its fetch completion plus one decode step —
     at load -> 0 this is exactly the Fig. 16 single-request TTFT, because
     K=1 composition is bit-identical to ``simulate``.
+
+    Degraded-mode serving (DESIGN.md §13.4): ``faults`` threads a
+    :class:`~repro.core.dma.faults.FaultPlan` through every composed round.
+    Fault windows are expressed in workload-absolute time — each round
+    passes ``faults.shifted(now)`` to the composed run so a window means
+    the same wall-clock interval in every round.  The ``defer`` admission
+    policy additionally consults the plan's live fault state: a request
+    whose home device sits in an outage window that will *clear*
+    (``FaultPlan.waitable_degraded`` — NIC flap, finite derate window) is
+    deferred past the outage instead of fetching at degraded rate.
+    Permanent degradation (stragglers) never defers — the KV home is
+    pinned, so waiting cannot find healthier hardware and would only starve
+    the request.  A starvation guard admits the queue head anyway when
+    nothing at all is in flight.  SLO baselines (``unloaded_ttft``) stay
+    fault-free: SLOs measure against healthy hardware, so fault runs show
+    up as violations, not as a lowered bar.
     """
 
     def __init__(self, config: ServingConfig | None = None, *,
-                 topo=None, comm: CommBackend | None = None):
+                 topo=None, comm: CommBackend | None = None,
+                 faults=None):
         self.cfg = config or ServingConfig()
         if self.cfg.admission not in ("fifo", "defer"):
             raise ValueError(f"unknown admission policy {self.cfg.admission!r}")
         self.topo = topo or mi300x_platform()
         self.comm = comm or CommBackend("latte")
+        # Empty plans normalize away (same contract as simulate(), §13.1).
+        self.faults = None if faults is None or faults.is_empty() else faults
         self._fetch_cache: dict = {}
         self._decode_cache: dict = {}
         self._iso_cache: dict = {}
@@ -415,9 +434,17 @@ class ServingSimulator:
         return scheds
 
     # -------------------------------------------------------- admission ----
-    def _admit(self, waiting: list, slots: int, depth: dict) -> tuple[list, list, int]:
+    def _admit(self, waiting: list, slots: int, depth: dict,
+               degraded: frozenset = frozenset(),
+               starving: bool = False) -> tuple[list, list, int]:
         """Pick this round's launches; returns (admitted, still_waiting,
-        n_deferred).  ``depth`` counts in-flight fetches per home device."""
+        n_deferred).  ``depth`` counts in-flight fetches per home device;
+        ``degraded`` names devices with live fault state (DESIGN.md §13.4)
+        — under ``defer`` a request homed there is pushed back like one
+        behind a full fetch queue.  ``starving`` (nothing in flight at all)
+        arms the guard that admits the queue head even when every waiter
+        would be deferred — a permanently degraded device must degrade
+        service, not halt it."""
         if slots <= 0:
             return [], waiting, 0
         admitted, still, deferred = [], [], 0
@@ -428,12 +455,16 @@ class ServingSimulator:
                 continue
             dev = self._home_device(req)
             if (self.cfg.admission == "defer"
-                    and depth.get(dev, 0) >= self.cfg.fetch_depth_limit):
+                    and (depth.get(dev, 0) >= self.cfg.fetch_depth_limit
+                         or dev in degraded)):
                 still.append(req)
                 deferred += 1
                 continue
             depth[dev] = depth.get(dev, 0) + 1
             admitted.append(req)
+        if starving and not admitted and still:
+            admitted.append(still.pop(0))
+            deferred = max(0, deferred - 1)
         return admitted, still, deferred
 
     # -------------------------------------------------------------- run ----
@@ -499,7 +530,11 @@ class ServingSimulator:
                 d = self._home_device(f.req)
                 depth[d] = depth.get(d, 0) + 1
             slots = cfg.max_batch - len(active) - len(fetching)
-            admitted, waiting, ndef = self._admit(waiting, slots, depth)
+            degraded = (self.faults.waitable_degraded(now)
+                        if self.faults is not None else frozenset())
+            starving = not fetching and not active
+            admitted, waiting, ndef = self._admit(waiting, slots, depth,
+                                                  degraded, starving)
             deferred += ndef
 
             # One composed world for the round: carried-over fetch remainders
@@ -522,7 +557,10 @@ class ServingSimulator:
                     releases.append(0.0)
             if not schedules:
                 raise AssertionError("round composed nothing")  # unreachable
-            comp = run_composed(schedules, self.topo, releases)
+            comp = run_composed(
+                schedules, self.topo, releases,
+                faults=self.faults.shifted(now) if self.faults is not None
+                else None)
             rounds += 1
 
             fin = [comp.outcomes[k].finish for k in range(n_fetch)]
