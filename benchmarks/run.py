@@ -15,7 +15,7 @@ def main() -> None:
     from . import (calibration, fig01_ag_gap, fig07_copy_breakdown, fig13_allgather,
                    fig14_alltoall, fig15_power, fig16_ttft, fig17_throughput,
                    fig_allreduce, fig_faults, fig_serving_load, tables_dispatch,
-                   tables_multinode, tpu_collectives)
+                   tables_multinode, tpu_collectives, trace_export)
 
     benches = [
         ("calibration", calibration),
@@ -32,6 +32,7 @@ def main() -> None:
         ("tables_dispatch", tables_dispatch),
         ("tables_multinode", tables_multinode),
         ("tpu_collectives", tpu_collectives),
+        ("trace_export", trace_export),
     ]
 
     print("name,us_per_call,derived")

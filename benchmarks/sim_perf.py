@@ -83,6 +83,14 @@ COMPOSED_BUDGET_S = 3.0
 #: the fault-free event loop.
 FAULT_MAX_OVERHEAD = 1.05
 
+#: Trace-hook acceptance (DESIGN.md §14): ``record_trace=False`` (the
+#: default) must leave the hot path structurally untouched — every hook is
+#: an ``if tr is not None`` branch off a local.  The guard caps the
+#: wall-clock ratio of an explicit ``record_trace=False`` run over the
+#: plain call on the reference scenario.  A regression here means trace
+#: threading leaked work into the unrecorded event loop.
+TRACE_MAX_OVERHEAD = 1.02
+
 
 # --------------------------------------------------------------------------
 # Pre-overhaul simulator (vendored PR-2 core, trimmed): per-command event
@@ -286,6 +294,32 @@ def _wall(fn, reps=3):
     return best
 
 
+def _paired_overheads(base, variants, reps=9, inner=3):
+    """Wall-clock ratio of each variant over ``base``, noise-robust.
+
+    Each rep times base and variants back-to-back (``inner`` calls per
+    sample so one sample outlasts scheduler jitter) and forms per-rep
+    ratios; the *minimum* ratio across reps is reported.  A genuine
+    structural overhead inflates every pair, so the min still catches it;
+    a load spike inflates only the pairs it lands on, so the min discards
+    it — unlike min-of-walls taken in separate phases, where a spike
+    during one phase skews the ratio permanently."""
+    best = [float("inf")] * len(variants)
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        for _ in range(inner):
+            base()
+        t_base = time.perf_counter() - t0
+        for i, fn in enumerate(variants):
+            t0 = time.perf_counter()
+            for _ in range(inner):
+                fn()
+            ratio = (time.perf_counter() - t0) / t_base
+            if ratio < best[i]:
+                best[i] = ratio
+    return best
+
+
 def run(verbose: bool = True) -> dict:
     topo = mi300x_platform()
     scenarios = []
@@ -322,10 +356,17 @@ def run(verbose: bool = True) -> dict:
         raise AssertionError(
             "empty FaultPlan diverged from the fault-free run: "
             f"{empty.latency} vs {plain.latency}")
-    t_plain = _wall(lambda: simulate(sched, topo, symmetric=False), reps=5)
-    t_empty = _wall(lambda: simulate(sched, topo, symmetric=False,
-                                     faults=FaultPlan()), reps=5)
-    fault_overhead = t_empty / t_plain
+    # Trace-hook overhead (§14): record_trace=False must be free (and is
+    # trivially bit-identical — it takes the same code path).
+    untraced = simulate(sched, topo, symmetric=False, record_trace=False)
+    if plain.latency != untraced.latency or untraced.trace is not None:
+        raise AssertionError(
+            "record_trace=False diverged from the plain run: "
+            f"{untraced.latency} vs {plain.latency}")
+    fault_overhead, trace_overhead = _paired_overheads(
+        lambda: simulate(sched, topo, symmetric=False),
+        [lambda: simulate(sched, topo, symmetric=False, faults=FaultPlan()),
+         lambda: simulate(sched, topo, symmetric=False, record_trace=False)])
 
     report = {
         "scenarios": scenarios,
@@ -336,6 +377,8 @@ def run(verbose: bool = True) -> dict:
         "budget_s": BUDGET_S,
         "fault_overhead": fault_overhead,
         "fault_max_overhead": FAULT_MAX_OVERHEAD,
+        "trace_overhead": trace_overhead,
+        "trace_max_overhead": TRACE_MAX_OVERHEAD,
     }
     if verbose:
         print(f"chunked 8-device GB-scale all-to-all sweep: "
@@ -343,6 +386,9 @@ def run(verbose: bool = True) -> dict:
               f"new-sim wall {new_total:.3f}s (budget {BUDGET_S}s)")
         print(f"empty-FaultPlan overhead on the fault-free path: "
               f"{fault_overhead:.3f}x (ceiling {FAULT_MAX_OVERHEAD}x, "
+              f"bit-identical asserted)")
+        print(f"record_trace=False overhead on the unrecorded path: "
+              f"{trace_overhead:.3f}x (ceiling {TRACE_MAX_OVERHEAD}x, "
               f"bit-identical asserted)")
     return report
 
@@ -522,6 +568,11 @@ def main(argv=None) -> int:
         print(f"FAIL: empty-FaultPlan overhead "
               f"{report['fault_overhead']:.3f}x exceeds "
               f"{FAULT_MAX_OVERHEAD}x ceiling")
+        ok = False
+    if report["trace_overhead"] > TRACE_MAX_OVERHEAD:
+        print(f"FAIL: record_trace=False overhead "
+              f"{report['trace_overhead']:.3f}x exceeds "
+              f"{TRACE_MAX_OVERHEAD}x ceiling")
         ok = False
     return 0 if ok else 1
 

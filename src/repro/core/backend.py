@@ -14,6 +14,7 @@ import hashlib
 import json
 import os
 import tempfile
+import warnings
 
 from . import collectives as coll
 from .dma.dispatch import DispatchEntry, derive_dispatch
@@ -250,11 +251,28 @@ def _pick(entries, size: int) -> str:
     return entries[-1].variant
 
 
+class StaleTablesWarning(UserWarning):
+    """The latte backend dispatched on the baseline single-node tables.
+
+    ``tpu_dispatch_tables`` sweeps the paper's baseline command streams
+    (plus ``pipe_``/reduce candidates) but not the ``opt_``/``prelaunch_``
+    optimized streams — the published Tables 2/3 thresholds, kept
+    reproducible as published.  Until re-derived optimized tables land
+    (ROADMAP), thresholds may be stale for optimized deployments; pass
+    ``CommBackend(allow_stale_tables=True)`` to acknowledge and silence.
+    """
+
+
 @dataclasses.dataclass(frozen=True)
 class CommBackend:
     kind: str = "latte"            # latte | reference
     axis_devices: int = 16
     b2b_fanout_threshold: int = 4 * MB   # paper §5.3.1 empirical threshold
+    # The single-node latte tables are the published baseline thresholds
+    # (no opt_/prelaunch_ candidates in the sweep); until re-derived
+    # optimized tables land, dispatching on them warns (StaleTablesWarning)
+    # unless explicitly acknowledged here.
+    allow_stale_tables: bool = False
 
     def _strip(self, v: str) -> str:
         # opt_/prelaunch_ change the command stream's scheduling envelope,
@@ -264,12 +282,21 @@ class CommBackend:
                 v = v[len(prefix):]
         return v
 
+    def _tables(self, collective: str):
+        if not self.allow_stale_tables:
+            warnings.warn(
+                f"CommBackend('latte').{collective}: dispatching on the "
+                "baseline single-node tables (no opt_/prelaunch_ candidates "
+                "in the sweep); pass allow_stale_tables=True to acknowledge",
+                StaleTablesWarning, stacklevel=3)
+        return tpu_dispatch_tables(self.axis_devices)
+
     def all_gather(self, x, axis_name: str):
         """Called inside shard_map.  Returns stacked [n, *x.shape]."""
         if self.kind == "reference":
             return coll.reference_all_gather(x, axis_name)
         size = x.size * x.dtype.itemsize * self.axis_devices
-        ag = tpu_dispatch_tables(self.axis_devices)[0]
+        ag = self._tables("all_gather")[0]
         variant = self._strip(_pick(ag, size))
         return _AG_IMPL.get(variant, coll.reference_all_gather)(x, axis_name)
 
@@ -278,7 +305,7 @@ class CommBackend:
         if self.kind == "reference":
             return coll.reference_all_to_all(x, axis_name)
         size = x.size * x.dtype.itemsize
-        aa = tpu_dispatch_tables(self.axis_devices)[1]
+        aa = self._tables("all_to_all")[1]
         variant = self._strip(_pick(aa, size))
         return _AA_IMPL.get(variant, coll.reference_all_to_all)(x, axis_name)
 
@@ -288,7 +315,7 @@ class CommBackend:
         if self.kind == "reference":
             return coll.reference_reduce_scatter(x, axis_name)
         size = x.size * x.dtype.itemsize
-        rs = tpu_dispatch_tables(self.axis_devices)[2]
+        rs = self._tables("reduce_scatter")[2]
         variant = self._strip(_pick(rs, size))
         return _RS_IMPL.get(variant, coll.reference_reduce_scatter)(x, axis_name)
 
@@ -298,7 +325,7 @@ class CommBackend:
         if self.kind == "reference":
             return coll.reference_all_reduce(x, axis_name)
         size = x.size * x.dtype.itemsize
-        ar = tpu_dispatch_tables(self.axis_devices)[3]
+        ar = self._tables("all_reduce")[3]
         variant = self._strip(_pick(ar, size))
         return _AR_IMPL.get(variant, coll.reference_all_reduce)(x, axis_name)
 

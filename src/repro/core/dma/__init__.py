@@ -15,6 +15,8 @@ from .commands import (
     chunked_reduces,
     link_traffic,
     reduce_work,
+    tag_chunk,
+    tag_name,
 )
 from .collectives import (
     PIPE_DEPTH,
@@ -73,6 +75,15 @@ from .optimizations import (
     split_queues,
 )
 from .power import cu_collective_power, dma_collective_power
+from .trace import (
+    SimTrace,
+    TraceFlow,
+    TraceInstant,
+    TraceRecorder,
+    TraceSpan,
+    chrome_trace,
+    write_chrome_trace,
+)
 from .rccl_model import kernel_copy_latency, rccl_collective_latency
 from .topology import (
     Calibration,
@@ -89,6 +100,7 @@ __all__ = [
     "commands", "CmdKind", "Command", "EngineQueue", "Schedule",
     "chunk_command", "chunk_schedule", "chunk_sizes", "chunk_tag",
     "chunked_copies", "chunked_reduces", "link_traffic", "reduce_work",
+    "tag_chunk", "tag_name",
     "PIPE_DEPTH", "RS_VARIANTS", "allgather_schedule", "allreduce_schedule",
     "alltoall_schedule", "kv_fetch_schedule", "reduce_scatter_schedule",
     "COLLECTIVE_BUILDERS", "PAPER_AA_DISPATCH", "PAPER_AG_DISPATCH",
@@ -106,6 +118,8 @@ __all__ = [
     "OptimizationConfig", "batch_commands", "fuse_signals", "optimize",
     "parse_optimized", "split_queues",
     "cu_collective_power", "dma_collective_power",
+    "SimTrace", "TraceFlow", "TraceInstant", "TraceRecorder", "TraceSpan",
+    "chrome_trace", "write_chrome_trace",
     "kernel_copy_latency", "rccl_collective_latency",
     "Calibration", "PowerCalibration", "RcclCalibration", "Topology",
     "mi300x_platform", "tpu_v5e_pod", "rccl_ag_calibration", "rccl_aa_calibration",

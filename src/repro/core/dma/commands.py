@@ -252,6 +252,32 @@ def chunk_tag(tag: Tag, chunk: int) -> Tag:
     return tuple(tag) + (chunk,)
 
 
+def tag_name(tag: Tag) -> object:
+    """The semantic name of a (possibly composition-namespaced) tag: the
+    first string element — composed runs prefix the schedule index
+    (DESIGN.md §12), so the name is not always element 0."""
+    for e in tag:
+        if isinstance(e, str):
+            return e
+    return tag[0] if tag else None
+
+
+def tag_chunk(tag: Tag) -> int | None:
+    """The chunk index of a chunk-granularity tag, or ``None``.
+
+    Inverse of :func:`chunk_tag` under the tag convention
+    ``(name, producer_device, step[, chunk])`` with an optional leading
+    schedule-namespace prefix (§12): the element three past the name, when
+    present and integral, is the chunk index."""
+    for i, e in enumerate(tag):
+        if isinstance(e, str):
+            j = i + 3
+            if len(tag) > j and isinstance(tag[j], int):
+                return tag[j]
+            return None
+    return None
+
+
 def chunk_sizes(size: int, granularity: int) -> tuple[int, ...]:
     """Byte sizes of the chunks a ``size``-byte transfer splits into:
     full ``granularity`` chunks followed by one remainder chunk.

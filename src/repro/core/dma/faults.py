@@ -45,6 +45,8 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 
+from .commands import tag_name
+
 _INF = float("inf")
 
 #: Wire-resource prefixes a :class:`LinkDerate` may target (the simulator's
@@ -54,11 +56,9 @@ _WIRE_PREFIXES = ("link:", "hostlink:", "nic:")
 
 def _tag_name(tag: tuple) -> object:
     """The semantic name of a (possibly composition-namespaced) tag: the
-    first string element — composed runs prefix the schedule index (§12)."""
-    for e in tag:
-        if isinstance(e, str):
-            return e
-    return tag[0] if tag else None
+    first string element — composed runs prefix the schedule index (§12).
+    Shared with the trace layer via :func:`repro.core.dma.commands.tag_name`."""
+    return tag_name(tag)
 
 
 def resource_device(key: str) -> int | None:

@@ -161,10 +161,11 @@ import dataclasses
 import heapq
 from collections import defaultdict
 
-from .commands import DATA_KINDS, CmdKind, EngineQueue, Schedule
+from .commands import DATA_KINDS, CmdKind, EngineQueue, Schedule, tag_chunk
 from .faults import (BlockedWaiter, FaultPlan, FaultReport, RetryRecord,
                      SimFault)
 from .topology import Topology
+from .trace import SimTrace, TraceRecorder
 
 
 @dataclasses.dataclass(frozen=True)
@@ -238,6 +239,9 @@ class SimResult:
     # What the fault layer did (DESIGN.md §13) — None on fault-free runs
     # (an empty FaultPlan is normalized away before the event loop).
     fault_report: FaultReport | None = None
+    # Per-command span record (DESIGN.md §14) — None unless the run was
+    # started with record_trace=True; render with trace.chrome_trace().
+    trace: SimTrace | None = None
 
     @property
     def breakdown(self) -> PhaseBreakdown:
@@ -347,11 +351,13 @@ class _DroppedSignal:
 
 class _Sim:
     def __init__(self, topo: Topology, rep: int | None,
-                 faults: FaultPlan | None = None) -> None:
+                 faults: FaultPlan | None = None,
+                 trace: TraceRecorder | None = None) -> None:
         self.topo = topo
         self.calib = topo.calib
         self.rep = rep                      # symmetric-mode representative
         self.faults = faults                # FaultPlan or None (§13)
+        self.trace = trace                  # TraceRecorder or None (§14)
         self.dropped: dict[tuple, _DroppedSignal] = {}
         self.drop_log: list[tuple] = []
         self.delay_log: list[tuple] = []
@@ -421,16 +427,24 @@ class _Sim:
         t = start
         end = start
         fp = self.faults
-        if fp is None:
-            for tl, lat, _ in tls:
+        tr = self.trace
+        if fp is None and tr is None:       # hot path: no per-hop branches
+            for tl, lat, key in tls:
                 s, end = tl.acquire(t + lat, wire)
                 t = s                # cut-through: next hop staggers off start
+        elif fp is None:
+            for tl, lat, key in tls:
+                s, end = tl.acquire(t + lat, wire)
+                tr.wire(key, s, end)
+                t = s
         else:
             for tl, lat, key in tls:
                 # A flapping NIC holds the request until the outage clears;
                 # a derate window stretches the wire occupancy (§13).
                 req = fp.outage_release(key, t + lat)
                 s, end = tl.acquire(req, wire / fp.derate_factor(key, req))
+                if tr is not None:
+                    tr.wire(key, s, end)
                 t = s
         return end
 
@@ -456,10 +470,14 @@ class _Sim:
         raised at its closed-form completion time, waking chunk-granularity
         waiters exactly as the per-chunk loop would.
         """
-        if self.faults is not None:
+        if self.faults is not None or self.trace is not None:
             # Fault runs take the per-chunk loop (always correct): stragglers,
             # derate windows, flaps and per-tag signal draws all break the
             # back-to-back affine structure the closed form relies on (§13).
+            # Traced runs do too: the closed form commits O(1) timeline
+            # updates and would skip the per-chunk spans (§14) — the loop
+            # reproduces its latency bit-for-bit, and its timelines to the
+            # same ulp tolerance the §8.3/§9.2 equivalence tests pin.
             return False
         if tagged is None and (cmd.fused_tag is not None or cmd.fused_signal):
             return False
@@ -534,6 +552,7 @@ class _Sim:
         tags = self.tags
         idx = st.idx
         fp = self.faults
+        tr = self.trace
         while idx < n:
             cmd = cmds[idx]
             kind = cmd.kind
@@ -571,6 +590,15 @@ class _Sim:
                 engine = st.engine_tl
                 start = st.issue if st.issue > engine.free else engine.free
                 _, end = engine.acquire(start, ts)
+                if tr is not None:
+                    span_tag = cmd.fused_tag if cmd.fused_tag is not None \
+                        else cmd.tag
+                    ch = None if span_tag is None else tag_chunk(span_tag)
+                    tr.set_ctx(q.device, st.key[0], size, ch, False)
+                    tr.span(f"engine:{q.device}.{q.engine}", q.device,
+                            st.key[0], kind.name.lower(), start, end,
+                            tag=span_tag, size=size, chunk=ch,
+                            args={"src": cmd.src, "dsts": list(cmd.dsts)})
                 for dst in cmd.dsts:
                     e = self.transfer(cmd.src, dst, size, start)
                     if e > end:
@@ -591,6 +619,9 @@ class _Sim:
                     if fp is None:
                         tags[rt] = end + c.fused_sync
                         self.raised.append(rt)
+                        if tr is not None:
+                            tr.raise_tag(rt, end + c.fused_sync,
+                                         f"engine:{q.device}.{q.engine}")
                     else:
                         self._faulty_raise(rt, end + c.fused_sync, q, cmd)
                 if cmd.fused_signal:
@@ -607,6 +638,13 @@ class _Sim:
                     st.blocked = rt
                     return False
                 arrival = t + c.poll_trigger
+                if tr is not None:
+                    # Wait span: engine reached the wait (st.issue — parking
+                    # does not advance it) until signal arrival; an
+                    # already-arrived tag yields an instant event (§14).
+                    tr.wait(f"engine:{q.device}.{q.engine}", q.device,
+                            st.key[0], st.issue,
+                            arrival if arrival > st.issue else st.issue, rt)
                 if arrival > st.issue:
                     st.issue = arrival
                 idx += 1
@@ -624,7 +662,13 @@ class _Sim:
                 dur = c.reduce_setup + cmd.size / c.reduce_bytes_per_s
                 if fp is not None:
                     dur *= fp.engine_slowdown(q.device, q.engine)
-                _, end = st.engine_tl.acquire(start, dur)
+                rstart, end = st.engine_tl.acquire(start, dur)
+                if tr is not None:
+                    res = f"engine:{q.device}.{q.engine}"
+                    tr.wait(res, q.device, st.key[0], st.issue,
+                            arrival if arrival > st.issue else st.issue, rt)
+                    tr.span(res, q.device, st.key[0], "reduce", rstart, end,
+                            tag=rt, size=cmd.size, chunk=tag_chunk(rt))
                 st.issue = end
                 if end > st.last_end:
                     st.last_end = end
@@ -636,12 +680,19 @@ class _Sim:
                     if fp is None:
                         tags[rt2] = end + c.fused_sync
                         self.raised.append(rt2)
+                        if tr is not None:
+                            tr.raise_tag(rt2, end + c.fused_sync,
+                                         f"engine:{q.device}.{q.engine}")
                     else:
                         self._faulty_raise(rt2, end + c.fused_sync, q, cmd)
                 idx += 1
             elif kind is CmdKind.SIGNAL:
                 t = (st.issue if st.issue > st.last_end else st.last_end) + c.sync_engine
                 self.engine_atomics[q.device] += 1
+                if tr is not None:
+                    tr.span(f"engine:{q.device}.{q.engine}", q.device,
+                            st.key[0], "signal", t - c.sync_engine, t,
+                            tag=cmd.tag)
                 if cmd.tag is not None:
                     # Semaphore update gates the engine's next command.
                     st.issue = t
@@ -649,6 +700,9 @@ class _Sim:
                     if fp is None:
                         tags[rt] = t
                         self.raised.append(rt)
+                        if tr is not None:
+                            tr.raise_tag(rt, t,
+                                         f"engine:{q.device}.{q.engine}")
                     else:
                         # The engine-side update happened (the queue front end
                         # is gated either way); what a drop loses is the
@@ -670,15 +724,26 @@ class _Sim:
         dropped raises park in ``self.dropped`` for the watchdog, delayed
         raises land ``delay_s`` late, the rest raise normally."""
         fp = self.faults
+        tr = self.trace
+        res = f"engine:{q.device}.{q.engine}"
         if fp.drops_signal(rt, 0):
             self.dropped[rt] = _DroppedSignal(t, q.device, q.engine, cmd)
             self.drop_log.append(rt)
+            if tr is not None:
+                tr.instant(res, q.device, 0, "drop", t, tag=rt,
+                           args={"fault": "signal dropped", "attempt": 0})
             return
         if fp.delays_signal(rt, 0):
             t += fp.delay_s
             self.delay_log.append(rt)
+            if tr is not None:
+                tr.instant(res, q.device, 0, "delay", t, tag=rt,
+                           args={"fault": "signal delayed",
+                                 "delay_s": fp.delay_s})
         self.tags[rt] = t
         self.raised.append(rt)
+        if tr is not None:
+            tr.raise_tag(rt, t, res)
 
     def retry_dropped(self, waiting: dict) -> bool:
         """Watchdog/retry step (§13.2), called when the heap drains with
@@ -711,17 +776,29 @@ class _Sim:
         rec = self.dropped[rt]
         cmd = rec.cmd
         c = self.calib
+        tr = self.trace
+        ekey = f"engine:{rec.device}.{rec.engine}"
         # Host re-creates the command packet and rings the doorbell; the
         # engine re-fetches and re-executes.  All on live contended timelines
         # so retry cost is real, not an additive constant.
-        _, t = self.timeline(f"host:{rec.device}").acquire(
+        hs, t = self.timeline(f"host:{rec.device}").acquire(
             deadline, c.control + c.doorbell)
-        engine = self.timeline(f"engine:{rec.device}.{rec.engine}")
-        _, t = engine.acquire(t, c.fetch)
+        engine = self.timeline(ekey)
+        fs, t = engine.acquire(t, c.fetch)
+        if tr is not None:
+            tr.span(f"host:{rec.device}", rec.device, 0, "control", hs,
+                    hs + c.control + c.doorbell, tag=rt, retry=True)
+            tr.span(ekey, rec.device, 0, "fetch", fs, t, tag=rt, retry=True)
+            tr.set_ctx(rec.device, 0, cmd.size, tag_chunk(rt), True)
         if cmd.kind in DATA_KINDS:
             stream = cmd.size if cmd.kind is CmdKind.COPY else 2 * cmd.size
             ts = (stream / c.engine_bw) * fp.engine_slowdown(rec.device, rec.engine)
             s0, end = engine.acquire(t + c.copy_setup, ts)
+            if tr is not None:
+                tr.span(ekey, rec.device, 0, cmd.kind.name.lower(), s0, end,
+                        tag=rt, size=cmd.size, chunk=tag_chunk(rt),
+                        retry=True,
+                        args={"src": cmd.src, "dsts": list(cmd.dsts)})
             for dst in cmd.dsts:
                 e = self.transfer(cmd.src, dst, cmd.size, s0)
                 if e > end:
@@ -734,11 +811,17 @@ class _Sim:
         elif cmd.kind is CmdKind.REDUCE:
             dur = (c.reduce_setup + cmd.size / c.reduce_bytes_per_s) \
                 * fp.engine_slowdown(rec.device, rec.engine)
-            _, end = engine.acquire(t, dur)
+            rs, end = engine.acquire(t, dur)
+            if tr is not None:
+                tr.span(ekey, rec.device, 0, "reduce", rs, end, tag=rt,
+                        size=cmd.size, chunk=tag_chunk(rt), retry=True)
             raise_t = end + c.fused_sync
         else:                               # SIGNAL: engine atomic round-trip
-            _, raise_t = engine.acquire(t, c.sync_engine)
+            ss, raise_t = engine.acquire(t, c.sync_engine)
             self.engine_atomics[rec.device] += 1
+            if tr is not None:
+                tr.span(ekey, rec.device, 0, "signal", ss, raise_t, tag=rt,
+                        retry=True)
         self.retry_seconds += raise_t - deadline
         attempt = rec.attempts              # draw-stream index of this re-raise
         dropped_again = fp.drops_signal(rt, attempt)
@@ -750,6 +833,10 @@ class _Sim:
             self.drop_log.append(rt)
             rec.time = raise_t
             rec.deadline = raise_t + fp.watchdog_s * fp.backoff ** attempt
+            if tr is not None:
+                tr.instant(ekey, rec.device, 0, "drop", raise_t, tag=rt,
+                           args={"fault": "signal dropped",
+                                 "attempt": attempt})
         else:
             del self.dropped[rt]
             if fp.delays_signal(rt, attempt):
@@ -757,6 +844,8 @@ class _Sim:
                 self.delay_log.append(rt)
             self.tags[rt] = raise_t
             self.raised.append(rt)
+            if tr is not None:
+                tr.raise_tag(rt, raise_t, ekey)
         return True
 
     def fault_report(self) -> FaultReport:
@@ -820,6 +909,7 @@ def _start_device(sim: _Sim, dev: int, queues: list[EngineQueue],
     amortization.  Unbatched queues always pay ``doorbell``.
     """
     c = sim.topo.calib
+    tr = sim.trace
     live = [q for q in queues if not q.prelaunched]
     pre = [q for q in queues if q.prelaunched]
     host = sim.timeline(f"host:{dev}")
@@ -827,6 +917,13 @@ def _start_device(sim: _Sim, dev: int, queues: list[EngineQueue],
     t_control, events = _control_cost(live, c)
     if live:
         cstart, cend = host.acquire(t0, t_control)
+        if tr is not None:
+            # args["events"] = command-creation scheduling events only; the
+            # trace-count reconciliation adds full-cost doorbells and the
+            # completion drain to rebuild host_events (§14).
+            tr.span(f"host:{dev}", dev, key[0], "control", cstart, cend,
+                    args={"events": events,
+                          "commands": sum(len(q.commands) for q in live)})
     else:
         cstart = cend = t0
 
@@ -835,17 +932,27 @@ def _start_device(sim: _Sim, dev: int, queues: list[EngineQueue],
     for q in live:
         if q.batch > 1 and batched_seen:
             bell_cost = c.doorbell_batched
+            full_ring = False
         else:
             bell_cost = c.doorbell
+            full_ring = True
             events += 1            # a full-cost ring is its own host event
         # An intervening unbatched submission resets the amortization:
         # the next batched queue rings at full cost again.
         batched_seen = q.batch > 1
-        _, bell = host.acquire(host.free, bell_cost)
+        bs, bell = host.acquire(host.free, bell_cost)
         engine_tl = sim.timeline(f"engine:{dev}.{q.engine}")
         engine_tl.acquire(bell, c.fetch)
+        if tr is not None:
+            tr.span(f"host:{dev}", dev, key[0], "doorbell", bs, bell,
+                    args={"engine": q.engine, "full": full_ring})
+            tr.span(f"engine:{dev}.{q.engine}", dev, key[0], "fetch",
+                    bell, bell + c.fetch)
         states.append(_QueueState(q, bell + c.fetch, engine_tl, key))
     for q in pre:
+        if tr is not None:
+            tr.instant(f"engine:{dev}.{q.engine}", dev, key[0], "armed",
+                       t0 + c.poll_trigger)
         states.append(_QueueState(q, t0 + c.poll_trigger,
                                   sim.timeline(f"engine:{dev}.{q.engine}"), key))
     sim.host_events[key] += events
@@ -874,7 +981,10 @@ def _finish_device(sim: _Sim, dev: int, cend: float,
     if sigs or fused:
         sim.host_events[key] += 1
     signal_done = max([copy_end] + sigs + fused)
-    _, total = sim.timeline(f"host:{dev}").acquire(signal_done, t_obs)
+    ds, total = sim.timeline(f"host:{dev}").acquire(signal_done, t_obs)
+    if sim.trace is not None and (sigs or fused):
+        sim.trace.span(f"host:{dev}", dev, key[0], "sync", ds, total,
+                       args={"signals": len(sigs), "fused": len(fused)})
     return sched_end, copy_end, total
 
 
@@ -1051,7 +1161,8 @@ def _device_hbm_bytes(queues: list[EngineQueue]) -> int:
 
 def simulate(schedule: Schedule, topo: Topology, *,
              symmetric: bool | None = None,
-             faults: FaultPlan | None = None) -> SimResult:
+             faults: FaultPlan | None = None,
+             record_trace: bool = False) -> SimResult:
     """Execute ``schedule`` on ``topo`` and return a :class:`SimResult`.
 
     ``symmetric=None`` (default) honors the builder's ``Schedule.symmetric``
@@ -1071,12 +1182,22 @@ def simulate(schedule: Schedule, topo: Topology, *,
     the schedule deadlocks — a ``wait`` on a tag no remaining queue can
     raise, or a dropped signal whose watchdog retries are exhausted; the
     message carries the sorted per-waiter diagnosis (§13.3).
+
+    ``record_trace=True`` attaches a :class:`~repro.core.dma.trace.SimTrace`
+    to ``SimResult.trace`` (DESIGN.md §14).  Recording forces the full event
+    loop — the symmetric (§6) and closed-form chunk (§8.3/§9.2) fast paths
+    commit aggregate timeline updates and would skip per-command spans — but
+    ``latency`` (and every per-device phase) stays bit-identical to the
+    unrecorded run; coalesced busy intervals agree to the same ulp tolerance
+    the fast-path equivalence tests pin (closed forms multiply where the
+    loop accumulates).
     """
     if faults is not None and faults.is_empty():
         faults = None
     sym = schedule.symmetric if symmetric is None else symmetric
-    if faults is not None:
+    if faults is not None or record_trace:
         sym = False
+    trace = TraceRecorder() if record_trace else None
     devices = schedule.devices
 
     def run_full(run_devices: list[int]) -> dict[int, PhaseBreakdown]:
@@ -1098,7 +1219,7 @@ def simulate(schedule: Schedule, topo: Topology, *,
         atomics = {d: sim.engine_atomics.get(rep, 0) for d in devices}
         reduces = {d: sim.reduce_chunks.get(rep, 0) for d in devices}
     else:
-        sim = _Sim(topo, None, faults)
+        sim = _Sim(topo, None, faults, trace)
         per_device = run_full(devices)
         engines = {d: schedule.engines_used(d) for d in devices}
         hbm = {d: _device_hbm_bytes(schedule.queues_for(d)) for d in devices}
@@ -1120,7 +1241,18 @@ def simulate(schedule: Schedule, topo: Topology, *,
         reduce_chunks=reduces,
         representative=rep,
         fault_report=sim.fault_report() if faults is not None else None,
+        trace=_finish_trace(trace, faults),
     )
+
+
+def _finish_trace(trace: TraceRecorder | None,
+                  faults: FaultPlan | None) -> SimTrace | None:
+    """Freeze the recorder (plus fault windows, §14) into a SimTrace."""
+    if trace is None:
+        return None
+    if faults is not None:
+        trace.fault_windows(faults)
+    return trace.finish()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -1205,7 +1337,8 @@ def _namespace_schedule(schedule: Schedule, k: int) -> Schedule:
 
 def run_composed(schedules, topo: Topology,
                  release_times=None,
-                 faults: FaultPlan | None = None) -> ComposedResult:
+                 faults: FaultPlan | None = None,
+                 record_trace: bool = False) -> ComposedResult:
     """Execute K independent schedules in ONE resource world (§12).
 
     ``schedules`` is a sequence of :class:`Schedule`; ``release_times``
@@ -1226,6 +1359,12 @@ def run_composed(schedules, topo: Topology,
     the composed world (DESIGN.md §13) — fault windows are in the composed
     run's time frame (0 = the first release).  An empty plan is normalized
     to ``None`` (bit-identical to no plan).
+
+    ``record_trace=True`` attaches a :class:`~repro.core.dma.trace.SimTrace`
+    to ``ComposedResult.result.trace`` (§14); composed spans carry their
+    schedule index so per-stream tracks render per-device/per-resource with
+    the namespace in the slice label.  Recording never changes timing: the
+    composed path already runs the full event loop.
     """
     schedules = list(schedules)
     if faults is not None and faults.is_empty():
@@ -1241,7 +1380,8 @@ def run_composed(schedules, topo: Topology,
     if any(t < 0.0 for t in release_times):
         raise ValueError("release times must be >= 0")
 
-    sim = _Sim(topo, None, faults)
+    trace = TraceRecorder() if record_trace else None
+    sim = _Sim(topo, None, faults, trace)
     namespaced = [_namespace_schedule(s, k) for k, s in enumerate(schedules)]
     jobs = []
     for k, (ns, t0) in enumerate(zip(namespaced, release_times)):
@@ -1305,6 +1445,7 @@ def run_composed(schedules, topo: Topology,
         reduce_chunks={d: sim.reduce_chunks.get(d, 0) for d in all_devices},
         representative=None,
         fault_report=sim.fault_report() if faults is not None else None,
+        trace=_finish_trace(trace, faults),
     )
     return ComposedResult(outcomes=tuple(outcomes), result=result)
 

@@ -354,6 +354,7 @@ class ServingSimulator:
         self._fetch_cache: dict = {}
         self._decode_cache: dict = {}
         self._iso_cache: dict = {}
+        self.last_recorded = None   # ComposedResult of the record_round round
 
     # ------------------------------------------------------- schedules ----
     def _home_device(self, req: Request) -> int:
@@ -468,8 +469,17 @@ class ServingSimulator:
         return admitted, still, deferred
 
     # -------------------------------------------------------------- run ----
-    def run(self, requests) -> ServingReport:
+    def run(self, requests, *, record_round: int | None = None) -> ServingReport:
+        """Simulate ``requests`` to completion.
+
+        ``record_round`` records the Nth composed round (0-based) with
+        ``record_trace=True`` and keeps its :class:`ComposedResult` on
+        ``self.last_recorded`` for Chrome-trace export (DESIGN.md §14);
+        timing is unaffected (composed runs always take the full event
+        loop).  ``None`` (default) never records.
+        """
         cfg = self.cfg
+        self.last_recorded = None
         reqs = sorted(requests, key=lambda r: (r.arrival, r.rid))
         n = len(reqs)
         if n == 0:
@@ -560,7 +570,10 @@ class ServingSimulator:
             comp = run_composed(
                 schedules, self.topo, releases,
                 faults=self.faults.shifted(now) if self.faults is not None
-                else None)
+                else None,
+                record_trace=record_round is not None and rounds == record_round)
+            if record_round is not None and rounds == record_round:
+                self.last_recorded = comp
             rounds += 1
 
             fin = [comp.outcomes[k].finish for k in range(n_fetch)]

@@ -1,8 +1,13 @@
 """JAX-level latte collectives vs XLA references (8 emulated devices,
 subprocess) + CommBackend dispatch behavior."""
+import types
+import warnings
+
 import pytest
 
-from repro.core.backend import CommBackend, tpu_dispatch_tables
+from repro.core import backend
+from repro.core.backend import (CommBackend, StaleTablesWarning,
+                                tpu_dispatch_tables)
 
 
 LATTE_TEST = r"""
@@ -54,8 +59,10 @@ def wrap_ar(fn):
 assert np.allclose(wrap_ar(coll.ring_all_reduce), expect_rs, atol=1e-4)
 assert np.allclose(wrap_ar(coll.reference_all_reduce), expect_rs, atol=1e-4)
 
-# CommBackend end-to-end inside shard_map (size-dispatched)
-be = CommBackend("latte", axis_devices=N)
+# CommBackend end-to-end inside shard_map (size-dispatched); stale-table
+# acknowledgment keeps the subprocess log warning-free (test_backend covers
+# the warning itself).
+be = CommBackend("latte", axis_devices=N, allow_stale_tables=True)
 y = np.asarray(jax.jit(shard_map(lambda a: be.all_gather(a[0], "x"),
       mesh=mesh, in_specs=P("x", None, None), out_specs=P(None, None, None),
       check_vma=False))(x))
@@ -90,6 +97,43 @@ def test_dispatch_tables_structure():
         for a, b in zip(table, table[1:]):
             assert a.hi == b.lo
         assert all(e.variant.endswith("_rs") for e in table)
+
+
+class _AnyImpl(dict):
+    """Stands in for the _*_IMPL maps: any winner resolves to a stub so the
+    dispatch path runs outside shard_map."""
+
+    def get(self, key, default=None):
+        return lambda x, axis_name: ("dispatched", key)
+
+
+def _stub_array(nbytes: int):
+    return types.SimpleNamespace(size=nbytes,
+                                 dtype=types.SimpleNamespace(itemsize=1))
+
+
+def test_latte_dispatch_warns_on_stale_tables(monkeypatch):
+    """The default latte backend must not silently dispatch on the baseline
+    single-node tables (ROADMAP: optimized tables not yet re-derived)."""
+    monkeypatch.setattr(backend, "_AG_IMPL", _AnyImpl())
+    be = CommBackend("latte")
+    with pytest.warns(StaleTablesWarning, match="baseline single-node"):
+        out = be.all_gather(_stub_array(1 << 20), "x")
+    assert out[0] == "dispatched"       # still returns the table's winner
+
+
+def test_latte_dispatch_silent_when_acknowledged(monkeypatch):
+    monkeypatch.setattr(backend, "_AG_IMPL", _AnyImpl())
+    be = CommBackend("latte", allow_stale_tables=True)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", StaleTablesWarning)
+        out = be.all_gather(_stub_array(1 << 20), "x")
+    assert out[0] == "dispatched"
+    # the reference backend never consults the tables -> never warns
+    ref = CommBackend("reference")
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", StaleTablesWarning)
+        ref.kv_fetch_plan(16, 16 * 1024)
 
 
 def test_kv_fetch_plan_threshold():

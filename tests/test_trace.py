@@ -1,0 +1,218 @@
+"""Chrome-trace recording and export tests (DESIGN.md §14).
+
+The §14 acceptance invariants live here:
+
+* **Recording is free** — ``record_trace=True`` forces the full event loop
+  (symmetric §6 and closed-form chunk §8.3/§9.2 fast paths decline) but
+  latency and every per-device phase stay *bit-identical* to the
+  unrecorded run, across baseline/``opt_``/``pipe_``/hierarchical/fault
+  runs; ``record_trace=False`` attaches no trace.
+* **Valid trace-event JSON** — every rendered event carries
+  ``ph``/``ts``/``pid``/``tid``, ``ts >= 0``, ``dur >= 0``.
+* **Byte conservation** — data-span byte totals reproduce the schedule's
+  ``link_traffic`` invariant exactly.
+* **Flow semantics** — every flow arrow runs strictly forward in time
+  (acyclic) and lands on a recorded wait slice or wait instant.
+* **Zero-duration policy** — zero-cost grants are synthesized as instant
+  events, never dropped; span+instant counts reconcile with the
+  ``host_events``/``engine_atomics`` counters (property-tested).
+* **Golden trace** — the 2-device ring all-gather render is pinned
+  byte-for-byte in ``tests/golden/trace_ag_ring2.json``.
+"""
+import json
+import os
+
+import pytest
+
+from repro.core.dma import (FaultPlan, Straggler, allgather_schedule,
+                            alltoall_schedule, chrome_trace, link_traffic,
+                            mi300x_platform, reduce_scatter_schedule,
+                            run_composed, simulate, tag_name, tpu_v5e_pod,
+                            write_chrome_trace)
+from repro.core.dma.topology import mi300x_cluster
+
+KB, MB = 1024, 1024 * 1024
+MI = mi300x_platform()
+TPU = tpu_v5e_pod(16)
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden",
+                      "trace_ag_ring2.json")
+
+#: (builder, topo, size, variant) grid covering every stream family the
+#: bit-identity contract names: baseline, optimized, pipelined, chunked,
+#: reduce, hierarchical.
+GRID = [
+    (allgather_schedule, MI, 1 * MB, "pcpy"),
+    (allgather_schedule, MI, 4 * MB, "opt_bcst"),
+    (allgather_schedule, MI, 4 * MB, "pipe_bidir_ring"),
+    (alltoall_schedule, MI, 2 * MB, "opt_pcpy"),
+    (alltoall_schedule, TPU, 1 * MB, "ring"),
+    (reduce_scatter_schedule, TPU, 2 * MB, "pipe_ring_rs"),
+    (allgather_schedule, mi300x_cluster(2), 4 * MB, "hier_pipe"),
+]
+
+def _fault_plan(sched) -> FaultPlan:
+    names = {tag_name(t) for q in sched.queues for c in q.commands
+             for t in (c.tag, c.fused_tag) if t is not None}
+    return FaultPlan(drop_tags=(sorted(names)[0],),
+                     stragglers=(Straggler(device=0, engine=None,
+                                           slowdown=1.5),))
+
+
+def _recorded(builder, topo, size, variant, faults=None):
+    sched = builder(topo, size, variant)
+    plain = simulate(sched, topo, faults=faults)
+    rec = simulate(sched, topo, faults=faults, record_trace=True)
+    return sched, plain, rec
+
+
+# ---------------------------------------------------------------- identity --
+
+@pytest.mark.parametrize("builder,topo,size,variant", GRID,
+                         ids=[g[3] for g in GRID])
+def test_recording_is_latency_bit_identical(builder, topo, size, variant):
+    _, plain, rec = _recorded(builder, topo, size, variant)
+    assert rec.latency == plain.latency
+    assert rec.per_device == plain.per_device
+    assert rec.host_events == plain.host_events
+    assert rec.engine_atomics == plain.engine_atomics
+    assert plain.trace is None and rec.trace is not None
+
+
+def test_recording_is_bit_identical_under_faults():
+    plan = _fault_plan(allgather_schedule(TPU, 4 * MB, "pipe_b2b"))
+    _, plain, rec = _recorded(allgather_schedule, TPU, 4 * MB, "pipe_b2b",
+                              faults=plan)
+    assert rec.latency == plain.latency
+    assert rec.timelines == plain.timelines     # both force the full loop
+    assert any(s.retry for s in rec.trace.spans)
+
+
+def test_composed_recording_is_bit_identical():
+    sched = allgather_schedule(MI, 1 * MB, "ring")
+    plain = run_composed([sched, sched], MI, [0.0, 1e-6])
+    rec = run_composed([sched, sched], MI, [0.0, 1e-6], record_trace=True)
+    assert rec.makespan == plain.makespan
+    assert [o.latency for o in rec.outcomes] == \
+        [o.latency for o in plain.outcomes]
+    assert rec.result.trace is not None and plain.result.trace is None
+    assert {s.schedule for s in rec.result.trace.spans} == {0, 1}
+
+
+# ------------------------------------------------------------- JSON shape --
+
+def _all_events():
+    _, _, rec = _recorded(allgather_schedule, MI, 4 * MB, "pipe_bidir_ring")
+    return chrome_trace(rec)["traceEvents"]
+
+
+def test_chrome_trace_events_are_well_formed():
+    events = _all_events()
+    assert events, "empty trace"
+    for e in events:
+        assert {"ph", "ts", "pid", "tid"} <= e.keys()
+        assert e["ts"] >= 0
+        if e["ph"] == "X":
+            assert e["dur"] >= 0
+    phases = {e["ph"] for e in events}
+    assert "X" in phases and "M" in phases
+
+
+def test_chrome_trace_rejects_unrecorded_result():
+    res = simulate(allgather_schedule(MI, 1 * MB, "ring"), MI)
+    with pytest.raises(ValueError, match="record_trace=True"):
+        chrome_trace(res)
+
+
+def test_write_chrome_trace_round_trips(tmp_path):
+    _, _, rec = _recorded(allgather_schedule, MI, 1 * MB, "ring")
+    path = write_chrome_trace(rec, str(tmp_path / "t.json"))
+    with open(path) as f:
+        loaded = json.load(f)
+    assert loaded == json.loads(json.dumps(chrome_trace(rec)))
+
+
+# ------------------------------------------------------- byte conservation --
+
+DATA_KIND_NAMES = {"copy", "bcst", "swap"}
+
+
+def _span_traffic(trace) -> dict[tuple, int]:
+    out: dict[tuple, int] = {}
+    for s in trace.spans:
+        if s.kind not in DATA_KIND_NAMES or s.retry:
+            continue
+        src, dsts = s.args["src"], s.args["dsts"]
+        for dst in dsts:
+            out[(src, dst)] = out.get((src, dst), 0) + s.size
+        if s.kind == "swap":
+            key = (dsts[0], src)
+            out[key] = out.get(key, 0) + s.size
+    return out
+
+
+@pytest.mark.parametrize("builder,topo,size,variant", GRID,
+                         ids=[g[3] for g in GRID])
+def test_data_span_bytes_match_link_traffic(builder, topo, size, variant):
+    sched, _, rec = _recorded(builder, topo, size, variant)
+    assert _span_traffic(rec.trace) == link_traffic(sched)
+
+
+# ------------------------------------------------------------------ flows --
+
+def test_flows_are_acyclic_and_land_on_waits():
+    _, _, rec = _recorded(allgather_schedule, MI, 4 * MB, "pipe_bidir_ring")
+    trace = rec.trace
+    assert trace.flows, "pipelined run recorded no flow arrows"
+    wait_ends = {(s.resource, s.end) for s in trace.spans
+                 if s.kind == "wait"}
+    wait_ends.update((i.resource, i.time) for i in trace.instants
+                     if i.kind == "wait")
+    ids = [f.id for f in trace.flows]
+    assert len(ids) == len(set(ids))
+    for f in trace.flows:
+        assert f.src_time < f.dst_time          # strictly forward: acyclic
+        assert (f.dst_resource, f.dst_time) in wait_ends
+
+
+# ---------------------------------------------- zero-duration reconciliation
+
+RECONCILE_GRID = GRID + [
+    (allgather_schedule, TPU, 1 * MB, "ring"),      # zero-cost TPU doorbells
+    (allgather_schedule, MI, 8 * MB, "opt_prelaunch_b2b"),
+]
+
+
+@pytest.mark.parametrize("builder,topo,size,variant", RECONCILE_GRID,
+                         ids=[f"{g[3]}-{g[1].name}" for g in RECONCILE_GRID])
+def test_trace_counts_reconcile_with_counters(builder, topo, size, variant):
+    """The §14 zero-duration policy, pinned: every host event and engine
+    atomic the simulator counted appears in the trace as a span or a
+    synthesized instant — nothing is dropped when a cost is zero."""
+    _, plain, rec = _recorded(builder, topo, size, variant)
+    trace = rec.trace
+    events = [*trace.spans, *trace.instants]
+
+    def count(kind):
+        return sum(1 for e in events if e.kind == kind
+                   and not getattr(e, "retry", False))
+
+    control_events = sum(e.args["events"] for e in events
+                         if e.kind == "control"
+                         and not getattr(e, "retry", False))
+    full_doorbells = sum(1 for e in events if e.kind == "doorbell"
+                         and e.args["full"])
+    host_total = control_events + full_doorbells + count("sync")
+    assert host_total == sum(plain.host_events.values())
+    assert count("signal") == sum(plain.engine_atomics.values())
+
+
+# ----------------------------------------------------------------- golden --
+
+def test_golden_two_device_ring_allgather():
+    topo = tpu_v5e_pod(2)
+    sched = allgather_schedule(topo, 64 * KB, "ring")
+    rec = simulate(sched, topo, record_trace=True)
+    rendered = json.loads(json.dumps(chrome_trace(rec), sort_keys=True))
+    with open(GOLDEN) as f:
+        golden = json.load(f)
+    assert rendered == golden

@@ -74,21 +74,33 @@ def check() -> list[str]:
 
 def check_claim_coverage(readme_text: str) -> list[str]:
     """Every claim name in claims.py must appear in README.md — literally
-    or via a ``prefix_*`` wildcard in the figure→claims map."""
+    or via a ``prefix_*`` wildcard in the figure→claims map.
+
+    Whole-word matching only: ``fault_pipe`` is NOT covered by a mention
+    of ``fault_pipe_grace`` (the substring check that let the PR-8 docs
+    drift through).  Wildcards must be live — a ``prefix_*`` that matches
+    no claim is a stale map row and fails too.
+    """
     claims_path = ROOT / "src" / "repro" / "core" / "dma" / "claims.py"
     if not claims_path.exists():
         return ["src/repro/core/dma/claims.py is missing"]
-    names = CLAIM_NAME.findall(claims_path.read_text())
+    names = sorted(set(CLAIM_NAME.findall(claims_path.read_text())))
     wildcards = README_WILDCARD.findall(readme_text)
+    mentioned = set(re.findall(r"[A-Za-z0-9_]+", readme_text))
     errors = []
-    for name in sorted(set(names)):
-        if name in readme_text:
+    for name in names:
+        if name in mentioned:
             continue
         if any(fnmatch.fnmatch(name, w) for w in wildcards):
             continue
         errors.append(
             f"claims.py defines claim {name!r} but README.md's "
             "figure→benchmark→claims map never mentions it")
+    for w in sorted(set(wildcards)):
+        if not any(fnmatch.fnmatch(name, w) for name in names):
+            errors.append(
+                f"README.md wildcard `{w}` matches no claim in claims.py "
+                "— stale figure-map row")
     return errors
 
 
