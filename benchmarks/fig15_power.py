@@ -8,10 +8,13 @@ engine's atomic round-trip) and checks the paper's 3-10% additional power
 saving at latency-bound sizes."""
 from __future__ import annotations
 
-from repro.core.dma import (allgather_schedule, cu_collective_power,
+from repro.core.dma import (allgather_schedule, allreduce_schedule,
+                            alltoall_schedule, cu_collective_power,
                             dma_collective_power, mi300x_platform, paper_dispatch,
-                            rccl_ag_calibration, simulate)
+                            rccl_aa_calibration, rccl_ag_calibration,
+                            reduce_scatter_schedule, simulate)
 from repro.core.dma.rccl_model import rccl_collective_latency
+from repro.core.dma.topology import PowerCalibration
 from .common import KB, MB, ClaimChecker, fmt_size
 
 
@@ -46,9 +49,67 @@ def run(verbose: bool = True, optimized: bool = False):
         pa = dma_collective_power(topo, s, simulate(allgather_schedule(topo, s, a), topo)).total
         pb = dma_collective_power(topo, s, simulate(allgather_schedule(topo, s, b), topo)).total
         cc.check(f"{b} saving vs {a} @{fmt_size(s)}", 1 - pb / pa, paper, lo, hi)
+    per_collective_power_report(cc, topo, verbose)
     if optimized:
         optimized_power_report(cc, topo, verbose)
     return cc, rows
+
+
+def per_collective_power_report(cc: ClaimChecker, topo, verbose: bool) -> None:
+    """CU-vs-DMA power per collective kind at a bandwidth-bound size.
+
+    The CU power model's HBM payload differs per collective (all_to_all
+    moves per-peer shards at the same total bytes; the reduce collectives
+    read the local accumulator per arrived chunk — 3x per delivery vs the
+    gather collectives' 2x, all_reduce composing RS+AG at 5x over twice
+    the wire time), so the savings band is checked per collective instead
+    of extrapolating the all-gather number.
+    """
+    s = 256 * MB
+    lat_ag = rccl_collective_latency(topo, s, rccl_ag_calibration())
+    lat_aa = rccl_collective_latency(topo, s, rccl_aa_calibration())
+    cu = {
+        "all_gather": cu_collective_power(topo, s, lat_ag,
+                                          collective="all_gather"),
+        "all_to_all": cu_collective_power(topo, s, lat_aa,
+                                          collective="all_to_all"),
+        "reduce_scatter": cu_collective_power(topo, s, lat_ag,
+                                              collective="reduce_scatter"),
+        # RS + ring-AG composition: same ring wire twice.
+        "all_reduce": cu_collective_power(topo, s, 2 * lat_ag,
+                                          collective="all_reduce"),
+    }
+    dma = {
+        "all_gather": allgather_schedule(topo, s, paper_dispatch("all_gather", s)),
+        "all_to_all": alltoall_schedule(topo, s, paper_dispatch("all_to_all", s)),
+        "reduce_scatter": reduce_scatter_schedule(topo, s, "pipe_bidir_ring_rs"),
+        "all_reduce": allreduce_schedule(topo, s, "pipe_bidir_ring_rs"),
+    }
+    savings = {}
+    if verbose:
+        print("\nCU-vs-DMA power per collective @256MB:")
+    for name, sched in dma.items():
+        p_dma = dma_collective_power(topo, s, simulate(sched, topo))
+        savings[name] = 1 - p_dma.total / cu[name].total
+        if verbose:
+            print(f"  {name:>15}: cu {cu[name].total:6.1f}W "
+                  f"dma {p_dma.total:6.1f}W  saving {savings[name]:6.1%}")
+    cc.check("cu-vs-dma saving all_gather @256MB", savings["all_gather"],
+             0.39, 0.30, 0.48)
+    cc.check("cu-vs-dma saving all_to_all @256MB", savings["all_to_all"],
+             0.39, 0.30, 0.48)
+    cc.check("cu-vs-dma saving reduce_scatter @256MB",
+             savings["reduce_scatter"], 0.49, 0.40, 0.58)
+    cc.check("cu-vs-dma saving all_reduce @256MB", savings["all_reduce"],
+             0.50, 0.40, 0.60)
+    # The payload accounting itself: dynamic HBM power ratios pin the 3x/2x
+    # accumulator traffic and the 5x-over-2x-wire-time RS+AG composition.
+    hs = PowerCalibration().hbm_static
+    dyn = {k: p.hbm - hs for k, p in cu.items()}
+    cc.check("cu RS/AG dynamic HBM power (3x vs 2x payload)",
+             dyn["reduce_scatter"] / dyn["all_gather"], 1.5, 1.45, 1.55)
+    cc.check("cu AR/AG dynamic HBM power (5x payload over 2x wire)",
+             dyn["all_reduce"] / dyn["all_gather"], 1.25, 1.20, 1.30)
 
 
 def optimized_power_report(cc: ClaimChecker, topo, verbose: bool) -> None:

@@ -1,0 +1,81 @@
+"""Fused compute-collective overlap (DESIGN.md §15): GEMM+reduce-scatter
+and all-gather+GEMM schedules whose tile/chunk gating lets collective
+chunks hide under the CU tile stream, vs the sequential control arm (same
+command stream, gates coarsened to the final tile / final arrival).
+
+Checks the named claim bands of ``fused_overlap_claims``: bandwidth-bound
+overlap gain on both fabrics, the exposed-comm fraction left after fusing,
+and the reduce-placement crossover (CU-side epilogue wins small, engine-side
+wins large, à la arXiv:2512.10236) — plus that the ``allow_fused`` dispatch
+sweep actually renders that crossover as a size band on MI300X.
+"""
+from __future__ import annotations
+
+from repro.core.dma import mi300x_platform, tpu_v5e_pod
+from repro.core.dma.claims import fused_overlap_claims
+from repro.core.dma.dispatch import (derive_dispatch, pick_variant,
+                                     variant_latency)
+from .common import KB, MB, ClaimChecker, fmt_size
+
+SIZES = [16 * KB, 256 * KB, 1 * MB, 16 * MB, 64 * MB, 256 * MB, 1024 * MB]
+
+
+def run(verbose: bool = True):
+    mi, tpu = mi300x_platform(), tpu_v5e_pod(16)
+    if verbose:
+        for name, topo in (("mi300x", mi), ("tpu16", tpu)):
+            print(f"{name}: GEMM+RS latency (us) and overlap gain")
+            print(f"{'size':>6} {'seq':>10} {'fused_cu':>10} {'fused_eng':>10}"
+                  f" {'gain':>6}  {'ag_seq':>10} {'ag_fused':>10} {'gain':>6}")
+            for s in SIZES:
+                seq = variant_latency(topo, "fused_gemm_rs", s, "seq")
+                cu = variant_latency(topo, "fused_gemm_rs", s, "fused_cu_d4")
+                eng = variant_latency(topo, "fused_gemm_rs", s,
+                                      "fused_engine_d4")
+                aseq = variant_latency(topo, "fused_ag_gemm", s, "seq")
+                af = variant_latency(topo, "fused_ag_gemm", s, "fused_d4")
+                print(f"{fmt_size(s):>6} {seq*1e6:10.2f} {cu*1e6:10.2f} "
+                      f"{eng*1e6:10.2f} {seq/min(cu, eng):6.3f} "
+                      f"{aseq*1e6:10.2f} {af*1e6:10.2f} {aseq/af:6.3f}")
+            print()
+
+    cc = ClaimChecker("fig_fused_overlap")
+    for c in fused_overlap_claims(mi, tpu):
+        cc.check(c.description, c.model_value, c.paper_value, c.lo, c.hi)
+
+    # The dispatch sweep must render the placement crossover as a size
+    # band, not just two cherry-picked points: some swept size dispatches
+    # to a CU-placed variant and some larger size to an engine-placed one.
+    entries = derive_dispatch(mi, "fused_gemm_rs", SIZES, allow_fused=True,
+                              allow_prelaunch=False)
+    winners = {s: pick_variant(entries, s) for s in SIZES}
+    if verbose:
+        print("mi300x fused_gemm_rs dispatch (allow_fused sweep):")
+        for s in SIZES:
+            print(f"  {fmt_size(s):>6} -> {winners[s]}")
+    cu_sizes = [s for s in SIZES if "_cu_" in winners[s]]
+    eng_sizes = [s for s in SIZES if "_engine_" in winners[s]]
+    cc.check("dispatch renders a cu-placement band (n sizes)",
+             float(len(cu_sizes)), 2.0, 1.0, float(len(SIZES) - 1))
+    cc.check("dispatch renders an engine-placement band (n sizes)",
+             float(len(eng_sizes)), 3.0, 1.0, float(len(SIZES) - 1))
+    if cu_sizes and eng_sizes:
+        cc.check("cu band sits below the engine band",
+                 1.0 if max(cu_sizes) < min(eng_sizes) else 0.0,
+                 1.0, 0.5, 1.5)
+    return cc, winners
+
+
+def main(argv=None):
+    import argparse
+
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--check", action="store_true",
+                   help="suppress the tables, only report the claim bands")
+    args = p.parse_args(argv)
+    cc, _ = run(verbose=not args.check)
+    return 0 if cc.report() else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -14,8 +14,9 @@ import time
 def main() -> None:
     from . import (calibration, fig01_ag_gap, fig07_copy_breakdown, fig13_allgather,
                    fig14_alltoall, fig15_power, fig16_ttft, fig17_throughput,
-                   fig_allreduce, fig_faults, fig_serving_load, tables_dispatch,
-                   tables_multinode, tpu_collectives, trace_export)
+                   fig_allreduce, fig_faults, fig_fused_overlap,
+                   fig_serving_load, tables_dispatch, tables_multinode,
+                   tpu_collectives, trace_export)
 
     benches = [
         ("calibration", calibration),
@@ -29,6 +30,7 @@ def main() -> None:
         ("fig17_throughput", fig17_throughput),
         ("fig_serving_load", fig_serving_load),
         ("fig_faults", fig_faults),
+        ("fig_fused_overlap", fig_fused_overlap),
         ("tables_dispatch", tables_dispatch),
         ("tables_multinode", tables_multinode),
         ("tpu_collectives", tpu_collectives),

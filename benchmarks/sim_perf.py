@@ -10,7 +10,8 @@ speedup on the reference chunked 8-device GB-scale all-to-all sweep.
 
 ``--check`` (CI) additionally enforces a wall-clock budget on the new
 simulator's sweep and writes a JSON report next to the dispatch-sweep cache
-(``$REPRO_DISPATCH_CACHE``) so the perf numbers ride the same artifact.
+(``$REPRO_DISPATCH_CACHE``, falling back to the untracked ``artifacts/``
+directory) so the perf numbers ride the same artifact.
 
 ``--sweep`` times the other perf-guarded layer (DESIGN.md §11.3): the
 vectorized dispatch-sweep fast path (representative-only builds) against
@@ -90,6 +91,16 @@ FAULT_MAX_OVERHEAD = 1.05
 #: plain call on the reference scenario.  A regression here means trace
 #: threading leaked work into the unrecorded event loop.
 TRACE_MAX_OVERHEAD = 1.02
+
+#: CU-resource acceptance (DESIGN.md §15): the compute-collective overlap
+#: work adds a ``cu:{dev}`` timeline and a COMPUTE branch to the event
+#: loop, but an *unfused* schedule must not pay for it.  The guard pairs
+#: the reference chunked scenario against the same schedule carrying one
+#: prelaunched 1-FLOP COMPUTE probe (which instantiates the CU timeline
+#: and exercises the branch without perturbing the latency — asserted
+#: bit-identical) and caps the wall-clock ratio.  A regression here means
+#: CU plumbing leaked work into the per-command hot path.
+CU_MAX_OVERHEAD = 1.02
 
 
 # --------------------------------------------------------------------------
@@ -363,10 +374,26 @@ def run(verbose: bool = True) -> dict:
         raise AssertionError(
             "record_trace=False diverged from the plain run: "
             f"{untraced.latency} vs {plain.latency}")
-    fault_overhead, trace_overhead = _paired_overheads(
+    # CU-resource overhead (§15): a prelaunched 1-FLOP COMPUTE probe
+    # instantiates the cu:{dev} timeline and runs the COMPUTE branch once;
+    # the GB-scale transfer latency must be untouched by it.
+    import dataclasses as _dc
+
+    from repro.core.dma.commands import EngineQueue
+    from repro.core.dma import commands as _cmd
+    probe = EngineQueue(sched.queues[0].device, topo.n_engines,
+                        (_cmd.poll(), _cmd.compute(1)), prelaunched=True)
+    cu_sched = _dc.replace(sched, queues=sched.queues + (probe,))
+    cu_probe = simulate(cu_sched, topo, symmetric=False)
+    if plain.latency != cu_probe.latency:
+        raise AssertionError(
+            "the CU compute probe perturbed the unfused latency: "
+            f"{cu_probe.latency} vs {plain.latency}")
+    fault_overhead, trace_overhead, cu_overhead = _paired_overheads(
         lambda: simulate(sched, topo, symmetric=False),
         [lambda: simulate(sched, topo, symmetric=False, faults=FaultPlan()),
-         lambda: simulate(sched, topo, symmetric=False, record_trace=False)])
+         lambda: simulate(sched, topo, symmetric=False, record_trace=False),
+         lambda: simulate(cu_sched, topo, symmetric=False)])
 
     report = {
         "scenarios": scenarios,
@@ -379,6 +406,8 @@ def run(verbose: bool = True) -> dict:
         "fault_max_overhead": FAULT_MAX_OVERHEAD,
         "trace_overhead": trace_overhead,
         "trace_max_overhead": TRACE_MAX_OVERHEAD,
+        "cu_overhead": cu_overhead,
+        "cu_max_overhead": CU_MAX_OVERHEAD,
     }
     if verbose:
         print(f"chunked 8-device GB-scale all-to-all sweep: "
@@ -389,6 +418,9 @@ def run(verbose: bool = True) -> dict:
               f"bit-identical asserted)")
         print(f"record_trace=False overhead on the unrecorded path: "
               f"{trace_overhead:.3f}x (ceiling {TRACE_MAX_OVERHEAD}x, "
+              f"bit-identical asserted)")
+        print(f"CU-resource overhead on the unfused path: "
+              f"{cu_overhead:.3f}x (ceiling {CU_MAX_OVERHEAD}x, "
               f"bit-identical asserted)")
     return report
 
@@ -483,11 +515,13 @@ def run_composed_bench(verbose: bool = True) -> dict:
 
 
 def _json_path(name: str = "sim_perf.json") -> str:
-    cache_dir = os.environ.get("REPRO_DISPATCH_CACHE")
-    if cache_dir:
-        os.makedirs(cache_dir, exist_ok=True)
-        return os.path.join(cache_dir, name)
-    return name
+    """Report destination: the dispatch-sweep cache dir when set, else the
+    untracked ``artifacts/`` directory — never the repo root, where a stale
+    report reads like a committed result (tools/check_docs.py guards that
+    no benchmark artifact ever becomes tracked)."""
+    cache_dir = os.environ.get("REPRO_DISPATCH_CACHE") or "artifacts"
+    os.makedirs(cache_dir, exist_ok=True)
+    return os.path.join(cache_dir, name)
 
 
 def main(argv=None) -> int:
@@ -498,8 +532,9 @@ def main(argv=None) -> int:
                         "report next to the dispatch-sweep cache")
     p.add_argument("--json", default=None,
                    help="explicit JSON report path (default: "
-                        "$REPRO_DISPATCH_CACHE/sim_perf.json, or "
-                        "sim_perf_sweep.json with --sweep)")
+                        "$REPRO_DISPATCH_CACHE/sim_perf.json, falling back "
+                        "to artifacts/sim_perf.json; sim_perf_sweep.json "
+                        "with --sweep)")
     p.add_argument("--composed", action="store_true",
                    help="benchmark the multi-schedule composition path "
                         "(run_composed, DESIGN.md §12) against the sum of "
@@ -573,6 +608,10 @@ def main(argv=None) -> int:
         print(f"FAIL: record_trace=False overhead "
               f"{report['trace_overhead']:.3f}x exceeds "
               f"{TRACE_MAX_OVERHEAD}x ceiling")
+        ok = False
+    if report["cu_overhead"] > CU_MAX_OVERHEAD:
+        print(f"FAIL: CU-resource overhead {report['cu_overhead']:.3f}x "
+              f"exceeds {CU_MAX_OVERHEAD}x ceiling")
         ok = False
     return 0 if ok else 1
 

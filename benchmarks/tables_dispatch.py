@@ -52,8 +52,15 @@ def run(verbose: bool = True, tpu_devices: int = 16):
             for e in t:
                 print(f"  {name}: [{fmt_size(e.lo)}, {fmt_size(e.hi) if e.hi else 'inf'}) "
                       f"-> {e.variant}")
-    cc.check("TPU tables keep b2b for the smallest sizes",
-             float(ag[0].variant.endswith("b2b") and aa[0].variant.endswith("b2b")), 1, 1, 1)
+    # The v7 tables sweep the full single-node variant space, so the
+    # latency-bound winners are optimized command streams (opt_ batching/
+    # fused signals dominate where per-command overhead does) rather than
+    # the baseline b2b of the baseline-only v6 sweep.
+    cc.check("TPU tables open with an optimized stream at the smallest sizes",
+             float(ag[0].variant.startswith("opt_")
+                   and aa[0].variant.startswith("opt_")), 1, 1, 1)
+    cc.check("TPU AG tables carry a pipelined winner at the top (DESIGN.md §9)",
+             float("pipe_" in ag[-1].variant), 1, 1, 1)
     cc.check("TPU reduce tables carry a pipelined winner (DESIGN.md §10)",
              float(any("pipe_" in e.variant for e in rs)
                    and any("pipe_" in e.variant for e in ar)), 1, 1, 1)

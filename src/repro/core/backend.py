@@ -46,7 +46,14 @@ MB = 1024 * 1024
 # fingerprint; v5 tables never saw the hier candidates or the NIC tier, so
 # they must miss and re-derive (regression-tested in
 # tests/test_dispatch_cache.py).
-_TABLE_CACHE_VERSION = 6
+# v7: fused compute-collective overlap (DESIGN.md §15) — the CU calibration
+# (Calibration.cu_tile_setup / cu_flops, embedded via topo!r) joins the
+# fingerprint, and the single-node latte sweeps re-derive with the
+# optimized/prelaunch command streams offered (allow_optimized), retiring
+# the unconditional StaleTablesWarning; v6 baseline-only tables never saw
+# the opt_ candidates, so they must miss and re-derive (regression-tested
+# in tests/test_dispatch_cache.py).
+_TABLE_CACHE_VERSION = 7
 # The size sweep behind every cached/bundled table; part of the cache key.
 _SWEEP_SIZES = [2 ** i for i in range(10, 31)]
 # Chunk granularities the table sweep offers the argmin (DESIGN.md §8.1):
@@ -168,13 +175,35 @@ _AR_IMPL = {
 }
 
 
+def _derive_single_node(topo: Topology):
+    """Derive the (ag, aa, rs, ar) latte tables for one single-node topology.
+
+    Since v7 the sweep offers the full ``opt_``/``prelaunch_`` composition
+    alongside the pipelined rings, so ``CommBackend('latte')`` dispatches on
+    current winners instead of the baseline-only published thresholds (the
+    paper's as-published Tables 2/3 remain reproducible through the default
+    ``derive_dispatch`` flags — this is the *deployment* table).
+    """
+    sizes = _SWEEP_SIZES
+    kw = dict(allow_pipelined=True, allow_optimized=True,
+              chunk_sizes=_SWEEP_CHUNKS)
+    ag = tuple(derive_dispatch(topo, "all_gather", sizes, **kw))
+    aa = tuple(derive_dispatch(topo, "all_to_all", sizes, **kw))
+    rs = tuple(derive_dispatch(topo, "reduce_scatter", sizes,
+                               allow_reduce=True, **kw))
+    ar = tuple(derive_dispatch(topo, "all_reduce", sizes,
+                               allow_reduce=True, **kw))
+    return ag, aa, rs, ar
+
+
 @functools.lru_cache(maxsize=8)
 def tpu_dispatch_tables(n_devices: int = 16):
     """Re-derive Tables 2/3 for the TPU torus from the timing model
     (DESIGN.md §4), plus the reduce_scatter/all_reduce tables (§10): the
     event simulator routes every variant over real ICI neighbor links, so
     the argmin picks between direct multi-hop one-shot schedules and the
-    ring/bidir-ring renderings with true per-step dependencies.  Returns
+    ring/bidir-ring renderings with true per-step dependencies — since v7
+    with the ``opt_``/``prelaunch_`` command streams offered too.  Returns
     ``(ag, aa, rs, ar)`` entry tuples.  The sweep is memoized in-process
     (dispatch.derive_dispatch) and on disk (seconds per fresh process
     otherwise)."""
@@ -183,18 +212,9 @@ def tpu_dispatch_tables(n_devices: int = 16):
     cached = _load_table_cache(topo, sizes)
     if cached is not None:
         return cached
-    ag = tuple(derive_dispatch(topo, "all_gather", sizes, allow_pipelined=True,
-                               chunk_sizes=_SWEEP_CHUNKS))
-    aa = tuple(derive_dispatch(topo, "all_to_all", sizes, allow_pipelined=True,
-                               chunk_sizes=_SWEEP_CHUNKS))
-    rs = tuple(derive_dispatch(topo, "reduce_scatter", sizes,
-                               allow_pipelined=True, allow_reduce=True,
-                               chunk_sizes=_SWEEP_CHUNKS))
-    ar = tuple(derive_dispatch(topo, "all_reduce", sizes,
-                               allow_pipelined=True, allow_reduce=True,
-                               chunk_sizes=_SWEEP_CHUNKS))
-    _store_table_cache(topo, sizes, (ag, aa, rs, ar))
-    return ag, aa, rs, ar
+    tables = _derive_single_node(topo)
+    _store_table_cache(topo, sizes, tables)
+    return tables
 
 
 #: Multi-node topology builders the bundled v6 tables cover (DESIGN.md §11):
@@ -252,15 +272,29 @@ def _pick(entries, size: int) -> str:
 
 
 class StaleTablesWarning(UserWarning):
-    """The latte backend dispatched on the baseline single-node tables.
+    """The bundled dispatch tables predate this simulator/calibration.
 
-    ``tpu_dispatch_tables`` sweeps the paper's baseline command streams
-    (plus ``pipe_``/reduce candidates) but not the ``opt_``/``prelaunch_``
-    optimized streams — the published Tables 2/3 thresholds, kept
-    reproducible as published.  Until re-derived optimized tables land
-    (ROADMAP), thresholds may be stale for optimized deployments; pass
+    The bundled ``_dispatch_tables.json`` is keyed by a fingerprint of the
+    table-cache version, the topology's full calibration, and the sweep
+    grid.  When the key for the current simulator is absent — a calibration
+    changed, the cache version was bumped, or the bundled copy was never
+    regenerated — the latte backend still dispatches on *correct* tables
+    (it re-derives on the fly, paying the argmin sweep once per process),
+    but the shipped thresholds are genuinely stale and the package should
+    be regenerated with ``python -m repro.core.backend``.  Pass
     ``CommBackend(allow_stale_tables=True)`` to acknowledge and silence.
     """
+
+
+@functools.lru_cache(maxsize=32)
+def _bundled_current(topo: Topology, sizes: tuple[int, ...]) -> bool:
+    """True when the bundled package tables carry this fingerprint —
+    i.e. they were regenerated against the current simulator/calibration."""
+    try:
+        with open(_BUNDLED_TABLES) as f:
+            return _table_key(topo, list(sizes)) in json.load(f)
+    except (OSError, ValueError):
+        return False
 
 
 @dataclasses.dataclass(frozen=True)
@@ -268,10 +302,9 @@ class CommBackend:
     kind: str = "latte"            # latte | reference
     axis_devices: int = 16
     b2b_fanout_threshold: int = 4 * MB   # paper §5.3.1 empirical threshold
-    # The single-node latte tables are the published baseline thresholds
-    # (no opt_/prelaunch_ candidates in the sweep); until re-derived
-    # optimized tables land, dispatching on them warns (StaleTablesWarning)
-    # unless explicitly acknowledged here.
+    # Dispatching against a bundled-tables fingerprint mismatch (simulator
+    # or calibration drifted since `python -m repro.core.backend` last ran)
+    # warns (StaleTablesWarning) unless explicitly acknowledged here.
     allow_stale_tables: bool = False
 
     def _strip(self, v: str) -> str:
@@ -283,11 +316,15 @@ class CommBackend:
         return v
 
     def _tables(self, collective: str):
-        if not self.allow_stale_tables:
+        topo = tpu_v5e_pod(self.axis_devices)
+        if not self.allow_stale_tables and \
+                not _bundled_current(topo, tuple(_SWEEP_SIZES)):
             warnings.warn(
-                f"CommBackend('latte').{collective}: dispatching on the "
-                "baseline single-node tables (no opt_/prelaunch_ candidates "
-                "in the sweep); pass allow_stale_tables=True to acknowledge",
+                f"CommBackend('latte').{collective}: the bundled dispatch "
+                "tables do not match this simulator/calibration fingerprint "
+                f"(v{_TABLE_CACHE_VERSION}) — re-deriving on the fly; "
+                "regenerate with `python -m repro.core.backend` or pass "
+                "allow_stale_tables=True to acknowledge",
                 StaleTablesWarning, stacklevel=3)
         return tpu_dispatch_tables(self.axis_devices)
 
@@ -362,20 +399,9 @@ def regenerate_bundled_tables(device_counts=(16,),
         out[_table_key(topo, _SWEEP_SIZES)] = _serialize_tables(tables)
     for n in device_counts:
         topo = tpu_v5e_pod(n)
-        sizes = _SWEEP_SIZES
-        ag = tuple(derive_dispatch(topo, "all_gather", sizes, allow_pipelined=True,
-                                   chunk_sizes=_SWEEP_CHUNKS))
-        aa = tuple(derive_dispatch(topo, "all_to_all", sizes, allow_pipelined=True,
-                                   chunk_sizes=_SWEEP_CHUNKS))
-        rs = tuple(derive_dispatch(topo, "reduce_scatter", sizes,
-                                   allow_pipelined=True, allow_reduce=True,
-                                   chunk_sizes=_SWEEP_CHUNKS))
-        ar = tuple(derive_dispatch(topo, "all_reduce", sizes,
-                                   allow_pipelined=True, allow_reduce=True,
-                                   chunk_sizes=_SWEEP_CHUNKS))
-        tables = (ag, aa, rs, ar)
-        _store_table_cache(topo, sizes, tables)
-        out[_table_key(topo, sizes)] = _serialize_tables(tables)
+        tables = _derive_single_node(topo)
+        _store_table_cache(topo, _SWEEP_SIZES, tables)
+        out[_table_key(topo, _SWEEP_SIZES)] = _serialize_tables(tables)
     with open(_BUNDLED_TABLES, "w") as f:
         json.dump(out, f, indent=1)
     return _BUNDLED_TABLES

@@ -112,6 +112,23 @@ RS_VARIANTS = ("ring_rs", "bidir_ring_rs", "pipe_ring_rs", "pipe_bidir_ring_rs")
 HIER_AG_VARIANTS = ("hier_ring", "hier_pipe")
 HIER_RS_VARIANTS = ("hier_ring_rs", "hier_pipe_rs")
 
+#: Fused compute-collective variants (DESIGN.md §15).  ``seq`` is the
+#: sequential baseline (same GEMM tiles and collective pipeline, but the
+#: collective is gated on the *final* tile / the GEMM on the *final*
+#: arrival); ``fused_*_d{2,4,8}`` overlap at that pipeline depth, and the
+#: GEMM+reduce-scatter axis additionally picks the per-chunk reduction
+#: placement (``cu`` vs ``engine``).
+FUSED_RS_VARIANTS = ("seq", "fused_cu_d2", "fused_cu_d4", "fused_cu_d8",
+                     "fused_engine_d2", "fused_engine_d4", "fused_engine_d8")
+FUSED_AG_VARIANTS = ("seq", "fused_d2", "fused_d4", "fused_d8")
+
+#: Default GEMM arithmetic intensity (FLOPs per byte of collective payload)
+#: of the fused builders (DESIGN.md §15).  2 * K for a bf16 GEMM whose
+#: reduction dimension K = 16384 — a large-model layer where the tile
+#: stream is compute-bound on the modeled platforms, so the engine-side
+#: reduce placement has CU slack to win at bandwidth-bound sizes.
+GEMM_FLOPS_PER_BYTE = 32768
+
 #: Default pipeline depth of the ``pipe_`` variants (DESIGN.md §9): the
 #: minimum number of chunk commands a shard is split into.  Deeper splits
 #: keep shrinking the per-step fill latency but pay per-chunk packet/issue
@@ -1214,3 +1231,217 @@ def kv_fetch_schedule(
     sched = Schedule(name=name, queues=_maybe_prelaunch(queues, prelaunch))
     sched = _maybe_chunk(sched, topo, max_chunk_bytes)
     return _maybe_optimize(sched, optimized, None)
+
+
+# ---------------------------------------------------------------------------
+# Fused compute-collective overlap (DESIGN.md §15)
+# ---------------------------------------------------------------------------
+
+def _parse_fused_rs(base: str) -> tuple[bool, bool, int]:
+    """``FUSED_RS_VARIANTS`` base -> (fused, on_cu, pipe_depth)."""
+    if base == "seq":
+        return False, False, PIPE_DEPTH
+    _, placement, depth = base.split("_")
+    return True, placement == "cu", int(depth[1:])
+
+
+def _parse_fused_ag(base: str) -> tuple[bool, int]:
+    """``FUSED_AG_VARIANTS`` base -> (fused, pipe_depth)."""
+    if base == "seq":
+        return False, PIPE_DEPTH
+    _, depth = base.split("_")
+    return True, int(depth[1:])
+
+
+def _fused_gemm_rs_queues(topo: Topology, shard: int, granularity: int, *,
+                          fused: bool, on_cu: bool, flops_per_byte: int,
+                          device: int | None = None) -> list[EngineQueue]:
+    """GEMM + pipelined ring reduce-scatter with tile-grain gating (§15).
+
+    A per-device CU proxy queue (engine index ``topo.n_engines``, past the
+    SDMA engines — its only engine-timeline use is the initial descriptor
+    fetch) streams one ``compute`` tile per collective chunk, in the order
+    the reduce-scatter consumes the local partials: step-0's send shard
+    first, then each reduce step's accumulation shard, the result shard
+    last.  Tile ``j*c + i`` raises ``("ftl", d, j*c + i)`` on completion.
+
+    The collective itself is ``_pipe_ring_rs_queues`` re-rendered with tile
+    gating: in the fused arms, step-0 chunk ``i`` waits on tile ``i`` and
+    every chunk reduction at step ``j`` waits on tile ``j*c + i`` before
+    consuming its arrival, so sends start the moment their partial exists;
+    the ``seq`` arm keeps the identical wait stream but coarsens every
+    gate to the *final* tile, serializing the whole GEMM before the
+    collective (the status-quo kernel boundary) at the same host control
+    cost.  ``on_cu`` selects the §15 reduction placement.
+    """
+    n = topo.n_devices
+    sizes = chunk_sizes(shard, granularity)
+    c = len(sizes)
+    total = n * c
+    e_cu = topo.n_engines
+    queues = []
+    for d, (pred, succ) in _ring_neighbors(topo, device).items():
+        tiles = tuple(
+            cmd.compute(max(1, flops_per_byte * sz),
+                        raise_tag=("ftl", d, j * c + i))
+            for j in range(n) for i, sz in enumerate(sizes))
+        queues.append(EngineQueue(d, e_cu, tiles))
+        for k in range(n - 1):
+            copies = chunked_copies(CmdKind.COPY, d, (succ,), shard,
+                                    granularity, ("frs", d, k),
+                                    per_chunk=True)
+            def tile(j: int, *, d=d) -> cmd.Command:
+                # seq is the control arm: the SAME wait stream, every
+                # gate coarsened to the final tile — identical host
+                # control cost, only the gating grain differs (the
+                # per_chunk=False idiom of the §9/§10 claims).
+                return cmd.wait(("ftl", d, j if fused else total - 1))
+
+            cs: list[cmd.Command] = []
+            if k == 0:
+                for i, cc in enumerate(copies):
+                    cs.append(tile(i))
+                    cs.append(cc)
+            else:
+                reduces = chunked_reduces(("frs", pred, k - 1), shard,
+                                          granularity, on_cu=on_cu)
+                for i, (r, cc) in enumerate(zip(reduces, copies)):
+                    cs.append(tile(k * c + i))
+                    cs.append(r)
+                    cs.append(cc)
+            queues.append(EngineQueue(d, k % topo.n_engines, tuple(cs)))
+        term: list[cmd.Command] = []
+        for i, r in enumerate(chunked_reduces(("frs", pred, n - 2), shard,
+                                              granularity, on_cu=on_cu)):
+            term.append(cmd.wait(("ftl", d,
+                                  (n - 1) * c + i if fused else total - 1)))
+            term.append(r)
+        term.append(cmd.signal())
+        queues.append(EngineQueue(d, (n - 1) % topo.n_engines, tuple(term)))
+    return queues
+
+
+def _fused_ag_gemm_queues(topo: Topology, shard: int, granularity: int, *,
+                          fused: bool, flops_per_byte: int,
+                          device: int | None = None) -> list[EngineQueue]:
+    """Pipelined ring all-gather + GEMM with shard-grain launch (§15).
+
+    The ring is ``_pipe_ring_ag_queues`` with one difference: EVERY step
+    carries per-chunk tags (``("fga", d, k)``) — the last step's payload
+    is consumed too, by the GEMM.  The CU proxy queue streams one tile per
+    gathered chunk: the local shard's tiles launch unconditionally, and
+    the tile for chunk ``i`` of arrival step ``k`` blocks (via the compute
+    command's own wait tag) on ``chunk_tag(("fga", pred, k), i)`` — the
+    ``seq`` arm coarsens every tile's gate to the final arrival chunk,
+    so the whole GEMM trails the finished all-gather.  GEMM completion is
+    the collective's completion (the CU queue's last tile end dominates
+    ``copy_end``); the ring's own host signal mirrors the plain builder.
+    """
+    n = topo.n_devices
+    sizes = chunk_sizes(shard, granularity)
+    c = len(sizes)
+    queues = []
+    for d, (pred, succ) in _ring_neighbors(topo, device).items():
+        for k in range(n - 1):
+            copies = chunked_copies(CmdKind.COPY, d, (succ,), shard,
+                                    granularity, ("fga", d, k),
+                                    per_chunk=True)
+            cs: list[cmd.Command] = []
+            for i, cc in enumerate(copies):
+                if k > 0:
+                    cs.append(cmd.wait(chunk_tag(("fga", pred, k - 1), i)))
+                cs.append(cc)
+            if k == n - 2:
+                cs.append(cmd.signal())
+            queues.append(EngineQueue(d, k % topo.n_engines, tuple(cs)))
+        tiles: list[cmd.Command] = []
+        # seq is the control arm: same tile stream, every arrival gate
+        # coarsened to the final arrival chunk (the local-shard tiles
+        # included) — only the gating grain differs from the fused arms.
+        final = chunk_tag(("fga", pred, n - 2), c - 1)
+        for i, sz in enumerate(sizes):
+            gate = None if fused else final
+            tiles.append(cmd.compute(max(1, flops_per_byte * sz), tag=gate))
+        for k in range(n - 1):
+            for i, sz in enumerate(sizes):
+                gate = chunk_tag(("fga", pred, k), i) if fused else final
+                tiles.append(cmd.compute(max(1, flops_per_byte * sz),
+                                         tag=gate))
+        queues.append(EngineQueue(d, topo.n_engines, tuple(tiles)))
+    return queues
+
+
+def fused_gemm_rs_schedule(topo: Topology, size: int,
+                           variant: str = "fused_engine_d4", *,
+                           opt_config: OptimizationConfig | None = None,
+                           max_chunk_bytes: int | None = None,
+                           flops_per_byte: int = GEMM_FLOPS_PER_BYTE,
+                           device: int | None = None) -> Schedule:
+    """Fused GEMM + reduce-scatter (DESIGN.md §15): each device computes a
+    ``size``-byte local partial (``flops_per_byte * size`` FLOPs, tiled at
+    the collective's chunk grain) and reduce-scatters it over the ring —
+    tile ``i``'s partial feeds the chunk pipeline the moment it completes.
+
+    Variants are ``FUSED_RS_VARIANTS``: ``seq`` (GEMM-then-collective
+    kernel boundary) and ``fused_{cu,engine}_d{2,4,8}`` — overlap at that
+    pipeline depth with the per-chunk reductions placed on the CU or the
+    engine timeline.  The ``opt_`` / ``prelaunch_`` prefixes compose as
+    for the plain collectives; ``device`` builds one device's queues
+    (representative-only, §11.3).
+    """
+    requested = variant
+    variant, optimized = parse_optimized(variant)
+    base, prelaunch = parse_variant(variant)
+    if base not in FUSED_RS_VARIANTS:
+        raise ValueError(
+            f"unknown fused GEMM+reduce-scatter variant {requested!r}")
+    fused, on_cu, depth = _parse_fused_rs(base)
+    n = topo.n_devices
+    shard = max(1, size // n)
+    mcb = topo.calib.max_chunk_bytes if max_chunk_bytes is None else max_chunk_bytes
+    g = _pipe_granularity(shard, depth, mcb)
+    queues = _fused_gemm_rs_queues(topo, shard, g, fused=fused, on_cu=on_cu,
+                                   flops_per_byte=flops_per_byte,
+                                   device=device)
+    name = f"gemmrs_opt_{variant}" if optimized else f"gemmrs_{variant}"
+    sched = Schedule(name=name, queues=_maybe_prelaunch(queues, prelaunch),
+                     symmetric=_ring_closes_on_neighbors(topo))
+    sched = _maybe_chunk(sched, topo, max_chunk_bytes)
+    return _maybe_optimize(sched, optimized, opt_config)
+
+
+def fused_ag_gemm_schedule(topo: Topology, size: int,
+                           variant: str = "fused_d4", *,
+                           opt_config: OptimizationConfig | None = None,
+                           max_chunk_bytes: int | None = None,
+                           flops_per_byte: int = GEMM_FLOPS_PER_BYTE,
+                           device: int | None = None) -> Schedule:
+    """Fused all-gather + GEMM (DESIGN.md §15): the ring gathers a
+    ``size``-byte operand and each device's GEMM consumes it at
+    ``flops_per_byte`` FLOPs per gathered byte — the tile over shard ``k``
+    launches the moment that input shard lands, instead of after the
+    whole gather (``seq``).
+
+    Variants are ``FUSED_AG_VARIANTS`` (``seq``, ``fused_d{2,4,8}``); the
+    ``opt_`` / ``prelaunch_`` prefixes and ``device`` compose as in
+    :func:`fused_gemm_rs_schedule`.
+    """
+    requested = variant
+    variant, optimized = parse_optimized(variant)
+    base, prelaunch = parse_variant(variant)
+    if base not in FUSED_AG_VARIANTS:
+        raise ValueError(
+            f"unknown fused all-gather+GEMM variant {requested!r}")
+    fused, depth = _parse_fused_ag(base)
+    n = topo.n_devices
+    shard = max(1, size // n)
+    mcb = topo.calib.max_chunk_bytes if max_chunk_bytes is None else max_chunk_bytes
+    g = _pipe_granularity(shard, depth, mcb)
+    queues = _fused_ag_gemm_queues(topo, shard, g, fused=fused,
+                                   flops_per_byte=flops_per_byte,
+                                   device=device)
+    name = f"aggemm_opt_{variant}" if optimized else f"aggemm_{variant}"
+    sched = Schedule(name=name, queues=_maybe_prelaunch(queues, prelaunch),
+                     symmetric=_ring_closes_on_neighbors(topo))
+    sched = _maybe_chunk(sched, topo, max_chunk_bytes)
+    return _maybe_optimize(sched, optimized, opt_config)

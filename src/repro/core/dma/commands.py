@@ -54,6 +54,17 @@ phase off the final reduce chunk by chunk.  :func:`chunk_command` /
 copies, and :func:`reduce_work` exposes the schedule-level conservation
 invariant (every device of an n-device reduce-scatter performs exactly
 ``(n-1) * shard_chunks`` chunk reductions).
+
+Compute tiles (DESIGN.md §15): a ``compute`` command occupies the device's
+*CU timeline* (``cu:{dev}``) for one GEMM tile —
+``Calibration.cu_tile_setup + size / cu_flops`` with ``size`` carrying the
+tile's FLOP count.  An optional ``tag`` blocks the tile like a ``wait``
+(the all-gather+GEMM fusion: tile *k* launches when shard *k* lands); an
+optional ``fused_tag`` raises a semaphore at tile completion (the
+GEMM+reduce-scatter fusion: tile *i*'s partial releases the RS chunk
+pipeline).  A ``reduce_tag`` may set ``on_cu=True`` to charge its §10
+reduction on the CU timeline instead of the consumer's engine — the
+reduce-placement axis of arXiv:2512.10236.
 """
 from __future__ import annotations
 
@@ -76,6 +87,7 @@ class CmdKind(enum.Enum):
     SIGNAL = "signal"      # atomic inc/dec of a 64b completion signal
     WAIT = "wait"          # block engine until a tagged signal was raised
     REDUCE = "reduce_tag"  # wait on a tagged chunk, then reduce it locally (§10)
+    COMPUTE = "compute"    # occupy the CU timeline for one GEMM tile (§15)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -109,6 +121,7 @@ class Command:
     tag: Tag | None = None
     fused_tag: Tag | None = None
     fused_signal: bool = False
+    on_cu: bool = False     # REDUCE only: run the reduction on the CU (§15)
 
     def __post_init__(self) -> None:
         if self.kind is CmdKind.COPY and len(self.dsts) != 1:
@@ -122,15 +135,20 @@ class Command:
         if self.size < 0:
             raise ValueError(f"negative size {self.size}")
         if self.size == 0 and (self.kind in DATA_KINDS
-                               or self.kind is CmdKind.REDUCE):
+                               or self.kind is CmdKind.REDUCE
+                               or self.kind is CmdKind.COMPUTE):
             raise ValueError(
                 f"{self.kind.value} needs a positive size — a zero-byte "
                 "transfer would time as a silent no-op")
         if self.fused_signal and self.kind not in DATA_KINDS:
             raise ValueError("only data commands can carry a fused signal")
-        if self.fused_tag is not None \
-                and self.kind not in DATA_KINDS and self.kind is not CmdKind.REDUCE:
-            raise ValueError("only data/reduce commands can carry a fused tag")
+        if self.fused_tag is not None and self.kind not in DATA_KINDS \
+                and self.kind not in (CmdKind.REDUCE, CmdKind.COMPUTE):
+            raise ValueError(
+                "only data/reduce/compute commands can carry a fused tag")
+        if self.on_cu and self.kind is not CmdKind.REDUCE:
+            raise ValueError("on_cu selects the REDUCE placement only — "
+                             "compute commands always run on the CU")
 
     # ---- traffic accounting (used by the engine model & power model) ----
     @property
@@ -197,13 +215,27 @@ def wait(tag: Tag) -> Command:
     return Command(CmdKind.WAIT, tag=tag)
 
 
-def reduce_tag(tag: Tag, size: int, raise_tag: Tag | None = None) -> Command:
+def reduce_tag(tag: Tag, size: int, raise_tag: Tag | None = None, *,
+               on_cu: bool = False) -> Command:
     """Per-chunk reduction (DESIGN.md §10): block on ``tag`` like a
     ``wait``, then reduce the ``size`` arrived bytes into the local
     accumulator on the consumer's engine timeline.  ``raise_tag`` raises a
     semaphore at reduction completion (how the all-reduce builder releases
-    its all-gather phase chunk by chunk)."""
-    return Command(CmdKind.REDUCE, size=size, tag=tag, fused_tag=raise_tag)
+    its all-gather phase chunk by chunk).  ``on_cu=True`` moves the
+    reduction onto the device's CU timeline (§15's placement axis): same
+    accumulate cost, but it contends with GEMM tiles instead of with the
+    engine's forwarding copies."""
+    return Command(CmdKind.REDUCE, size=size, tag=tag, fused_tag=raise_tag,
+                   on_cu=on_cu)
+
+
+def compute(flops: int, tag: Tag | None = None,
+            raise_tag: Tag | None = None) -> Command:
+    """One GEMM tile on the device's CU timeline (DESIGN.md §15):
+    ``Calibration.cu_tile_setup + flops / cu_flops`` of CU occupancy.
+    ``tag`` (optional) blocks the tile like a ``wait`` until the named
+    chunk lands; ``raise_tag`` raises a semaphore at tile completion."""
+    return Command(CmdKind.COMPUTE, size=flops, tag=tag, fused_tag=raise_tag)
 
 
 DATA_KINDS = (CmdKind.COPY, CmdKind.BCST, CmdKind.SWAP)
@@ -229,6 +261,8 @@ def chunk_command(c: Command, max_bytes: int) -> tuple[Command, ...]:
     chunk was reduced).  A split ``reduce_tag`` keeps its wait tag on every
     chunk: transfer-granularity producers raise one tag for the whole
     transfer, so each chunk reduction blocks on the same semaphore.
+    ``compute`` commands are never split — a GEMM tile is the unit the
+    fused builders already sized to the chunk grain (DESIGN.md §15).
 
     Other commands and commands already within ``max_bytes`` are returned
     unchanged; ``max_bytes <= 0`` disables chunking.
@@ -331,7 +365,8 @@ def chunked_copies(kind: CmdKind, src, dsts, size: int, granularity: int,
 
 def chunked_reduces(src_tag: Tag, size: int, granularity: int, *,
                     per_chunk: bool = True,
-                    raise_tag: Tag | None = None) -> tuple[Command, ...]:
+                    raise_tag: Tag | None = None,
+                    on_cu: bool = False) -> tuple[Command, ...]:
     """Per-chunk reductions consuming one chunk-tagged transfer (DESIGN.md
     §10).
 
@@ -343,7 +378,8 @@ def chunked_reduces(src_tag: Tag, size: int, granularity: int, *,
     §10 claims).  Either arm performs the same reduction work — one
     reduce command per chunk — so reduction-work conservation is
     signaling-grain-invariant.  ``raise_tag`` tags each chunk's reduction
-    completion with ``chunk_tag(raise_tag, i)`` (all-reduce chaining).
+    completion with ``chunk_tag(raise_tag, i)`` (all-reduce chaining);
+    ``on_cu`` selects the §15 CU placement for every chunk reduction.
     """
     sizes = chunk_sizes(size, granularity)
     last = len(sizes) - 1
@@ -351,7 +387,7 @@ def chunked_reduces(src_tag: Tag, size: int, granularity: int, *,
     for i, sz in enumerate(sizes):
         w = i if per_chunk else last
         rt = chunk_tag(raise_tag, i) if raise_tag is not None else None
-        out.append(reduce_tag(chunk_tag(src_tag, w), sz, rt))
+        out.append(reduce_tag(chunk_tag(src_tag, w), sz, rt, on_cu=on_cu))
     return tuple(out)
 
 

@@ -33,6 +33,14 @@ The explicit opt-in keeps pre-§10 sweeps byte-identical and makes an
 accidental ``reduce_scatter`` request against an old call site fail loudly
 instead of silently sweeping an empty candidate set.
 
+Fused compute-collective overlap (DESIGN.md §15): ``allow_fused=True``
+unlocks the ``fused_gemm_rs`` / ``fused_ag_gemm`` pseudo-collectives — the
+argmin sweeps overlap depth (``d2/d4/d8``) x reduction placement
+(``cu``/``engine``, GEMM+reduce-scatter only) against the sequential
+GEMM-then-collective baseline (``seq``).  Like ``allow_reduce`` the opt-in
+keeps earlier sweeps byte-identical; the fused builders have no
+hierarchical multi-node rendering and raise on ``n_nodes > 1``.
+
 Hierarchical multi-node collectives (DESIGN.md §11): on a multi-node
 topology (``topo.n_nodes > 1``) the candidate set is the ``hier_`` family —
 intra-node ring tier composed with an inter-node NIC tier, the only modeled
@@ -57,8 +65,10 @@ from typing import Callable
 
 import numpy as np
 
-from .collectives import (allgather_schedule, allreduce_schedule,
-                          alltoall_schedule, reduce_scatter_schedule)
+from .collectives import (FUSED_AG_VARIANTS, FUSED_RS_VARIANTS,
+                          allgather_schedule, allreduce_schedule,
+                          alltoall_schedule, fused_ag_gemm_schedule,
+                          fused_gemm_rs_schedule, reduce_scatter_schedule)
 from .engine import simulate
 from .faults import straggler_plan
 from .sweep import argmin_grid, sweep_variant_latencies
@@ -70,7 +80,12 @@ COLLECTIVE_BUILDERS = {
     "all_to_all": alltoall_schedule,
     "reduce_scatter": reduce_scatter_schedule,
     "all_reduce": allreduce_schedule,
+    "fused_gemm_rs": fused_gemm_rs_schedule,
+    "fused_ag_gemm": fused_ag_gemm_schedule,
 }
+
+#: The fused pseudo-collectives (DESIGN.md §15) — gated by ``allow_fused``.
+FUSED_COLLECTIVES = ("fused_gemm_rs", "fused_ag_gemm")
 
 KB = 1024
 MB = 1024 * 1024
@@ -140,6 +155,7 @@ def candidate_variants(
     allow_optimized: bool = False,
     allow_pipelined: bool = False,
     allow_reduce: bool = False,
+    allow_fused: bool = False,
 ) -> list[str]:
     """Variants an argmin sweep should consider on this topology.
 
@@ -170,7 +186,31 @@ def candidate_variants(
     slice counts the tables target).  ``all_to_all`` has no hierarchical
     rendering (every pair exchanges distinct data, so there is no
     intra/inter decomposition that reduces NIC bytes) and raises.
+
+    ``allow_fused`` unlocks the fused compute-collective pseudo-collectives
+    (``fused_gemm_rs`` / ``fused_ag_gemm``, DESIGN.md §15): the candidate
+    set is the overlap-depth x reduction-placement grid plus the ``seq``
+    control arm.  They are ring renderings, so — like the reduce family —
+    they are offered on every single-node topology, but have no
+    hierarchical multi-node shape and raise on ``n_nodes > 1``.
     """
+    if collective in FUSED_COLLECTIVES:
+        if not allow_fused:
+            raise ValueError(
+                f"collective {collective!r} needs allow_fused=True "
+                "(DESIGN.md §15)")
+        if topo.n_nodes > 1:
+            raise ValueError(
+                "the fused compute-collective builders have no "
+                "hierarchical multi-node rendering (DESIGN.md §15); "
+                "derive fused tables on single-node topologies only")
+        variants = list(FUSED_RS_VARIANTS if collective == "fused_gemm_rs"
+                        else FUSED_AG_VARIANTS)
+        if allow_prelaunch:
+            variants += [f"prelaunch_{v}" for v in list(variants)]
+        if allow_optimized:
+            variants += [f"opt_{v}" for v in list(variants)]
+        return variants
     if topo.n_nodes > 1:
         if collective == "all_to_all":
             raise ValueError(
@@ -244,6 +284,15 @@ def reduce_variants(topo: Topology, collective: str = "reduce_scatter") -> list[
                               allow_pipelined=True, allow_reduce=True)
 
 
+def fused_variants(topo: Topology, collective: str = "fused_gemm_rs") -> list[str]:
+    """The bare fused candidate set (DESIGN.md §15): overlap depth x
+    reduction placement plus the ``seq`` control arm, without the
+    ``prelaunch_``/``opt_`` compositions — what the §15 claim bands and
+    ``benchmarks/fig_fused_overlap.py`` sweep."""
+    return candidate_variants(topo, collective, allow_prelaunch=False,
+                              allow_fused=True)
+
+
 def sweep_candidate_latencies(topo: Topology, collective: str,
                               sizes: tuple[int, ...], variant: str,
                               chunk_bytes: int | None) -> list[float]:
@@ -274,11 +323,13 @@ def _derive_dispatch_cached(
     chunk_sizes: tuple[int | None, ...],
     allow_pipelined: bool = False,
     allow_reduce: bool = False,
+    allow_fused: bool = False,
 ) -> tuple[DispatchEntry, ...]:
     variants = candidate_variants(topo, collective, allow_prelaunch=allow_prelaunch,
                                   allow_optimized=allow_optimized,
                                   allow_pipelined=allow_pipelined,
-                                  allow_reduce=allow_reduce)
+                                  allow_reduce=allow_reduce,
+                                  allow_fused=allow_fused)
 
     # Candidate axis in the historical sweep order (variant-major, the
     # calibrated default chunk first) so the vectorized argmin's earlier-
@@ -315,6 +366,7 @@ def derive_dispatch(
     allow_optimized: bool = False,
     allow_pipelined: bool = False,
     allow_reduce: bool = False,
+    allow_fused: bool = False,
     chunk_sizes=None,
 ) -> list[DispatchEntry]:
     """Re-derive the best variant per size from the timing model (argmin).
@@ -330,14 +382,17 @@ def derive_dispatch(
     entry records its winning ``chunk`` (``None`` = the topology's
     calibrated default; for ``pipe_`` variants the chunk granularity also
     bounds the pipeline depth).  ``allow_reduce`` unlocks the
-    ``reduce_scatter``/``all_reduce`` collectives (DESIGN.md §10).  Sweeps
-    are memoized per (topology, collective, sizes, allow_prelaunch,
-    allow_optimized, allow_pipelined, allow_reduce, chunk_sizes).
+    ``reduce_scatter``/``all_reduce`` collectives (DESIGN.md §10) and
+    ``allow_fused`` the fused compute-collective pseudo-collectives
+    (DESIGN.md §15).  Sweeps are memoized per (topology, collective,
+    sizes, allow_prelaunch, allow_optimized, allow_pipelined,
+    allow_reduce, allow_fused, chunk_sizes).
     """
     chunks = (None,) if chunk_sizes is None else tuple(chunk_sizes)
     return list(_derive_dispatch_cached(topo, collective, tuple(sizes),
                                         allow_prelaunch, allow_optimized,
-                                        chunks, allow_pipelined, allow_reduce))
+                                        chunks, allow_pipelined, allow_reduce,
+                                        allow_fused))
 
 
 def best_variant_for(topo: Topology, collective: str, size: int,

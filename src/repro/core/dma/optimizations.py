@@ -150,11 +150,13 @@ def _splittable(q: EngineQueue, min_commands: int, max_bytes: int) -> bool:
         return False
     seen_signal = False
     for c in q.commands:
-        if c.kind in (CmdKind.WAIT, CmdKind.POLL, CmdKind.REDUCE):
+        if c.kind in (CmdKind.WAIT, CmdKind.POLL, CmdKind.REDUCE,
+                      CmdKind.COMPUTE):
             # Reductions order-depend on their interleaved copies: the
             # reduced partial must be forwarded by the NEXT data command,
             # so a reduce stream never slot-splits across the chunk
-            # boundary (DESIGN.md §10).
+            # boundary (DESIGN.md §10).  Compute tiles occupy the CU, not
+            # an SDMA slot — slot-splitting them is meaningless (§15).
             return False
         if c.kind is CmdKind.SIGNAL:
             if c.tag is not None:

@@ -81,13 +81,29 @@ def cu_collective_power(
     size: int,
     latency: float,
     calib: PowerCalibration | None = None,
+    *,
+    collective: str = "all_gather",
 ) -> PowerReport:
     c = calib or PowerCalibration()
     n = topo.n_devices
     shard = size / n
-    # CU protocols stage through LDS/cache with packet flags: >1x the pure
-    # payload HBM traffic of the DMA path.
-    payload = 2 * shard * (n - 1)
+    # Per-device HBM payload of the CU packet loop, per collective: the
+    # gather-style collectives read each outgoing shard once and write each
+    # arrival once (2x per delivery — all_to_all moves n-1 *distinct*
+    # per-peer shards but the same total bytes, so it prices identically);
+    # the reduce collectives additionally read the local accumulator per
+    # arrived chunk (2 reads + 1 write = 3x per delivery), and all_reduce
+    # composes reduce-scatter + all-gather (3x + 2x).
+    deliveries = n - 1
+    if collective in ("all_gather", "all_to_all"):
+        payload = 2 * shard * deliveries
+    elif collective == "reduce_scatter":
+        payload = 3 * shard * deliveries
+    elif collective == "all_reduce":
+        payload = 5 * shard * deliveries
+    else:
+        raise ValueError(
+            f"unknown collective {collective!r} for the CU power model")
     gbps = c.cu_traffic_multiplier * payload / max(latency, 1e-9) / 1e9
     u = _utilization(size)
     xcd = c.xcd_cu_collective * (c.xcd_latency_scale + (1 - c.xcd_latency_scale) * u)

@@ -94,6 +94,18 @@ closed-form chunk run is unaffected — reductions sit on the *consumer*,
 so a producer's chunk run still commits closed-form and each chunk's
 semaphore wakes its parked reduction exactly as the per-chunk loop would.
 
+Compute-collective overlap (DESIGN.md §15): each device additionally owns a
+*CU timeline* (``cu:{dev}``) modeling its compute units as one aggregate
+serial resource.  A ``compute`` command occupies it for one GEMM tile
+(``Calibration.cu_tile_setup + size / cu_flops``, ``size`` in FLOPs),
+optionally blocking on a tagged chunk first (all-gather+GEMM: tile *k*
+launches when shard *k* lands) and optionally raising a semaphore at tile
+completion (GEMM+reduce-scatter: tile *i*'s partial releases the RS chunk
+pipeline).  A ``reduce_tag`` with ``on_cu=True`` charges its §10 reduction
+on the CU timeline instead of the consumer's engine — the reduce-placement
+axis.  Schedules without compute/on_cu commands never create a CU timeline
+and time bit-identically to the pre-§15 simulator.
+
 Symmetric fast path (DESIGN.md §6): schedules whose builder marked them
 ``symmetric`` simulate ONE representative device — waits on a neighbor's
 tagged signal resolve, by translation invariance, to the representative's own
@@ -659,12 +671,23 @@ class _Sim:
                     return False
                 arrival = t + c.poll_trigger
                 start = st.issue if st.issue > arrival else arrival
-                dur = c.reduce_setup + cmd.size / c.reduce_bytes_per_s
+                # Placement axis (§15): an on_cu reduction contends with
+                # GEMM tiles on the CU timeline instead of with the
+                # engine's forwarding copies, and skips the per-chunk
+                # descriptor dispatch (reduce_setup) — the accumulate rides
+                # the resident kernel's epilogue.
+                if cmd.on_cu:
+                    dur = cmd.size / c.reduce_bytes_per_s
+                    red_tl = self.timeline(f"cu:{q.device}")
+                else:
+                    dur = c.reduce_setup + cmd.size / c.reduce_bytes_per_s
+                    red_tl = st.engine_tl
                 if fp is not None:
                     dur *= fp.engine_slowdown(q.device, q.engine)
-                rstart, end = st.engine_tl.acquire(start, dur)
+                rstart, end = red_tl.acquire(start, dur)
                 if tr is not None:
-                    res = f"engine:{q.device}.{q.engine}"
+                    res = f"cu:{q.device}" if cmd.on_cu \
+                        else f"engine:{q.device}.{q.engine}"
                     tr.wait(res, q.device, st.key[0], st.issue,
                             arrival if arrival > st.issue else st.issue, rt)
                     tr.span(res, q.device, st.key[0], "reduce", rstart, end,
@@ -683,6 +706,49 @@ class _Sim:
                         if tr is not None:
                             tr.raise_tag(rt2, end + c.fused_sync,
                                          f"engine:{q.device}.{q.engine}")
+                    else:
+                        self._faulty_raise(rt2, end + c.fused_sync, q, cmd)
+                idx += 1
+            elif kind is CmdKind.COMPUTE:
+                # GEMM tile on the CU timeline (DESIGN.md §15): block like
+                # a wait when the tile's input chunk is tagged, then occupy
+                # the device's compute units for setup + FLOPs/throughput.
+                start = st.issue
+                rt = None
+                if cmd.tag is not None:
+                    rt = self.resolve(cmd.tag)
+                    t = tags.get(rt)
+                    if t is None:
+                        st.idx = idx
+                        st.blocked = rt
+                        return False
+                    arrival = t + c.poll_trigger
+                    if arrival > start:
+                        start = arrival
+                dur = c.cu_tile_setup + cmd.size / c.cu_flops
+                if fp is not None:
+                    dur *= fp.engine_slowdown(q.device, q.engine)
+                res = f"cu:{q.device}"
+                cstart, end = self.timeline(res).acquire(start, dur)
+                if tr is not None:
+                    if rt is not None:
+                        tr.wait(res, q.device, st.key[0], st.issue,
+                                start if start > st.issue else st.issue, rt)
+                    tr.span(res, q.device, st.key[0], "compute", cstart, end,
+                            tag=rt, size=cmd.size,
+                            chunk=None if rt is None else tag_chunk(rt))
+                st.issue = end
+                if end > st.last_end:
+                    st.last_end = end
+                if end > st.copy_end:
+                    st.copy_end = end
+                if cmd.fused_tag is not None:
+                    rt2 = self.resolve(cmd.fused_tag)
+                    if fp is None:
+                        tags[rt2] = end + c.fused_sync
+                        self.raised.append(rt2)
+                        if tr is not None:
+                            tr.raise_tag(rt2, end + c.fused_sync, res)
                     else:
                         self._faulty_raise(rt2, end + c.fused_sync, q, cmd)
                 idx += 1
@@ -809,11 +875,23 @@ class _Sim:
                     end = e
             raise_t = end + c.fused_sync
         elif cmd.kind is CmdKind.REDUCE:
-            dur = (c.reduce_setup + cmd.size / c.reduce_bytes_per_s) \
+            setup = 0.0 if cmd.on_cu else c.reduce_setup
+            dur = (setup + cmd.size / c.reduce_bytes_per_s) \
                 * fp.engine_slowdown(rec.device, rec.engine)
-            rs, end = engine.acquire(t, dur)
+            red_tl = self.timeline(f"cu:{rec.device}") if cmd.on_cu else engine
+            rkey = f"cu:{rec.device}" if cmd.on_cu else ekey
+            rs, end = red_tl.acquire(t, dur)
             if tr is not None:
-                tr.span(ekey, rec.device, 0, "reduce", rs, end, tag=rt,
+                tr.span(rkey, rec.device, 0, "reduce", rs, end, tag=rt,
+                        size=cmd.size, chunk=tag_chunk(rt), retry=True)
+            raise_t = end + c.fused_sync
+        elif cmd.kind is CmdKind.COMPUTE:
+            dur = (c.cu_tile_setup + cmd.size / c.cu_flops) \
+                * fp.engine_slowdown(rec.device, rec.engine)
+            ckey = f"cu:{rec.device}"
+            cs, end = self.timeline(ckey).acquire(t, dur)
+            if tr is not None:
+                tr.span(ckey, rec.device, 0, "compute", cs, end, tag=rt,
                         size=cmd.size, chunk=tag_chunk(rt), retry=True)
             raise_t = end + c.fused_sync
         else:                               # SIGNAL: engine atomic round-trip

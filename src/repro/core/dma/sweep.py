@@ -40,7 +40,8 @@ from __future__ import annotations
 import numpy as np
 
 from .collectives import (allgather_schedule, allreduce_schedule,
-                          alltoall_schedule, reduce_scatter_schedule)
+                          alltoall_schedule, fused_ag_gemm_schedule,
+                          fused_gemm_rs_schedule, reduce_scatter_schedule)
 from .sim import _Sim, _breakdown, _finish_device, _run
 from .topology import Topology
 
@@ -49,6 +50,8 @@ _BUILDERS = {
     "all_to_all": alltoall_schedule,
     "reduce_scatter": reduce_scatter_schedule,
     "all_reduce": allreduce_schedule,
+    "fused_gemm_rs": fused_gemm_rs_schedule,
+    "fused_ag_gemm": fused_ag_gemm_schedule,
 }
 
 #: Representative device of a symmetric schedule — the builders emit devices

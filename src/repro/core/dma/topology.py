@@ -101,6 +101,13 @@ class Calibration:
                multislice builder overrides it with a DCN-class value.  The
                NIC serializes a device's cross-node traffic regardless of
                how many intra-node DMA links it owns.
+    cu_tile_setup: per-tile launch overhead on the compute-unit timeline
+               (DESIGN.md §15): wavefront dispatch + LDS staging for one
+               output tile of a fused compute-collective schedule.
+    cu_flops : aggregate per-device matrix throughput (FLOP/s) pricing
+               ``compute`` commands on the ``cu:{dev}`` timeline
+               (DESIGN.md §15).  The MI300X default is the peak bf16
+               roofline; the v5e builder overrides it with the TPU value.
     """
 
     # Values fit by benchmarks/calibration.py so the model lands on the
@@ -134,6 +141,13 @@ class Calibration:
     # achievable link efficiency (paper §5.2.4: pcpy beats RCCL by 14-18%
     # at bandwidth-bound sizes).
     dma_link_efficiency: float = 0.9616
+    # Compute-unit timeline (DESIGN.md §15): one GEMM tile occupies the
+    # ``cu:{dev}`` resource for ``cu_tile_setup + flops / cu_flops``.
+    # MI300X peak bf16 matrix throughput; tile setup ~= a persistent
+    # kernel's workgroup grabbing the next tile off its work queue (NOT a
+    # kernel launch — the fused builders stream tiles from one kernel).
+    cu_tile_setup: float = 0.2e-6
+    cu_flops: float = 1.3e15
 
     def __post_init__(self) -> None:
         # A mistyped calibration (negative latency, zero bandwidth) times as
@@ -143,11 +157,13 @@ class Calibration:
         for f in ("control", "control_batched", "doorbell", "doorbell_batched",
                   "fetch", "copy_setup", "b2b_issue", "sync_engine",
                   "fused_sync", "sync_obs", "sync_obs_batched", "poll_trigger",
-                  "hop_latency", "reduce_setup", "nic_latency"):
+                  "hop_latency", "reduce_setup", "nic_latency",
+                  "cu_tile_setup"):
             v = getattr(self, f)
             if not v >= 0.0:
                 raise ValueError(f"Calibration.{f} must be >= 0, got {v}")
-        for f in ("engine_bw", "nic_bytes_per_s", "reduce_bytes_per_s"):
+        for f in ("engine_bw", "nic_bytes_per_s", "reduce_bytes_per_s",
+                  "cu_flops"):
             v = getattr(self, f)
             if not v > 0.0:
                 raise ValueError(f"Calibration.{f} must be > 0, got {v}")
@@ -463,6 +479,8 @@ def tpu_v5e_pod(n_devices: int = 256, calib: Calibration | None = None) -> Topol
         reduce_bytes_per_s=260e9,   # ~1/3 of the v5e HBM bandwidth (819 GB/s)
         engine_bw=50e9,
         dma_link_efficiency=0.95,
+        cu_tile_setup=0.05e-6,  # MXU tile grab from the resident loop
+        cu_flops=197e12,        # TPU_V5E_PEAK_BF16_FLOPS
     )
     return Topology(
         name=f"tpu-v5e-{n_devices}",

@@ -214,15 +214,18 @@ def _track_device(resource: str) -> int:
         return int(rest)
     if head == "engine":
         return int(rest.split(".", 1)[0])
+    if head == "cu":
+        return int(rest)
     dev = resource_device(resource)
     return 0 if dev is None else dev
 
 
 def _track_rank(resource: str) -> tuple:
-    """Stable thread ordering inside a device: host, engines, host links,
-    DMA links, NIC."""
-    order = {"host": 0, "engine": 1, "hostlink": 2, "link": 3, "nic": 4}
-    return (order.get(resource.split(":", 1)[0], 5), resource)
+    """Stable thread ordering inside a device: host, engines, CUs, host
+    links, DMA links, NIC."""
+    order = {"host": 0, "engine": 1, "cu": 2, "hostlink": 3, "link": 4,
+             "nic": 5}
+    return (order.get(resource.split(":", 1)[0], 6), resource)
 
 
 def _span_label(s: TraceSpan) -> str:

@@ -90,7 +90,10 @@ def test_dispatch_tables_structure():
     # contiguous, non-overlapping
     for a, b in zip(ag, ag[1:]):
         assert a.hi == b.lo
-    assert ag[0].variant.endswith("b2b")
+    # v7 tables sweep the full single-node variant space (opt_/prelaunch_/
+    # pipe_), so the latency-bound winner is an optimized prelaunched stream
+    # rather than the baseline b2b of the v6 baseline-only sweep.
+    assert ag[0].variant.startswith("opt_")
     # reduce tables (DESIGN.md §10) carry reduce-family winners only
     for table in (rs, ar):
         assert table[0].lo == 1024 and table[-1].hi is None
@@ -112,24 +115,42 @@ def _stub_array(nbytes: int):
                                  dtype=types.SimpleNamespace(itemsize=1))
 
 
-def test_latte_dispatch_warns_on_stale_tables(monkeypatch):
-    """The default latte backend must not silently dispatch on the baseline
-    single-node tables (ROADMAP: optimized tables not yet re-derived)."""
+def test_latte_dispatch_silent_on_current_tables(monkeypatch):
+    """The bundled tables are re-derived with the full single-node variant
+    space (v7), so the default latte backend dispatches on current winners
+    without warning."""
     monkeypatch.setattr(backend, "_AG_IMPL", _AnyImpl())
     be = CommBackend("latte")
-    with pytest.warns(StaleTablesWarning, match="baseline single-node"):
-        out = be.all_gather(_stub_array(1 << 20), "x")
-    assert out[0] == "dispatched"       # still returns the table's winner
-
-
-def test_latte_dispatch_silent_when_acknowledged(monkeypatch):
-    monkeypatch.setattr(backend, "_AG_IMPL", _AnyImpl())
-    be = CommBackend("latte", allow_stale_tables=True)
     with warnings.catch_warnings():
         warnings.simplefilter("error", StaleTablesWarning)
         out = be.all_gather(_stub_array(1 << 20), "x")
     assert out[0] == "dispatched"
-    # the reference backend never consults the tables -> never warns
+
+
+def test_latte_dispatch_warns_on_stale_fingerprint(monkeypatch, tmp_path):
+    """A genuinely stale bundled fingerprint must stay loud: when the
+    bundled tables miss the current key the default backend re-derives on
+    the fly AND warns."""
+    monkeypatch.setattr(backend, "_AG_IMPL", _AnyImpl())
+    be = CommBackend("latte")
+    be.all_gather(_stub_array(1 << 20), "x")    # warm the table memo
+    monkeypatch.setattr(backend, "_BUNDLED_TABLES", str(tmp_path / "gone.json"))
+    backend._bundled_current.cache_clear()
+    try:
+        with pytest.warns(StaleTablesWarning, match="do not match this"):
+            out = be.all_gather(_stub_array(1 << 20), "x")
+        assert out[0] == "dispatched"   # still returns the table's winner
+        # acknowledging silences it even on a stale fingerprint
+        acked = CommBackend("latte", allow_stale_tables=True)
+        with warnings.catch_warnings():
+            warnings.simplefilter("error", StaleTablesWarning)
+            out = acked.all_gather(_stub_array(1 << 20), "x")
+        assert out[0] == "dispatched"
+    finally:
+        backend._bundled_current.cache_clear()
+
+
+def test_reference_backend_never_consults_tables():
     ref = CommBackend("reference")
     with warnings.catch_warnings():
         warnings.simplefilter("error", StaleTablesWarning)

@@ -38,20 +38,21 @@ def _isolate(tmp_path, monkeypatch, bundled: dict | None = None):
 _POISON = [[{"lo": 1024, "hi": None, "variant": "STALE", "chunk": None}]] * 4
 
 
-def test_cache_version_is_v6():
-    """The hierarchical multi-node sweeps (DESIGN.md §11) require the v6
-    fingerprint."""
-    assert backend._TABLE_CACHE_VERSION == 6
+def test_cache_version_is_v7():
+    """The optimized/pipelined single-node re-derivation (DESIGN.md §15 /
+    ROADMAP latte item) requires the v7 fingerprint."""
+    assert backend._TABLE_CACHE_VERSION == 7
 
 
 def test_stale_versioned_disk_tables_rejected(tmp_path, monkeypatch):
-    """v2-v5 disk entries (pre-hierarchical sweeps) must never be served:
-    their file names carry the old fingerprint, so the v6 lookup misses."""
+    """v2-v6 disk entries (pre-optimized single-node sweeps) must never be
+    served: their file names carry the old fingerprint, so the v7 lookup
+    misses."""
     _isolate(tmp_path, monkeypatch)
     topo = tpu_v5e_pod(16)
     sizes = backend._SWEEP_SIZES
     (tmp_path / "cache").mkdir()
-    for old in (2, 3, 4, 5):
+    for old in (2, 3, 4, 5, 6):
         stale = _key_for_version(topo, sizes, old)
         assert stale != backend._table_key(topo, sizes)
         path = tmp_path / "cache" / f"tables_{topo.name}_{stale}.json"
@@ -64,7 +65,7 @@ def test_stale_versioned_bundled_tables_rejected(tmp_path, monkeypatch):
     topo = tpu_v5e_pod(16)
     sizes = backend._SWEEP_SIZES
     _isolate(tmp_path, monkeypatch, bundled={
-        _key_for_version(topo, sizes, v): _POISON for v in (2, 3, 4, 5)})
+        _key_for_version(topo, sizes, v): _POISON for v in (2, 3, 4, 5, 6)})
     assert backend._load_table_cache(topo, sizes) is None
 
 

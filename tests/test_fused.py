@@ -1,0 +1,221 @@
+"""Fused compute-collective overlap invariants (DESIGN.md §15).
+
+Byte/FLOP conservation: the fused GEMM+reduce-scatter and all-gather+GEMM
+schedules move exactly the bytes and compute exactly the FLOPs of their
+sequential control arms, whatever the overlap depth or reduce placement —
+fusing changes *when* work runs, never how much.  Fused-never-slower is
+checked across the swept size grid on BOTH modeled fabrics (the §15
+acceptance claim), and the reduce-placement crossover (CU wins small,
+engine wins large) is pinned on MI300X where the band is wide.
+
+CI runs this file un-skipped (a guard step fails if collection comes back
+empty); the hypothesis-sampled conservation cases skip locally when
+hypothesis is unavailable, the pinned-grid cases always run.
+"""
+import dataclasses
+
+import pytest
+
+from repro.core.dma import (link_traffic, mi300x_platform, reduce_work,
+                            simulate, tpu_v5e_pod, variant_latency)
+from repro.core.dma.collectives import (FUSED_AG_VARIANTS, FUSED_RS_VARIANTS,
+                                        GEMM_FLOPS_PER_BYTE,
+                                        fused_ag_gemm_schedule,
+                                        fused_gemm_rs_schedule)
+from repro.core.dma.commands import CmdKind
+from repro.core.dma.dispatch import (candidate_variants, derive_dispatch,
+                                     pick_variant)
+
+KB, MB = 1024, 1024 * 1024
+TOPO = mi300x_platform()
+TPU = tpu_v5e_pod(16)
+
+#: The §15 acceptance grid: every swept size, latency- through
+#: bandwidth-bound (2^10 .. 2^30).
+GRID = [1 << p for p in range(10, 31, 2)]
+
+_BUILDERS = {"fused_gemm_rs": fused_gemm_rs_schedule,
+             "fused_ag_gemm": fused_ag_gemm_schedule}
+
+
+def _flops(schedule) -> int:
+    return sum(c.size for q in schedule.queues for c in q.commands
+               if c.kind is CmdKind.COMPUTE)
+
+
+# ---------------------------------------------------------------------------
+# Conservation: pinned grid (always runs)
+
+@pytest.mark.parametrize("topo", [TOPO, TPU], ids=["mi300x", "tpu16"])
+@pytest.mark.parametrize("collective,variant", [
+    ("fused_gemm_rs", "fused_cu_d2"),
+    ("fused_gemm_rs", "fused_engine_d8"),
+    ("fused_ag_gemm", "fused_d4"),
+])
+def test_fused_conserves_bytes_and_flops(topo, collective, variant):
+    """Same wire bytes, same reduction work, same GEMM FLOPs as the seq
+    control arm — overlap re-times the work, it never re-sizes it."""
+    build = _BUILDERS[collective]
+    for size in (64 * KB, 16 * MB):
+        seq = build(topo, size, "seq")
+        fused = build(topo, size, variant)
+        assert link_traffic(fused) == link_traffic(seq)
+        # Chunk *counts* track the overlap depth's granularity; reduced
+        # *bytes* are grain-invariant.
+        assert {d: b for d, (_, b) in reduce_work(fused).items()} == \
+            {d: b for d, (_, b) in reduce_work(seq).items()}
+        assert _flops(fused) == _flops(seq)
+        # And the absolute FLOP count: every device computes its full
+        # n-shard GEMM at GEMM_FLOPS_PER_BYTE arithmetic intensity.
+        n = topo.n_devices
+        shard = max(1, size // n)
+        assert _flops(fused) == GEMM_FLOPS_PER_BYTE * n * n * shard
+
+
+@pytest.mark.parametrize("topo", [TOPO, TPU], ids=["mi300x", "tpu16"])
+def test_fused_rs_reduction_work_per_device(topo):
+    """Every device reduces exactly (n-1) shards, any placement/depth."""
+    n = topo.n_devices
+    size = 4 * MB
+    shard = size // n
+    for variant in ("seq", "fused_cu_d4", "fused_engine_d2"):
+        work = reduce_work(fused_gemm_rs_schedule(topo, size, variant))
+        assert set(work) == set(range(n))
+        for _, total in work.values():
+            assert total == (n - 1) * shard
+
+
+# ---------------------------------------------------------------------------
+# Fused never slower than sequential (acceptance: every swept size, both
+# fabrics).  variant_latency is memoized, so the grid is cheap.
+
+@pytest.mark.parametrize("topo", [TOPO, TPU], ids=["mi300x", "tpu16"])
+@pytest.mark.parametrize("variant", ["fused_cu_d2", "fused_cu_d4",
+                                     "fused_engine_d2", "fused_engine_d4"])
+def test_fused_rs_never_slower_than_seq(topo, variant):
+    for size in GRID:
+        seq = variant_latency(topo, "fused_gemm_rs", size, "seq")
+        fused = variant_latency(topo, "fused_gemm_rs", size, variant)
+        assert fused < seq, (size, variant, fused, seq)
+
+
+@pytest.mark.parametrize("topo", [TOPO, TPU], ids=["mi300x", "tpu16"])
+@pytest.mark.parametrize("variant", ["fused_d2", "fused_d4"])
+def test_fused_ag_never_slower_than_seq(topo, variant):
+    for size in GRID:
+        seq = variant_latency(topo, "fused_ag_gemm", size, "seq")
+        fused = variant_latency(topo, "fused_ag_gemm", size, variant)
+        assert fused < seq, (size, variant, fused, seq)
+
+
+# ---------------------------------------------------------------------------
+# Reduce placement crossover (DESIGN.md §15): pinned on MI300X, where the
+# CU band is wide (tpu16's is a single grid point).
+
+def test_reduce_placement_crossover_mi300x():
+    cu_small = variant_latency(TOPO, "fused_gemm_rs", 16 * KB, "fused_cu_d4")
+    eng_small = variant_latency(TOPO, "fused_gemm_rs", 16 * KB,
+                                "fused_engine_d4")
+    assert cu_small < eng_small
+    cu_large = variant_latency(TOPO, "fused_gemm_rs", 256 * MB, "fused_cu_d4")
+    eng_large = variant_latency(TOPO, "fused_gemm_rs", 256 * MB,
+                                "fused_engine_d4")
+    assert eng_large < cu_large
+
+
+def test_dispatch_renders_placement_bands_mi300x():
+    """The allow_fused sweep itself exposes the crossover as a size band."""
+    sizes = [1 << p for p in range(10, 31)]
+    entries = derive_dispatch(TOPO, "fused_gemm_rs", sizes, allow_fused=True,
+                              allow_prelaunch=False)
+    winners = {s: pick_variant(entries, s) for s in sizes}
+    cu = [s for s, v in winners.items() if "_cu_" in v]
+    eng = [s for s, v in winners.items() if "_engine_" in v]
+    assert cu and eng
+    assert max(cu) < min(eng)
+
+
+# ---------------------------------------------------------------------------
+# Simulator integrity: symmetric fast path bit-identity, empty-compute
+# schedules never touch the CU timeline, variant/gate validation.
+
+@pytest.mark.parametrize("collective,variant", [
+    ("fused_gemm_rs", "fused_cu_d4"),
+    ("fused_gemm_rs", "opt_fused_engine_d2"),
+    ("fused_ag_gemm", "fused_d4"),
+])
+def test_fused_symmetric_matches_full(collective, variant):
+    for topo in (TOPO, TPU):
+        sched = _BUILDERS[collective](topo, 1 * MB, variant)
+        assert sched.symmetric
+        fast = simulate(sched, topo)
+        full = simulate(dataclasses.replace(sched, symmetric=False), topo)
+        assert fast.latency == full.latency
+
+
+def test_unfused_schedule_has_no_cu_spans():
+    """Empty-compute path: a plain collective never creates CU activity —
+    the resource class is compiled in but entirely inert (the bundled-table
+    regen check in CI pins the latencies themselves)."""
+    from repro.core.dma import allgather_schedule
+    from repro.core.dma.trace import chrome_trace
+    res = simulate(allgather_schedule(TOPO, 1 * MB, "pipe_bidir_ring"), TOPO,
+                   record_trace=True)
+    names = {e.get("args", {}).get("track", "") for e in
+             chrome_trace(res)["traceEvents"] if e.get("ph") == "X"}
+    assert not any(t.startswith("cu") for t in names)
+
+
+def test_fused_trace_renders_cu_spans():
+    res = simulate(fused_gemm_rs_schedule(TOPO, 1 * MB, "fused_cu_d4"), TOPO,
+                   record_trace=True)
+    from repro.core.dma.trace import chrome_trace
+    text = str(chrome_trace(res))
+    assert "cu" in text and "compute" in text
+
+
+def test_fused_variant_validation():
+    with pytest.raises(ValueError, match="unknown fused"):
+        fused_gemm_rs_schedule(TOPO, 1 * MB, "fused_cu_d3")
+    with pytest.raises(ValueError, match="unknown fused"):
+        fused_ag_gemm_schedule(TOPO, 1 * MB, "fused_engine_d4")
+    with pytest.raises(ValueError, match="allow_fused"):
+        candidate_variants(TOPO, "fused_gemm_rs")
+    assert set(candidate_variants(TOPO, "fused_gemm_rs", allow_fused=True,
+                                  allow_prelaunch=False)) == \
+        set(FUSED_RS_VARIANTS)
+    assert set(candidate_variants(TOPO, "fused_ag_gemm", allow_fused=True,
+                                  allow_prelaunch=False)) == \
+        set(FUSED_AG_VARIANTS)
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis-sampled conservation across depth x placement x granularity
+# (skips locally without hypothesis; CI installs it).
+
+try:
+    from hypothesis import given, settings, strategies as st
+    _HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    _HAVE_HYPOTHESIS = False
+
+if _HAVE_HYPOTHESIS:
+    @settings(max_examples=20, deadline=None)
+    @given(size=st.integers(min_value=1024, max_value=1 << 28),
+           variant=st.sampled_from([v for v in FUSED_RS_VARIANTS
+                                    if v != "seq"]))
+    def test_fused_rs_traffic_invariant_under_variant(size, variant):
+        seq = fused_gemm_rs_schedule(TOPO, size, "seq")
+        fused = fused_gemm_rs_schedule(TOPO, size, variant)
+        assert link_traffic(fused) == link_traffic(seq)
+        assert _flops(fused) == _flops(seq)
+
+    @settings(max_examples=20, deadline=None)
+    @given(size=st.integers(min_value=1024, max_value=1 << 28),
+           variant=st.sampled_from([v for v in FUSED_AG_VARIANTS
+                                    if v != "seq"]))
+    def test_fused_ag_traffic_invariant_under_variant(size, variant):
+        seq = fused_ag_gemm_schedule(TPU, size, "seq")
+        fused = fused_ag_gemm_schedule(TPU, size, variant)
+        assert link_traffic(fused) == link_traffic(seq)
+        assert _flops(fused) == _flops(seq)

@@ -137,6 +137,7 @@ def test_alltoall_traffic_conserved(size, v):
     assert set(traffic.values()) == {shard}
 
 
+@pytest.mark.slow   # duplicates the pinned-grid byte/monotonicity coverage; the fast job keeps the claim-guarded §9/§10 cases
 @settings(max_examples=30, deadline=None)
 @given(size=st.integers(min_value=1 * MB, max_value=1 << 31), v=variants_ag,
        grain_a=chunk_grains, grain_b=chunk_grains)
@@ -148,6 +149,7 @@ def test_per_link_bytes_invariant_under_chunking(size, v, grain_a, grain_b):
     assert a == b
 
 
+@pytest.mark.slow   # duplicates the pinned-grid byte/monotonicity coverage; the fast job keeps the claim-guarded §9/§10 cases
 @settings(max_examples=20, deadline=None)
 @given(size=st.integers(min_value=1 * MB, max_value=1 << 30), v=variants_ag,
        depth_a=pipe_depths, depth_b=pipe_depths)
@@ -157,6 +159,7 @@ def test_per_link_bytes_invariant_under_pipe_depth(size, v, depth_a, depth_b):
     assert a == b
 
 
+@pytest.mark.slow   # duplicates the pinned-grid byte/monotonicity coverage; the fast job keeps the claim-guarded §9/§10 cases
 @settings(max_examples=15, deadline=None)
 @given(size=st.sampled_from([64 * MB, 256 * MB, 1 << 30, 1 << 31]),
        v=st.sampled_from(["pcpy", "b2b", "bcst", "prelaunch_pcpy"]))
@@ -198,6 +201,7 @@ def test_rs_per_link_bytes_match_allgather_rings(size, v):
     assert inbound == {d: (n - 1) * shard for d in range(n)}
 
 
+@pytest.mark.slow   # duplicates the pinned-grid byte/monotonicity coverage; the fast job keeps the claim-guarded §9/§10 cases
 @settings(max_examples=25, deadline=None)
 @given(size=st.integers(min_value=1 * MB, max_value=1 << 31), v=variants_rs,
        grain_a=chunk_grains, grain_b=chunk_grains,

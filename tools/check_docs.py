@@ -12,6 +12,10 @@ Checks, over the whole repo:
    figure→benchmark→claims map (literally, or covered by a ``prefix_*``
    wildcard the map uses for claim families) — a claim band without a
    documented entry point is how reproduction results silently rot.
+5. No benchmark artifact is tracked by git: perf reports belong under the
+   untracked ``artifacts/`` directory (``benchmarks/sim_perf.py`` writes
+   there), and a committed ``sim_perf*.json`` reads like a pinned result
+   while actually being one machine's stale wall-clock numbers.
 
 Exit code 0 when everything resolves; 1 with a line per broken reference.
 """
@@ -19,6 +23,7 @@ from __future__ import annotations
 
 import fnmatch
 import re
+import subprocess
 import sys
 from pathlib import Path
 
@@ -69,7 +74,27 @@ def check() -> list[str]:
                 errors.append(f"README.md links to missing doc {rel}")
         errors.extend(check_claim_coverage(text))
 
+    errors.extend(check_no_tracked_artifacts())
     return errors
+
+
+#: Tracked-path patterns that are benchmark output, not source: anything
+#: matching these in ``git ls-files`` is a stale artifact that slipped in.
+ARTIFACT_PATTERNS = ("artifacts/*", "sim_perf*.json", "*/sim_perf*.json")
+
+
+def check_no_tracked_artifacts() -> list[str]:
+    try:
+        tracked = subprocess.run(
+            ["git", "ls-files"], cwd=ROOT, capture_output=True, text=True,
+            check=True).stdout.splitlines()
+    except (OSError, subprocess.CalledProcessError):
+        return []    # not a git checkout (e.g. an sdist) — nothing to guard
+    return [
+        f"benchmark artifact {path!r} is tracked by git — perf reports "
+        "belong under the untracked artifacts/ directory"
+        for path in sorted(tracked)
+        if any(fnmatch.fnmatch(path, pat) for pat in ARTIFACT_PATTERNS)]
 
 
 def check_claim_coverage(readme_text: str) -> list[str]:
